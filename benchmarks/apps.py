@@ -1,0 +1,136 @@
+"""Application benchmarks (paper §6.3): Vacation-like OLTP and a
+Memcached-like KV store under YCSB-A, both persisting their data
+structures through the allocator under test."""
+
+from __future__ import annotations
+
+import random
+import time
+
+from repro.core import pptr as pp
+
+
+class PersistentBST:
+    """Durably-linearizable BST over an allocator (Vacation's 'database').
+
+    Node: [key, value, left pptr, right pptr] — paper Fig. 4's type.
+    """
+
+    def __init__(self, alloc):
+        self.a = alloc
+        self.root = None
+
+    def insert(self, key, value):
+        a = self.a
+        node = a.malloc(32)
+        r = getattr(a, "r", a)             # raw word access via adapter
+        mem = a.mem
+        base = node
+        mem.write(base, key)
+        mem.write(base + 1, value)
+        mem.write(base + 2, pp.PPTR_NULL)
+        mem.write(base + 3, pp.PPTR_NULL)
+        mem.flush(base)
+        mem.fence()
+        if self.root is None:
+            self.root = node
+            return
+        cur = self.root
+        while True:
+            slot = 2 if key < mem.read(cur) else 3
+            child = pp.decode(cur + slot, mem.read(cur + slot))
+            if child is None:
+                mem.write(cur + slot, pp.encode(cur + slot, node))
+                mem.flush(cur + slot)
+                mem.fence()
+                return
+            cur = child
+
+    def lookup(self, key):
+        mem = self.a.mem
+        cur = self.root
+        while cur is not None:
+            k = mem.read(cur)
+            if k == key:
+                return mem.read(cur + 1)
+            cur = pp.decode(cur + 2, mem.read(cur + 2)) if key < k else \
+                pp.decode(cur + 3, mem.read(cur + 3))
+        return None
+
+
+def vacation(alloc, *, relations=512, transactions=2000, queries=3):
+    """Reservation transactions over BST 'tables' (STAMP Vacation shape)."""
+    tree = PersistentBST(alloc)
+    for k in random.Random(0).sample(range(relations * 4), relations):
+        tree.insert(k, k)
+    rng = random.Random(1)
+    t0 = time.perf_counter()
+    for _ in range(transactions):
+        for _ in range(queries):
+            tree.lookup(rng.randrange(relations * 4))
+        tree.insert(rng.randrange(relations * 4, relations * 8),
+                    rng.randrange(1 << 30))
+    dt = time.perf_counter() - t0
+    return transactions / dt
+
+
+class PersistentKV:
+    """Chained-hash KV store (library-mode memcached stand-in).
+
+    Bucket heads live in a root directory block; entries are
+    [key, value, next pptr] blocks.
+    """
+
+    def __init__(self, alloc, buckets=1024):
+        self.a = alloc
+        self.nb = buckets
+        self.dir = alloc.malloc(buckets * 8)
+        mem = alloc.mem
+        for i in range(buckets):
+            mem.write(self.dir + i, pp.PPTR_NULL)
+        mem.flush(self.dir)
+        mem.fence()
+
+    def _bucket(self, key):
+        return self.dir + (hash(key) % self.nb)
+
+    def set(self, key, value):
+        mem = self.a.mem
+        b = self._bucket(key)
+        node = self.a.malloc(24)
+        mem.write(node, key)
+        mem.write(node + 1, value)
+        head = pp.decode(b, mem.read(b))
+        mem.write(node + 2, pp.PPTR_NULL if head is None
+                  else pp.encode(node + 2, head))
+        mem.flush(node)
+        mem.fence()
+        mem.write(b, pp.encode(b, node))
+        mem.flush(b)
+        mem.fence()
+
+    def get(self, key):
+        mem = self.a.mem
+        cur = pp.decode(self._bucket(key), mem.read(self._bucket(key)))
+        while cur is not None:
+            if mem.read(cur) == key:
+                return mem.read(cur + 1)
+            cur = pp.decode(cur + 2, mem.read(cur + 2))
+        return None
+
+
+def ycsb_a(alloc, *, records=5000, operations=10000):
+    """YCSB workload A: 50% reads, 50% updates (update = new version)."""
+    kv = PersistentKV(alloc)
+    for k in range(records):
+        kv.set(k, k)
+    rng = random.Random(2)
+    t0 = time.perf_counter()
+    for _ in range(operations):
+        k = rng.randrange(records)
+        if rng.random() < 0.5:
+            kv.get(k)
+        else:
+            kv.set(k, rng.randrange(1 << 30))
+    dt = time.perf_counter() - t0
+    return operations / dt

@@ -1,0 +1,69 @@
+"""§Roofline report: aggregate the dry-run JSONs into the per-cell table.
+
+For every (arch × shape × mesh) cell: the three roofline terms, the
+dominant bottleneck, MODEL_FLOPS = 6·N(_active)·D vs compiled HLO FLOPs
+(useful-compute ratio), and memory-fit evidence.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+
+
+def load(outdir="results/dryrun"):
+    rows = []
+    for f in sorted(pathlib.Path(outdir).glob("*.json")):
+        d = json.loads(f.read_text())
+        r = d["roofline"]
+        chips = r["chips"]
+        hlo_flops_global = r["flops_per_device"] * chips
+        useful = (d["model_flops_global"] / hlo_flops_global
+                  if hlo_flops_global else 0.0)
+        dom_t = max(r["t_compute_s"], r["t_memory_s"], r["t_collective_s"])
+        # roofline fraction: ideal compute time / dominant-term time
+        ideal = d["model_flops_global"] / chips / 197e12
+        rows.append({
+            "arch": d["arch"], "shape": d["shape"], "mesh": d["mesh"],
+            "kind": d["kind"],
+            "t_compute_s": r["t_compute_s"],
+            "t_memory_s": r["t_memory_s"],
+            "t_collective_s": r["t_collective_s"],
+            "dominant": r["dominant"],
+            "useful_flops_ratio": useful,
+            "roofline_fraction": (ideal / dom_t) if dom_t else 0.0,
+            "mem_gib_per_dev": d["memory"]["peak_bytes_estimate"] / 2**30,
+            "collectives": r["collective_counts"],
+            "compile_s": d["compile_s"],
+        })
+    return rows
+
+
+def table(rows, mesh="16x16"):
+    out = []
+    hdr = (f"{'arch':24s} {'shape':12s} {'t_comp':>8s} {'t_mem':>8s} "
+           f"{'t_coll':>8s} {'dom':>10s} {'useful':>7s} {'roofl%':>7s} "
+           f"{'GiB/dev':>8s}")
+    out.append(hdr)
+    for r in rows:
+        if r["mesh"] != mesh:
+            continue
+        out.append(
+            f"{r['arch']:24s} {r['shape']:12s} {r['t_compute_s']:8.4f} "
+            f"{r['t_memory_s']:8.4f} {r['t_collective_s']:8.4f} "
+            f"{r['dominant']:>10s} {r['useful_flops_ratio']:7.2f} "
+            f"{100*r['roofline_fraction']:6.1f}% "
+            f"{r['mem_gib_per_dev']:8.1f}")
+    return "\n".join(out)
+
+
+def main():
+    rows = load()
+    for mesh in ("16x16", "2x16x16"):
+        print(f"\n=== roofline, mesh {mesh} (v5e: 197 TF/s bf16, "
+              f"819 GB/s HBM, 50 GB/s ICI) ===")
+        print(table(rows, mesh))
+
+
+if __name__ == "__main__":
+    main()

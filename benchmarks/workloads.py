@@ -1,0 +1,132 @@
+"""Shared allocator-benchmark driver (paper §6.2 workloads).
+
+Every workload runs against any ``AllocAPI`` implementation.  Modeled
+Optane write-back latency (flush 150 ns, fence 100 ns — Izraelevitz et
+al. [26]) is injected so persistence cost shows up in throughput, not
+just in flush counts.  CPython threads serialize on the GIL, so
+multi-thread numbers measure *relative* synchronization/persistence
+overheads, not hardware scalability (documented in EXPERIMENTS.md).
+"""
+
+from __future__ import annotations
+
+import random
+import threading
+import time
+
+from repro.core.baselines import make_allocator
+
+FLUSH_NS, FENCE_NS = 150, 100
+KINDS = ("ralloc", "lrmalloc", "makalu_lite", "pmdk_lite")
+
+
+def fresh(kind: str, mb: int = 256):
+    return make_allocator(kind, None, mb << 20,
+                          flush_ns=FLUSH_NS, fence_ns=FENCE_NS)
+
+
+def run_threads(n_threads: int, fn) -> float:
+    """Run fn(tid) on n threads; returns wall seconds."""
+    errs = []
+
+    def wrap(t):
+        try:
+            fn(t)
+        except Exception as e:              # pragma: no cover
+            errs.append(repr(e))
+
+    ts = [threading.Thread(target=wrap, args=(t,)) for t in range(n_threads)]
+    t0 = time.perf_counter()
+    [t.start() for t in ts]
+    [t.join() for t in ts]
+    dt = time.perf_counter() - t0
+    if errs:
+        raise RuntimeError(errs[0])
+    return dt
+
+
+# --------------------------------------------------------------- workloads
+def threadtest(alloc, n_threads=2, iters=20, objs=1000, size=64):
+    """Hoard threadtest: per-thread batch alloc then batch free."""
+    def body(t):
+        for _ in range(iters):
+            ps = [alloc.malloc(size) for _ in range(objs)]
+            for p in ps:
+                alloc.free(p)
+    dt = run_threads(n_threads, body)
+    return n_threads * iters * objs * 2 / dt        # ops/sec
+
+
+def shbench(alloc, n_threads=2, iters=3000):
+    """MicroQuill shbench: mixed sizes 64–400 B, small-biased."""
+    sizes = [64, 80, 96, 112, 128, 160, 224, 288, 400]
+    weights = [9, 8, 7, 6, 5, 4, 3, 2, 1]
+
+    def body(t):
+        rng = random.Random(t)
+        held = []
+        for _ in range(iters):
+            held.append(alloc.malloc(rng.choices(sizes, weights)[0]))
+            if len(held) > 50:
+                for p in held:
+                    alloc.free(p)
+                held.clear()
+        for p in held:
+            alloc.free(p)
+    dt = run_threads(n_threads, body)
+    return n_threads * iters * 2 / dt
+
+
+def larson(alloc, n_threads=2, rounds=2, objs=400, iters=2000):
+    """Larson bleeding: objects allocated by one round are freed by the
+    next 'generation' of the same lane (cross-thread lifetime)."""
+    leftovers = [[] for _ in range(n_threads)]
+
+    def body(t):
+        rng = random.Random(t)
+        held = leftovers[t]
+        for _ in range(iters):
+            i = rng.randrange(max(len(held), 1))
+            if i < len(held):
+                alloc.free(held[i])
+                held[i] = alloc.malloc(rng.randint(64, 400))
+            else:
+                held.append(alloc.malloc(rng.randint(64, 400)))
+        leftovers[t] = held
+
+    total = 0.0
+    for _ in range(rounds):                 # each round = a new generation
+        total += run_threads(n_threads, body)
+    for held in leftovers:
+        for p in held:
+            alloc.free(p)
+    return n_threads * rounds * iters / total
+
+
+def prodcon(alloc, n_pairs=1, items=4000, size=64):
+    """Producer/consumer via an M&S-style queue: producer allocates,
+    consumer frees (paper's Prod-con)."""
+    import collections
+    queues = [collections.deque() for _ in range(n_pairs)]
+    done = [False] * n_pairs
+
+    def producer(i):
+        for _ in range(items):
+            queues[i].append(alloc.malloc(size))
+        done[i] = True
+
+    def consumer(i):
+        freed = 0
+        while freed < items:
+            try:
+                p = queues[i].popleft()
+            except IndexError:
+                continue
+            alloc.free(p)
+            freed += 1
+
+    def body(t):
+        (producer if t % 2 == 0 else consumer)(t // 2)
+
+    dt = run_threads(2 * n_pairs, body)
+    return n_pairs * items * 2 / dt

@@ -1,0 +1,54 @@
+"""Serve a small model with batched requests over the paged KV arena,
+crash the allocator mid-generation, recover, and keep going.
+
+This is the paper's recoverability story applied to inference state
+(DESIGN.md §2.1): KV pages are allocator blocks, session page tables are
+the persistent roots, and recovery is the vectorized mark–sweep.
+
+Run:  PYTHONPATH=src python examples/serve_paged.py
+"""
+
+import dataclasses
+
+import jax
+
+from repro.configs import get_smoke_config
+from repro.core import jax_alloc as ja
+from repro.models import transformer as T
+from repro.serving.engine import ServingEngine
+
+cfg = dataclasses.replace(get_smoke_config("qwen2_5_32b"), page_size=8)
+mesh = jax.make_mesh((1, 1), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+params = T.init_params(cfg, jax.random.PRNGKey(0))
+engine = ServingEngine(cfg, mesh, params, lanes=4, max_seq=96)
+
+lanes = [engine.add_request([1, 2, 3]),
+         engine.add_request([4, 5]),
+         engine.add_request([6])]
+print("serving 3 concurrent sessions (continuous batching)…")
+for step in range(24):
+    engine.step()
+for lane in lanes:
+    toks = engine.sessions[lane].tokens
+    print(f"  session {lane}: {len(toks)} tokens: {toks[:12]}…")
+pages = ja.live_blocks(engine.astate, engine.acfg)[0]
+print(f"live KV pages: {pages}")
+
+print("\n=== simulated crash: all transient allocator metadata lost ===")
+stats = engine.crash_and_recover()
+print(f"vectorized GC recovery: marked={stats['marked']} pages "
+      f"(live before={stats['live_before']}, after={stats['live_after']})")
+
+before = {l: list(engine.sessions[l].tokens) for l in lanes}
+for step in range(8):
+    engine.step()
+for lane in lanes:
+    toks = engine.sessions[lane].tokens
+    assert toks[:len(before[lane])] == before[lane], "history corrupted!"
+    print(f"  session {lane} resumed: +{len(toks)-len(before[lane])} tokens")
+
+engine.finish(lanes[0])
+print(f"\nevicted session {lanes[0]}; its pages returned to the arena "
+      f"(live now: {ja.live_blocks(engine.astate, engine.acfg)[0]})")
+print("OK")

@@ -1,0 +1,156 @@
+"""Recoverable checkpoint store on a Ralloc persistent heap.
+
+Every checkpoint shard (one array leaf) is a block malloc'd from the
+heap; a *manifest* block lists the shard pptrs plus JSON metadata, and a
+persistent root points at the manifest — the root update is the atomic
+commit.  No write-ahead log, no ordering between shard writes: if a
+crash lands mid-checkpoint, the half-written shards are simply
+unreachable and recovery GC reclaims them (paper §3 — exactly the
+allocate-then-attach leak the paper's recoverability criterion covers).
+
+Two roots alternate so the previous checkpoint stays reachable until the
+new one commits.  All references are pptrs ⇒ the heap file can be
+remapped anywhere (and restored onto a *different mesh*: arrays are
+stored unsharded and resharded on load — the elastic-rescale path).
+
+Manifest block layout (words):
+  [0] n_shards   [1..n] pptr to shard block   [n+1] json byte length
+  [n+2..] JSON metadata (leaf paths, shapes, dtypes, step) packed LE.
+"""
+
+from __future__ import annotations
+
+import json
+
+import numpy as np
+
+from ..core import pptr as pp
+from ..core.layout import WORD
+from ..core.ralloc import Ralloc
+
+ROOT_A, ROOT_B = 0, 1
+_META_ROOT = 2          # tiny block holding which root is live
+
+
+def manifest_filter(reader, block_word, size_bytes):
+    """Filter function (paper §4.5.1): enumerate shard pptrs precisely."""
+    n = reader.read_word(block_word)
+    for k in range(int(n)):
+        w = block_word + 1 + k
+        tgt = pp.decode(w, reader.read_word(w))
+        if tgt is not None:
+            yield tgt, None          # shard blocks contain raw data, no refs
+
+
+def register_filters(heap: Ralloc) -> None:
+    heap.filters.register("ckpt_manifest", manifest_filter)
+
+
+class CheckpointManager:
+    def __init__(self, heap: Ralloc):
+        self.heap = heap
+        register_filters(heap)
+        self._flip = 0
+
+    # ------------------------------------------------------------------ save
+    def save(self, tree: dict, step: int) -> None:
+        import jax
+        leaves, treedef = jax.tree.flatten(tree)
+        heap = self.heap
+        meta, shard_ptrs = [], []
+        for i, leaf in enumerate(leaves):
+            arr = np.asarray(leaf)
+            raw = arr.tobytes()
+            nwords = max(1, -(-len(raw) // WORD))
+            blk = heap.malloc(nwords * WORD)
+            if blk is None:
+                raise MemoryError("checkpoint heap exhausted")
+            words = np.frombuffer(raw.ljust(nwords * WORD, b"\0"),
+                                  dtype=np.int64)
+            for k in range(nwords):          # application stores + flush
+                heap.write_word(blk + k, int(words[k]))
+            heap.flush_range(blk, nwords)
+            shard_ptrs.append(blk)
+            meta.append({"shape": list(arr.shape), "dtype": str(arr.dtype),
+                         "words": nwords})
+        heap.fence()                          # shards durable before manifest
+
+        mjson = json.dumps({"step": step, "leaves": meta,
+                            "treedef": str(treedef)}).encode()
+        n = len(shard_ptrs)
+        jwords = -(-len(mjson) // WORD)
+        mblk = heap.malloc((2 + n + jwords) * WORD)
+        heap.write_word(mblk, n)
+        for k, sp in enumerate(shard_ptrs):
+            heap.write_word(mblk + 1 + k, pp.encode(mblk + 1 + k, sp))
+        heap.write_word(mblk + 1 + n, len(mjson))
+        packed = np.frombuffer(mjson.ljust(jwords * WORD, b"\0"), np.int64)
+        for k in range(jwords):
+            heap.write_word(mblk + 2 + n + k, int(packed[k]))
+        heap.flush_range(mblk, 2 + n + jwords)
+        heap.fence()                          # manifest durable before root
+
+        root = (ROOT_A, ROOT_B)[self._flip]
+        heap.set_root(root, mblk, "ckpt_manifest")   # atomic commit point
+        other = (ROOT_B, ROOT_A)[self._flip]
+        old = heap.get_root(other)
+        heap.set_root(other, None)            # retire the older checkpoint
+        self._flip ^= 1
+        # the old manifest + shards are now unreachable; free eagerly in
+        # normal operation (GC would also reclaim them after a crash)
+        if old is not None:
+            self._free_manifest(old)
+
+    def _free_manifest(self, mblk: int) -> None:
+        heap = self.heap
+        n = int(heap.read_word(mblk))
+        for k in range(n):
+            w = mblk + 1 + k
+            tgt = pp.decode(w, heap.read_word(w))
+            if tgt is not None:
+                heap.free(tgt)
+        heap.free(mblk)
+
+    # --------------------------------------------------------------- restore
+    def load_latest(self, tree_like=None):
+        """Returns (leaves_state_dict, step) from the newest live root."""
+        import jax
+        best = None
+        for root in (ROOT_A, ROOT_B):
+            mblk = self.heap.get_root(root, "ckpt_manifest")
+            if mblk is None:
+                continue
+            info = self._read_manifest(mblk)
+            if best is None or info[2]["step"] > best[2]["step"]:
+                best = info
+                self._flip = 1 - root         # next save goes to the other
+        if best is None:
+            return None, -1
+        mblk, shard_ptrs, meta = best
+        leaves = []
+        for sp, m in zip(shard_ptrs, meta["leaves"]):
+            words = np.array([self.heap.read_word(sp + k)
+                              for k in range(m["words"])], dtype=np.int64)
+            raw = words.tobytes()
+            arr = np.frombuffer(raw, dtype=np.dtype(m["dtype"]))
+            n = int(np.prod(m["shape"])) if m["shape"] else 1
+            leaves.append(arr[:n].reshape(m["shape"]))
+        if tree_like is not None:
+            flat, treedef = jax.tree.flatten(tree_like)
+            leaves = [l.astype(np.asarray(f).dtype) if hasattr(f, "dtype")
+                      else l for l, f in zip(leaves, flat)]
+            return treedef.unflatten(leaves), meta["step"]
+        return leaves, meta["step"]
+
+    def _read_manifest(self, mblk: int):
+        heap = self.heap
+        n = int(heap.read_word(mblk))
+        ptrs = []
+        for k in range(n):
+            w = mblk + 1 + k
+            ptrs.append(pp.decode(w, heap.read_word(w)))
+        jlen = int(heap.read_word(mblk + 1 + n))
+        jwords = -(-jlen // WORD)
+        raw = np.array([heap.read_word(mblk + 2 + n + k)
+                        for k in range(jwords)], np.int64).tobytes()[:jlen]
+        return mblk, ptrs, json.loads(raw.decode())

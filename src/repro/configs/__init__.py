@@ -1,0 +1,61 @@
+"""Architecture registry: one module per assigned architecture.
+
+``get_config(arch)`` returns the exact published configuration;
+``get_smoke_config(arch)`` returns a reduced same-family configuration
+for CPU smoke tests (small layers/width, few experts, tiny vocab).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+
+ARCHS = (
+    "granite_20b",
+    "nemotron_4_340b",
+    "qwen2_5_32b",
+    "starcoder2_3b",
+    "internvl2_26b",
+    "granite_moe_3b_a800m",
+    "moonshot_v1_16b_a3b",
+    "mamba2_370m",
+    "hubert_xlarge",
+    "recurrentgemma_9b",
+)
+
+# assigned input-shape sets (LM family): seq_len × global_batch
+SHAPES = {
+    "train_4k":    {"kind": "train",   "seq_len": 4096,   "global_batch": 256},
+    "prefill_32k": {"kind": "prefill", "seq_len": 32768,  "global_batch": 32},
+    "decode_32k":  {"kind": "decode",  "seq_len": 32768,  "global_batch": 128},
+    "long_500k":   {"kind": "decode",  "seq_len": 524288, "global_batch": 1},
+}
+
+
+def canon(arch: str) -> str:
+    return arch.replace("-", "_").replace(".", "_")
+
+
+def get_config(arch: str):
+    mod = importlib.import_module(f"repro.configs.{canon(arch)}")
+    return mod.config()
+
+
+def get_smoke_config(arch: str):
+    mod = importlib.import_module(f"repro.configs.{canon(arch)}")
+    return mod.smoke_config()
+
+
+def applicable_shapes(arch: str) -> list[str]:
+    """Which assigned shapes apply (DESIGN.md §5 documents the skips)."""
+    cfg = get_config(arch)
+    out = ["train_4k", "prefill_32k"]
+    if cfg.causal:                       # encoder-only archs have no decode
+        out.append("decode_32k")
+        if cfg.family in ("ssm", "hybrid"):   # sub-quadratic only
+            out.append("long_500k")
+    return out
+
+
+def all_cells():
+    return [(a, s) for a in ARCHS for s in applicable_shapes(a)]

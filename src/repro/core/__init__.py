@@ -1,0 +1,19 @@
+"""Core: Ralloc — recoverable, nonblocking persistent memory allocation.
+
+The paper's primary contribution (Cai et al., 2020), in two guises:
+
+  * ``ralloc.Ralloc`` — faithful host-side port (mmap "NVM", CAS lists,
+    thread caches, filter-function GC recovery);
+  * ``jax_alloc`` / ``jax_recovery`` — the TPU-native adaptation: a
+    jittable, vectorized allocator + mark/sweep used by the paged
+    KV-cache and checkpoint subsystems.
+"""
+
+from .layout import HeapConfig, SIZE_CLASSES, SB_SIZE, size_to_class
+from .ralloc import Ralloc, OutOfMemory
+from .filters import FilterRegistry, register_stock_filters
+
+__all__ = [
+    "HeapConfig", "SIZE_CLASSES", "SB_SIZE", "size_to_class",
+    "Ralloc", "OutOfMemory", "FilterRegistry", "register_stock_filters",
+]

@@ -1,0 +1,181 @@
+"""Atomic primitives and the simulated-NVM write-back layer.
+
+The paper's hardware model (§2.1): stores go through volatile caches; an
+application controls durability with ``clwb`` (flush) + ``sfence`` (fence);
+on a full-system crash every line that was not written back is lost, but
+writes-back are never torn at cache-line granularity.
+
+We reproduce that model in software so the recoverability protocol can be
+*tested* rather than assumed:
+
+  * ``NVMArray`` wraps a ``numpy.int64`` buffer ("the NVM image").
+  * With ``sim=True`` all writes land in a per-line write-back cache;
+    ``flush(addr)`` schedules the line, ``fence()`` makes scheduled lines
+    durable.  ``crash()`` drops everything not yet durable.  A seeded RNG
+    spontaneously evicts dirty lines (hardware may write back *any* dirty
+    line at *any* time — correct protocols must tolerate both presence and
+    absence of unflushed data).
+  * With ``sim=False`` ("fast mode", used by the benchmarks) writes go
+    straight to the buffer and flush/fence only bump counters, so the
+    *cost model* of persistence (flush/fence counts per operation — the
+    paper's key claim is that Ralloc needs almost none) is still measured.
+
+CAS is emulated with a short critical section.  The Ralloc *algorithm*
+remains nonblocking — the lock stands in for a single hardware CAS
+instruction, never protects multi-word state, and is never held across
+other operations.  (CPython cannot express a true lock-free CAS on shared
+numpy memory; this is the standard emulation.)
+"""
+
+from __future__ import annotations
+
+import threading
+
+import numpy as np
+
+CACHELINE_WORDS = 8
+
+
+class NVMArray:
+    """int64 word array with flush/fence semantics and crash injection."""
+
+    def __init__(self, words: int, *, sim: bool = False, seed: int = 0,
+                 evict_prob: float = 0.01, backing: np.ndarray | None = None,
+                 flush_ns: int = 0, fence_ns: int = 0):
+        if backing is not None:
+            assert backing.dtype == np.int64 and backing.size >= words
+            self.nvm = backing
+        else:
+            self.nvm = np.zeros(words, dtype=np.int64)
+        self.sim = sim
+        # Optional modeled Optane write-back latency (benchmarks only):
+        # clwb issue + WPQ drain are ~100–300 ns on real hardware; a busy
+        # wait injects that cost so persistence shows up in throughput.
+        self.flush_ns = flush_ns
+        self.fence_ns = fence_ns
+        self._cas_lock = threading.Lock()
+        # persistence cost counters (valid in both modes)
+        self.n_flush = 0
+        self.n_fence = 0
+        self.n_cas = 0
+        if sim:
+            self._cache: dict[int, dict[int, int]] = {}   # line -> {word: value}
+            self._scheduled: set[int] = set()             # flushed, await fence
+            self._rng = np.random.default_rng(seed)
+            self._evict_prob = evict_prob
+
+    # -- addressing helpers --------------------------------------------------
+    @staticmethod
+    def _line(idx: int) -> int:
+        return idx // CACHELINE_WORDS
+
+    # -- reads / writes -------------------------------------------------------
+    def read(self, idx: int) -> int:
+        if self.sim:
+            line = self._cache.get(self._line(idx))
+            if line is not None and idx in line:
+                return line[idx]
+        return int(self.nvm[idx])
+
+    def read_block(self, idx: int, n: int) -> np.ndarray:
+        """Read ``n`` consecutive words (cache-coherent view)."""
+        out = self.nvm[idx:idx + n].copy()
+        if self.sim:
+            for line_id in range(self._line(idx), self._line(idx + n - 1) + 1):
+                line = self._cache.get(line_id)
+                if line:
+                    for w, v in line.items():
+                        if idx <= w < idx + n:
+                            out[w - idx] = v
+        return out
+
+    def write(self, idx: int, value: int) -> None:
+        value = int(np.int64(np.uint64(value & ((1 << 64) - 1))))
+        if self.sim:
+            self._cache.setdefault(self._line(idx), {})[idx] = value
+            self._maybe_evict()
+        else:
+            self.nvm[idx] = value
+
+    def write_block(self, idx: int, values) -> None:
+        for k, v in enumerate(values):
+            self.write(idx + k, int(v))
+
+    # -- persistence ----------------------------------------------------------
+    def flush(self, idx: int) -> None:
+        """clwb: schedule the line containing ``idx`` for write-back."""
+        self.n_flush += 1
+        if self.sim:
+            self._scheduled.add(self._line(idx))
+        if self.flush_ns:
+            self._spin(self.flush_ns)
+
+    def fence(self) -> None:
+        """sfence: all scheduled lines become durable."""
+        self.n_fence += 1
+        if self.sim:
+            for line_id in list(self._scheduled):
+                self._writeback(line_id)
+            self._scheduled.clear()
+        if self.fence_ns:
+            self._spin(self.fence_ns)
+
+    @staticmethod
+    def _spin(ns: int) -> None:
+        import time
+        end = time.perf_counter_ns() + ns
+        while time.perf_counter_ns() < end:
+            pass
+
+    def persist(self, idx: int, value: int) -> None:
+        """write + flush + fence of one word (ordered durable store)."""
+        self.write(idx, value)
+        self.flush(idx)
+        self.fence()
+
+    def _writeback(self, line_id: int) -> None:
+        line = self._cache.pop(line_id, None)
+        if line:
+            for w, v in line.items():
+                self.nvm[w] = v
+
+    def _maybe_evict(self) -> None:
+        """Hardware may evict any dirty line at any time."""
+        if self._cache and self._rng.random() < self._evict_prob:
+            victim = list(self._cache.keys())[
+                int(self._rng.integers(len(self._cache)))]
+            self._writeback(victim)
+
+    # -- crash ----------------------------------------------------------------
+    def crash(self) -> None:
+        """Full-system crash: every non-durable line is lost."""
+        if self.sim:
+            self._cache.clear()
+            self._scheduled.clear()
+
+    def drain(self) -> None:
+        """Clean shutdown: write back everything (implicit eventual WB)."""
+        if self.sim:
+            for line_id in list(self._cache.keys()):
+                self._writeback(line_id)
+            self._scheduled.clear()
+
+    # -- atomics ---------------------------------------------------------------
+    def cas(self, idx: int, expected: int, new: int) -> bool:
+        """Single-word compare-and-swap (emulated hardware primitive)."""
+        self.n_cas += 1
+        with self._cas_lock:
+            if self.read(idx) == int(np.int64(np.uint64(expected & ((1 << 64) - 1)))):
+                self.write(idx, new)
+                return True
+            return False
+
+    def faa(self, idx: int, delta: int) -> int:
+        """Fetch-and-add; returns the previous value."""
+        with self._cas_lock:
+            old = self.read(idx)
+            self.write(idx, old + delta)
+            return old
+
+    def reset_counters(self) -> None:
+        self.n_flush = self.n_fence = self.n_cas = 0

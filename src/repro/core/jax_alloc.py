@@ -1,0 +1,333 @@
+"""Ralloc-JAX: the paper's allocator vectorized for TPU execution.
+
+This is the TPU-native adaptation of Ralloc (DESIGN.md §2).  It manages a
+*virtual arena* of blocks — consumers (the paged KV cache, checkpoint
+shard store, page-table nodes) index their own device arrays with the
+offsets this allocator hands out, so all references are position
+independent by construction (pure offsets; the arena can be remapped or
+resharded without rewriting a single reference).
+
+Mapping from the paper:
+
+  * superblocks with a single size class; descriptors become
+    structure-of-arrays ``sb_class`` / ``sb_free_count`` / ``free_bitmap``
+    (bitmaps replace the in-block linked free lists: pointer chasing is
+    hostile to the VPU, popcount/cumsum sweeps are native);
+  * thread-local caches become one *rank-indexed block cache* per size
+    class: a whole vector of lanes (decode streams) pops from the cache
+    at distinct ranks computed by a cumsum — mutual exclusion by rank
+    instead of by CAS, still synchronization-free;
+  * the Treiber free/partial stacks become index stacks updated inside
+    ``jit``; the "retire on fetch" rule for PARTIAL→EMPTY superblocks is
+    preserved verbatim;
+  * the persistent/transient split is preserved exactly: only
+    ``sb_class``/``sb_block_words``/``used_sbs``/``roots``/``dirty`` need
+    durability; everything else is rebuilt by ``jax_recovery``.
+
+All operations are pure functions ``(state, …) -> (state, …)`` and are
+jit/vmap/scan-compatible; ``size_class`` arguments are static.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+NULL = jnp.int32(-1)
+
+
+@dataclasses.dataclass(frozen=True)
+class ArenaConfig:
+    """Static geometry of one device arena."""
+    num_sbs: int                       # superblocks in the arena
+    sb_words: int                      # words per superblock
+    class_words: tuple[int, ...]       # block size (words) per size class
+    cache_cap: int = 1024              # rank-indexed block cache capacity
+    expand_sbs: int = 8                # watermark expansion increment
+
+    @property
+    def num_classes(self) -> int:
+        return len(self.class_words)
+
+    def blocks_per_sb(self, cls: int) -> int:
+        return self.sb_words // self.class_words[cls]
+
+    @property
+    def max_blocks(self) -> int:
+        return max(self.blocks_per_sb(c) for c in range(self.num_classes))
+
+    @property
+    def total_words(self) -> int:
+        return self.num_sbs * self.sb_words
+
+
+class AllocState(NamedTuple):
+    """Allocator state pytree.  P = persistent fields, T = transient."""
+    sb_class: jax.Array        # P i32[num_sbs]  (-1 = uninitialized)
+    sb_block_words: jax.Array  # P i32[num_sbs]
+    used_sbs: jax.Array        # P i32[]         watermark
+    roots: jax.Array           # P i32[max_roots] block offsets, -1 = null
+    dirty: jax.Array           # P i32[]
+    free_bitmap: jax.Array     # T bool[num_sbs, max_blocks] True = free
+    sb_free_count: jax.Array   # T i32[num_sbs]
+    free_stack: jax.Array      # T i32[num_sbs + 1] (+1 dump slot)
+    free_top: jax.Array        # T i32[]
+    partial_stack: jax.Array   # T i32[num_classes, num_sbs + 1]
+    partial_top: jax.Array     # T i32[num_classes]
+    block_cache: jax.Array     # T i32[num_classes, cache_cap + 1] (+dump slot)
+    cache_top: jax.Array       # T i32[num_classes]
+    alloc_count: jax.Array     # T i32[]  (statistics)
+    free_count: jax.Array      # T i32[]
+
+
+def init_state(cfg: ArenaConfig, max_roots: int = 64) -> AllocState:
+    n, c = cfg.num_sbs, cfg.num_classes
+    return AllocState(
+        sb_class=jnp.full((n,), -1, jnp.int32),
+        sb_block_words=jnp.zeros((n,), jnp.int32),
+        used_sbs=jnp.int32(0),
+        roots=jnp.full((max_roots,), -1, jnp.int32),
+        dirty=jnp.int32(1),
+        free_bitmap=jnp.zeros((n, cfg.max_blocks), bool),
+        sb_free_count=jnp.zeros((n,), jnp.int32),
+        free_stack=jnp.full((n + 1,), -1, jnp.int32),
+        free_top=jnp.int32(0),
+        partial_stack=jnp.full((c, n + 1), -1, jnp.int32),
+        partial_top=jnp.zeros((c,), jnp.int32),
+        block_cache=jnp.full((c, cfg.cache_cap + 1), -1, jnp.int32),
+        cache_top=jnp.zeros((c,), jnp.int32),
+        alloc_count=jnp.int32(0),
+        free_count=jnp.int32(0),
+    )
+
+
+# ---------------------------------------------------------------------------
+# internal helpers
+# ---------------------------------------------------------------------------
+def _push_many(stack, top, ids, mask):
+    """Vectorized multi-push: stack[top + rank(i)] = ids[i] for masked i."""
+    ranks = jnp.cumsum(mask.astype(jnp.int32)) - 1
+    dump = stack.shape[-1] - 1                      # reserved dump slot
+    idx = jnp.where(mask, top + ranks, dump)
+    stack = stack.at[idx].set(jnp.where(mask, ids, stack[dump]))
+    # restore the dump slot (may have been scribbled)
+    stack = stack.at[dump].set(-1)
+    return stack, top + mask.sum(dtype=jnp.int32)
+
+
+def _expand(st: AllocState, cfg: ArenaConfig):
+    """Advance the used watermark; push new superblocks onto the free stack.
+
+    The watermark is a persistent field — in the paper it is CAS'd then
+    flushed+fenced before any new block escapes; here the state update is
+    atomic by construction (one program step) and the persistence boundary
+    is the host mirror (see ``persist_snapshot``).
+    """
+    k = jnp.minimum(jnp.int32(cfg.expand_sbs), cfg.num_sbs - st.used_sbs)
+    ids = st.used_sbs + jnp.arange(cfg.num_sbs, dtype=jnp.int32)
+    mask = jnp.arange(cfg.num_sbs) < k
+    fs, ft = _push_many(st.free_stack, st.free_top,
+                        jnp.where(mask, ids, -1), mask)
+    return st._replace(free_stack=fs, free_top=ft,
+                       used_sbs=st.used_sbs + k), k > 0
+
+
+def _harvest(st: AllocState, cfg: ArenaConfig, cls: int, sb):
+    """Move up to (cache capacity − top) free blocks of ``sb`` into the cache.
+
+    Mirrors LRMalloc's "reserve all available blocks with one anchor CAS";
+    if the cache cannot hold the whole superblock, the remainder stays and
+    the superblock returns to the partial stack.
+    """
+    bw = cfg.class_words[cls]
+    total = cfg.blocks_per_sb(cls)
+    room = jnp.int32(cfg.cache_cap) - st.cache_top[cls]
+    bits = st.free_bitmap[sb] & (jnp.arange(cfg.max_blocks) < total)
+    order = jnp.cumsum(bits.astype(jnp.int32))        # 1-based among set bits
+    sel = bits & (order <= room)
+    t = sel.sum(dtype=jnp.int32)
+    # push selected block offsets into the cache at distinct ranks;
+    # non-selected writes land in the dedicated dump slot (index cap)
+    offs = sb * cfg.sb_words + jnp.arange(cfg.max_blocks, dtype=jnp.int32) * bw
+    cache_row = st.block_cache[cls]
+    idx = jnp.where(sel, st.cache_top[cls] + order - 1, cfg.cache_cap)
+    cache_row = cache_row.at[idx].set(jnp.where(sel, offs, -1))
+    bitmap = st.free_bitmap.at[sb].set(st.free_bitmap[sb] & ~sel)
+    count = st.sb_free_count[sb] - t
+    st = st._replace(
+        block_cache=st.block_cache.at[cls].set(cache_row),
+        cache_top=st.cache_top.at[cls].add(t),
+        free_bitmap=bitmap,
+        sb_free_count=st.sb_free_count.at[sb].set(count),
+    )
+    # leftover free blocks → superblock goes back to the partial stack
+    def back_to_partial(s):
+        ps, pt = _push_many(
+            s.partial_stack[cls], s.partial_top[cls],
+            jnp.full((cfg.num_sbs,), sb, jnp.int32),
+            jnp.arange(cfg.num_sbs) < 1)
+        return s._replace(partial_stack=s.partial_stack.at[cls].set(ps),
+                          partial_top=s.partial_top.at[cls].set(pt))
+    return lax.cond(count > 0, back_to_partial, lambda s: s, st)
+
+
+def _refill_step(st: AllocState, cfg: ArenaConfig, cls: int):
+    """One slow-path refill attempt: partial → free → expand (paper §4.4)."""
+    total = cfg.blocks_per_sb(cls)
+
+    def from_partial(st):
+        top = st.partial_top[cls]
+        sb = st.partial_stack[cls, top - 1]
+        st = st._replace(partial_top=st.partial_top.at[cls].add(-1))
+        count = st.sb_free_count[sb]
+        # retire-on-fetch: a PARTIAL→EMPTY superblock goes to the free stack
+        def retire(s):
+            fs, ft = _push_many(s.free_stack, s.free_top,
+                                jnp.full((cfg.num_sbs,), sb, jnp.int32),
+                                jnp.arange(cfg.num_sbs) < 1)
+            return s._replace(free_stack=fs, free_top=ft,
+                              sb_class=s.sb_class.at[sb].set(-1))
+        return lax.cond(count >= total, retire,
+                        lambda s: _harvest(s, cfg, cls, sb), st), True
+
+    def from_free(st):
+        sb = st.free_stack[st.free_top - 1]
+        st = st._replace(free_top=st.free_top - 1)
+        bw = cfg.class_words[cls]
+        # (re)initialize the superblock for this class — the persistent
+        # fields (class, block size) change here and only here
+        st = st._replace(
+            sb_class=st.sb_class.at[sb].set(cls),
+            sb_block_words=st.sb_block_words.at[sb].set(bw),
+            free_bitmap=st.free_bitmap.at[sb].set(
+                jnp.arange(cfg.max_blocks) < total),
+            sb_free_count=st.sb_free_count.at[sb].set(total),
+        )
+        return _harvest(st, cfg, cls, sb), True
+
+    def from_expand(st):
+        st, ok = _expand(st, cfg)
+        return st, ok
+
+    has_partial = st.partial_top[cls] > 0
+    has_free = st.free_top > 0
+    branch = jnp.where(has_partial, 0, jnp.where(has_free, 1, 2))
+    return lax.switch(branch, [
+        lambda s: from_partial(s),
+        lambda s: from_free(s),
+        lambda s: from_expand(s),
+    ], st)
+
+
+def alloc(state: AllocState, cfg: ArenaConfig, cls: int, need):
+    """Vectorized allocation: one block per lane where ``need`` is set.
+
+    Returns (state, offsets i32[L]) with -1 for unserved lanes (either
+    ``need`` false or out of memory).  The fast path (cache hit for every
+    lane) touches only the cache row and its top — the vector analogue of
+    the paper's synchronization-free thread-cache hit.
+    """
+    need = need.astype(bool)
+    m = need.sum(dtype=jnp.int32)
+
+    def cond(carry):
+        st, progress = carry
+        return (st.cache_top[cls] < m) & progress
+
+    def body(carry):
+        st, _ = carry
+        st, ok = _refill_step(st, cfg, cls)
+        return st, ok
+
+    state, _ = lax.while_loop(cond, body, (state, jnp.bool_(True)))
+    top = state.cache_top[cls]
+    avail = jnp.minimum(top, m)
+    ranks = jnp.cumsum(need.astype(jnp.int32)) - 1
+    served = need & (ranks < avail)
+    pos = jnp.maximum(top - 1 - ranks, 0)
+    offs = jnp.where(served, state.block_cache[cls, pos], -1)
+    state = state._replace(
+        cache_top=state.cache_top.at[cls].add(-avail),
+        alloc_count=state.alloc_count + avail)
+    return state, offs
+
+
+def _spill(st: AllocState, cfg: ArenaConfig, cls: int):
+    """Flush the whole class cache back to superblock bitmaps (paper §4.4:
+    an over-full cache is transferred "in its entirety")."""
+    bw = cfg.class_words[cls]
+    total = cfg.blocks_per_sb(cls)
+    cap = cfg.cache_cap + 1                        # row includes the dump slot
+    row = st.block_cache[cls]
+    live = jnp.arange(cap) < st.cache_top[cls]
+    sb = jnp.where(live, row // cfg.sb_words, cfg.num_sbs)   # dump row
+    blk = jnp.where(live, (row % cfg.sb_words) // bw, 0)
+    old_count = st.sb_free_count
+    bitmap = jnp.pad(st.free_bitmap, ((0, 1), (0, 0)))
+    bitmap = bitmap.at[sb, blk].set(True)
+    delta = jnp.zeros((cfg.num_sbs + 1,), jnp.int32).at[sb].add(1)
+    new_count = old_count + delta[:-1]
+    st = st._replace(free_bitmap=bitmap[:-1],
+                     sb_free_count=new_count,
+                     cache_top=st.cache_top.at[cls].set(0))
+    touched = delta[:-1] > 0
+    was_full = touched & (old_count == 0) & (st.sb_class == cls)
+    to_free = was_full & (new_count >= total)
+    to_partial = was_full & (new_count < total)
+    ids = jnp.arange(cfg.num_sbs, dtype=jnp.int32)
+    ps, pt = _push_many(st.partial_stack[cls], st.partial_top[cls],
+                        ids, to_partial)
+    fs, ft = _push_many(st.free_stack, st.free_top, ids, to_free)
+    # FULL→EMPTY superblocks retire immediately (class reset)
+    sb_class = jnp.where(to_free, -1, st.sb_class)
+    return st._replace(partial_stack=st.partial_stack.at[cls].set(ps),
+                       partial_top=st.partial_top.at[cls].set(pt),
+                       free_stack=fs, free_top=ft, sb_class=sb_class)
+
+
+def free(state: AllocState, cfg: ArenaConfig, cls: int, offs, mask):
+    """Vectorized deallocation of one block per masked lane."""
+    mask = mask.astype(bool) & (offs >= 0)
+    k = mask.sum(dtype=jnp.int32)
+    state = lax.cond(state.cache_top[cls] + k > cfg.cache_cap,
+                     lambda s: _spill(s, cfg, cls), lambda s: s, state)
+    ranks = jnp.cumsum(mask.astype(jnp.int32)) - 1
+    idx = jnp.where(mask, state.cache_top[cls] + ranks, cfg.cache_cap)
+    row = state.block_cache[cls]
+    row = row.at[idx].set(jnp.where(mask, offs, -1))
+    return state._replace(
+        block_cache=state.block_cache.at[cls].set(row),
+        cache_top=state.cache_top.at[cls].add(k),
+        free_count=state.free_count + k)
+
+
+def set_root(state: AllocState, i: int, off) -> AllocState:
+    return state._replace(roots=state.roots.at[i].set(off))
+
+
+# ---------------------------------------------------------------------------
+# persistence boundary
+# ---------------------------------------------------------------------------
+PERSISTENT_FIELDS = ("sb_class", "sb_block_words", "used_sbs", "roots", "dirty")
+
+
+def persistent_snapshot(state: AllocState) -> dict:
+    """The only fields that must reach durable storage (paper's bold set)."""
+    return {f: getattr(state, f) for f in PERSISTENT_FIELDS}
+
+
+def live_blocks(state: AllocState, cfg: ArenaConfig):
+    """Debug/test helper: per-class count of blocks not free anywhere."""
+    out = {}
+    for c in range(cfg.num_classes):
+        total = cfg.blocks_per_sb(c)
+        sbs = (state.sb_class == c) & (jnp.arange(cfg.num_sbs) < state.used_sbs)
+        in_sb = jnp.where(sbs, total - state.sb_free_count, 0).sum()
+        cached = state.cache_top[c]
+        out[c] = int(in_sb - cached)
+    return out

@@ -1,0 +1,152 @@
+"""Vectorized GC recovery for the device-side allocator.
+
+Paper §4.5 recovers a heap by (5) tracing reachable blocks from the
+persistent roots and (6–9) sweeping the superblock region to rebuild all
+transient metadata.  The paper runs this sequentially and notes (§6.4)
+that parallelizing the trace across roots and the sweep across
+superblocks is future work — on TPU we do exactly that:
+
+  * **mark** — a data-parallel fixed-point: one step gathers every marked
+    block's outgoing references (from a *reference table* produced by the
+    consumer's filter functions) and scatter-ORs them into the mark
+    bitmap; iteration count = graph depth, each step O(blocks × refs) on
+    the VPU.
+  * **sweep** — pure segmented reductions: per-superblock free bitmaps
+    come from the mark bitmap, counts from popcounts, free/partial stacks
+    from mask compaction (sort by (¬predicate, id)).
+
+Blocks are identified by *slots* — offset // min(class_words) — so one
+mark bitmap covers all classes.  Filter functions here are exact
+(consumers enumerate their reference arrays, e.g. page-table pages);
+conservative word-scanning has no device analogue because consumers own
+typed arrays rather than a raw byte heap (DESIGN.md §2).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .jax_alloc import AllocState, ArenaConfig, init_state
+
+
+def slot_of(cfg: ArenaConfig, off):
+    return off // min(cfg.class_words)
+
+
+def num_slots(cfg: ArenaConfig) -> int:
+    return cfg.total_words // min(cfg.class_words)
+
+
+def mark(cfg: ArenaConfig, roots, ref_table, max_iter: int = 64):
+    """Fixed-point reachability over the block-reference graph.
+
+    roots:     i32[max_roots] block offsets (-1 = null)
+    ref_table: i32[num_slots, R] outgoing references (block offsets, -1 null)
+               — produced by the consumer's (vectorized) filter functions.
+    Returns bool[num_slots] reachability.
+    """
+    S = num_slots(cfg)
+    root_slots = jnp.where(roots >= 0, slot_of(cfg, roots), S)
+    marked = jnp.zeros((S + 1,), bool).at[root_slots].set(True)
+    marked = marked.at[S].set(False)
+    tgt = jnp.where(ref_table >= 0, slot_of(cfg, ref_table), S)
+
+    def body(carry):
+        marked, _ = carry
+        contrib = marked[:S, None] & (tgt < S)
+        new = jnp.zeros((S + 1,), bool).at[
+            jnp.where(contrib, tgt, S)].max(True)
+        new = new.at[S].set(False)
+        merged = marked | new
+        changed = (merged != marked).any()
+        return merged, changed
+
+    def cond(carry):
+        return carry[1]
+
+    marked, _ = lax.while_loop(cond, body, body((marked, jnp.bool_(True))))
+    return marked[:S]
+
+
+def _compact(pred, n_plus_1: int):
+    """Mask compaction: ids where pred, in ascending order, padded with -1."""
+    ids = jnp.arange(pred.shape[0], dtype=jnp.int32)
+    key = jnp.where(pred, ids, jnp.iinfo(jnp.int32).max)
+    order = jnp.sort(key)
+    cnt = pred.sum(dtype=jnp.int32)
+    vals = jnp.where(jnp.arange(pred.shape[0]) < cnt, order, -1)
+    out = jnp.full((n_plus_1,), -1, jnp.int32)
+    return out.at[:pred.shape[0]].set(vals), cnt
+
+
+def sweep(cfg: ArenaConfig, persistent: dict, marked) -> AllocState:
+    """Rebuild every transient structure from (persistent fields, marks)."""
+    n = cfg.num_sbs
+    sb_ids = jnp.arange(n, dtype=jnp.int32)
+    used = persistent["used_sbs"]
+    sb_class = persistent["sb_class"]
+    in_use = sb_ids < used
+    minw = min(cfg.class_words)
+
+    free_bitmap = jnp.zeros((n, cfg.max_blocks), bool)
+    counts = jnp.zeros((n,), jnp.int32)
+    empty = in_use & (sb_class < 0)              # never initialized → free
+    partial_stacks = []
+    partial_tops = []
+    Spad = num_slots(cfg)
+    marked_pad = jnp.concatenate([marked, jnp.zeros((1,), bool)])
+
+    new_class = sb_class
+    for c in range(cfg.num_classes):
+        cw = cfg.class_words[c]
+        total = cfg.blocks_per_sb(c)
+        sel = in_use & (sb_class == c)
+        offs = (sb_ids[:, None] * cfg.sb_words
+                + jnp.arange(cfg.max_blocks, dtype=jnp.int32)[None, :] * cw)
+        slots = jnp.where(jnp.arange(cfg.max_blocks)[None, :] < total,
+                          offs // minw, Spad)
+        m = marked_pad[slots]                     # [n, max_blocks]
+        valid = jnp.arange(cfg.max_blocks)[None, :] < total
+        bm_c = valid & ~m
+        cnt_c = bm_c.sum(axis=1, dtype=jnp.int32)
+        free_bitmap = jnp.where(sel[:, None], bm_c, free_bitmap)
+        counts = jnp.where(sel, cnt_c, counts)
+        now_empty = sel & (cnt_c >= total)
+        empty = empty | now_empty
+        new_class = jnp.where(now_empty, -1, new_class)
+        part = sel & (cnt_c > 0) & (cnt_c < total)
+        stack_c, top_c = _compact(part, n + 1)
+        partial_stacks.append(stack_c)
+        partial_tops.append(top_c)
+
+    # empty superblocks: wipe their bitmaps/counts and stack them as free
+    free_bitmap = jnp.where(empty[:, None], False, free_bitmap)
+    counts = jnp.where(empty, 0, counts)
+    free_stack, free_top = _compact(empty, n + 1)
+
+    st = init_state(cfg, max_roots=persistent["roots"].shape[0])
+    return st._replace(
+        sb_class=new_class,
+        sb_block_words=jnp.where(empty, 0, persistent["sb_block_words"]),
+        used_sbs=used,
+        roots=persistent["roots"],
+        dirty=jnp.int32(1),
+        free_bitmap=free_bitmap,
+        sb_free_count=counts,
+        free_stack=free_stack,
+        free_top=free_top,
+        partial_stack=jnp.stack(partial_stacks),
+        partial_top=jnp.stack(partial_tops),
+    )
+
+
+def recover(cfg: ArenaConfig, persistent: dict, ref_table,
+            max_iter: int = 64) -> tuple[AllocState, jax.Array]:
+    """Full vectorized recovery (mark + sweep).  jit-compatible."""
+    marked = mark(cfg, persistent["roots"], ref_table, max_iter)
+    return sweep(cfg, persistent, marked), marked

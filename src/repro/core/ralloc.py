@@ -1,0 +1,371 @@
+"""Ralloc — nonblocking recoverable persistent allocator (paper §4).
+
+Faithful host-side port of the paper's algorithm:
+
+  * size-class-segregated allocation with per-thread caches (the fast path
+    touches no shared state at all);
+  * global superblock free list and per-class partial lists as Treiber
+    stacks of *descriptors* (single-word CAS heads with ABA counters);
+  * per-superblock block free lists threaded through the first word of
+    each free block as a self-relative pptr (transient — never flushed);
+  * anchors (state | avail | count | tag) updated with one CAS;
+  * the only *persistent* writes during normal operation: a superblock's
+    ``size_class``/``block_size`` at superblock (re)initialization and the
+    region ``used`` watermark at expansion — each a write-back + fence.
+    Typical mallocs/frees persist **nothing** (the paper's headline
+    property);
+  * ``recover()`` (see ``core.recovery``) reconstructs every transient
+    structure from the persisted minimum plus GC reachability.
+
+Addresses are word indices into the heap array; the public API hands out
+block addresses ("pointers") that test data structures store as pptrs.
+"""
+
+from __future__ import annotations
+
+import math
+import threading
+
+from . import layout, recovery
+from .filters import FilterRegistry, conservative_filter
+from .heap import PersistentHeap
+from .layout import (ANCHOR_NIL_AVAIL, D_ANCHOR, D_BLOCK_SIZE, D_NEXT_FREE,
+                     D_NEXT_PARTIAL, D_SIZE_CLASS, EMPTY, FULL, HeapConfig,
+                     LARGE_CLASS, LARGE_CONT, PARTIAL, SB_SIZE, SB_WORDS,
+                     WORD, pack_anchor, pack_head, unpack_anchor, unpack_head)
+from . import pptr as pp
+
+
+class OutOfMemory(Exception):
+    pass
+
+
+class Ralloc:
+    """One persistent heap + allocator instance (paper Fig. 1 API)."""
+
+    def __init__(self, path: str | None, size: int, *, sim_nvm: bool = False,
+                 seed: int = 0, tcache_cap: int = 64, persist: bool = True,
+                 expand_sbs: int = 16, keep_half: bool = False,
+                 flush_ns: int = 0, fence_ns: int = 0):
+        """``persist=False`` disables flush/fence → LRMalloc-equivalent mode."""
+        self.config = HeapConfig(size=size, sim_nvm=sim_nvm, seed=seed,
+                                 tcache_cap=tcache_cap, expand_sbs=expand_sbs,
+                                 flush_ns=flush_ns, fence_ns=fence_ns)
+        self.keep_half = keep_half
+        self.heap = PersistentHeap(path, self.config)
+        self.persist_on = persist
+        self.filters = FilterRegistry()
+        from .filters import register_stock_filters
+        register_stock_filters(self.filters)
+        self._root_filters: dict[int, str | None] = {}
+        self._tls = threading.local()
+        self._all_caches: list[list[list[int]]] = []
+        self._caches_lock = threading.Lock()
+        self._closed = False
+        self.dirty_restart = self.heap.init()
+
+    # ------------------------------------------------------------------ misc
+    @property
+    def mem(self):
+        return self.heap.mem
+
+    def _persist(self, *words: int) -> None:
+        """flush(+fence) persistent fields — the paper's bold writes."""
+        if self.persist_on:
+            for w in words:
+                self.mem.flush(w)
+            self.mem.fence()
+
+    def _tcache(self) -> list[list[int]]:
+        c = getattr(self._tls, "cache", None)
+        if c is None:
+            c = [[] for _ in range(layout.NUM_CLASSES)]
+            self._tls.cache = c
+            with self._caches_lock:
+                self._all_caches.append(c)
+        return c
+
+    def drop_all_caches(self) -> None:
+        """Stop-the-world discard of every thread cache (recovery step 2)."""
+        with self._caches_lock:
+            for c in self._all_caches:
+                for cls in range(layout.NUM_CLASSES):
+                    c[cls].clear()
+
+    # ------------------------------------------------------------------- API
+    def recover(self) -> dict:
+        """Offline GC + metadata reconstruction; returns recovery stats."""
+        return recovery.recover(self)
+
+    def close(self) -> None:
+        """Return cached blocks, write back the heap, clear the dirty flag."""
+        if self._closed:
+            return
+        cache = self._tcache()
+        for cls in range(1, layout.NUM_CLASSES):
+            if cache[cls]:
+                self._flush_cache(cls, keep=0)
+        self.heap.close()
+        self._closed = True
+
+    def malloc(self, size: int) -> int | None:
+        """Allocate ``size`` bytes; returns the block word address (or None)."""
+        if size <= 0:
+            return None
+        cls = layout.size_to_class(size)
+        if cls == LARGE_CLASS:
+            return self._malloc_large(size)
+        cache = self._tcache()[cls]
+        if not cache and not self._refill(cls):
+            return None
+        return cache.pop()
+
+    def free(self, ptr: int) -> None:
+        sb = self.heap.sb_of(ptr)
+        assert 0 <= sb < self.config.num_sbs, "free of non-heap pointer"
+        cls = self.mem.read(self.desc(sb, D_SIZE_CLASS))
+        if cls == LARGE_CLASS:
+            self._free_large(sb)
+            return
+        cache = self._tcache()[cls]
+        cache.append(ptr)
+        if len(cache) > self._cache_cap(cls):
+            # paper: transfer the cache "in its entirety"; keep_half is the
+            # Makalu-style locality tweak (beyond-paper option, §6.3 discussion)
+            keep = len(cache) // 2 if self.keep_half else 0
+            self._flush_cache(cls, keep=keep)
+
+    def _cache_cap(self, cls: int) -> int:
+        """Cache capacity: one superblock's worth of blocks (LRMalloc)."""
+        return max(self.config.tcache_cap,
+                   layout.blocks_per_sb(layout.class_block_size(cls)))
+
+    def set_root(self, i: int, ptr: int | None, typename: str | None = None) -> None:
+        self._root_filters[i] = typename
+        self.heap.set_root(i, ptr)
+
+    def get_root(self, i: int, typename: str | None = None) -> int | None:
+        """Retrieve root ``i`` and (re)register its filter type (paper §4.5.1)."""
+        self._root_filters[i] = typename
+        return self.heap.get_root(i)
+
+    # ------------------------------------------------------- address helpers
+    def desc(self, sb_idx: int, field: int) -> int:
+        return self.heap.desc_word(sb_idx, field)
+
+    def block_words(self, block_size: int) -> int:
+        return block_size // WORD if block_size % WORD == 0 else max(1, math.ceil(block_size / WORD))
+
+    # --------------------------------------------------------- Treiber lists
+    def _push_list(self, head_word: int, next_field: int, sb_idx: int) -> None:
+        m = self.mem
+        nf = self.desc(sb_idx, next_field)
+        while True:
+            old = m.read(head_word)
+            idx, ctr = unpack_head(old)
+            m.write(nf, idx if idx >= 0 else -1)
+            if m.cas(head_word, old, pack_head(sb_idx, ctr + 1)):
+                return
+
+    def _pop_list(self, head_word: int, next_field: int) -> int | None:
+        m = self.mem
+        while True:
+            old = m.read(head_word)
+            idx, ctr = unpack_head(old)
+            if idx < 0:
+                return None
+            nxt = m.read(self.desc(idx, next_field))
+            if m.cas(head_word, old, pack_head(int(nxt), ctr + 1)):
+                return idx
+
+    # ------------------------------------------------------------ expansion
+    def _expand(self, nsb: int) -> int | None:
+        """Advance the used watermark by ``nsb`` superblocks (CAS+flush+fence).
+
+        Returns the first new superblock index, or None if out of space.
+        The watermark is durable *before* any block in the new superblocks
+        can be handed out — recovery must never see reachable blocks above
+        a stale watermark.
+        """
+        m = self.mem
+        while True:
+            old = m.read(layout.M_USED_SBS)
+            if old + nsb > self.config.num_sbs:
+                return None
+            if m.cas(layout.M_USED_SBS, old, old + nsb):
+                self._persist(layout.M_USED_SBS)
+                return old
+
+    # --------------------------------------------------------------- refill
+    def _refill(self, cls: int) -> bool:
+        """Recharge the thread cache for ``cls`` (paper §4.4)."""
+        cache = self._tcache()[cls]
+        bs = layout.class_block_size(cls)
+        bw = self.block_words(bs)
+        total = layout.blocks_per_sb(bs)
+        m = self.mem
+        phead = layout.M_PARTIAL_HEADS + cls
+
+        while True:
+            # 1. partial superblock of this class
+            sb = self._pop_list(phead, D_NEXT_PARTIAL)
+            if sb is not None:
+                status, taken = self._reserve_all(sb)
+                if status == "empty":      # became EMPTY while listed → retire
+                    self._init_free_sb(sb)
+                    self._push_list(layout.M_FREE_HEAD, D_NEXT_FREE, sb)
+                    continue
+                if status == "full":       # raced empty-handed; try the next
+                    continue
+                avail, count = taken
+                base = self.heap.sb_word(sb)
+                w = base + avail * bw
+                for _ in range(count):
+                    cache.append(w)
+                    nxt = pp.decode(w, m.read(w))
+                    if nxt is None:
+                        break
+                    w = nxt
+                return True
+
+            # 2. free superblock (any class) — (re)initialize it for cls
+            sb = self._pop_list(layout.M_FREE_HEAD, D_NEXT_FREE)
+            if sb is None:
+                # 3. expand the used prefix of the superblock region
+                first = self._expand(self.config.expand_sbs)
+                if first is None:
+                    first = self._expand(1)       # partial final expansion
+                    if first is None:
+                        return False
+                    sb = first
+                else:
+                    sb = first
+                    for extra in range(first + 1, first + self.config.expand_sbs):
+                        self._init_free_sb(extra)
+                        self._push_list(layout.M_FREE_HEAD, D_NEXT_FREE, extra)
+            # persist size class & block size BEFORE any block escapes —
+            # recovery depends on them (paper: "has to be persisted before a
+            # superblock is used for allocation")
+            m.write(self.desc(sb, D_SIZE_CLASS), cls)
+            m.write(self.desc(sb, D_BLOCK_SIZE), bs)
+            self._persist(self.desc(sb, D_SIZE_CLASS), self.desc(sb, D_BLOCK_SIZE))
+            _, _, _, tag = unpack_anchor(m.read(self.desc(sb, D_ANCHOR)))
+            m.write(self.desc(sb, D_ANCHOR),
+                    pack_anchor(FULL, ANCHOR_NIL_AVAIL, 0, tag + 1))
+            base = self.heap.sb_word(sb)
+            for b in range(total):
+                cache.append(base + b * bw)
+            return True
+
+    def _reserve_all(self, sb: int) -> tuple[str, tuple[int, int] | None]:
+        """CAS the anchor to (FULL, nil, 0), reserving every free block."""
+        m = self.mem
+        aw = self.desc(sb, D_ANCHOR)
+        while True:
+            old = m.read(aw)
+            state, avail, count, tag = unpack_anchor(old)
+            if state == EMPTY or count == total_blocks(self, sb):
+                return "empty", None             # retire-on-fetch (paper §4.4)
+            if count == 0:
+                return "full", None              # nothing to take
+            if m.cas(aw, old, pack_anchor(FULL, ANCHOR_NIL_AVAIL, 0, tag + 1)):
+                return "ok", (avail, count)
+
+    def _init_free_sb(self, sb: int) -> None:
+        m = self.mem
+        _, _, _, tag = unpack_anchor(m.read(self.desc(sb, D_ANCHOR)))
+        m.write(self.desc(sb, D_ANCHOR),
+                pack_anchor(EMPTY, ANCHOR_NIL_AVAIL, 0, tag + 1))
+
+    # ---------------------------------------------------------- cache flush
+    def _flush_cache(self, cls: int, keep: int = 0) -> None:
+        """Push cached blocks back to their superblocks' free lists."""
+        cache = self._tcache()[cls]
+        give = cache[keep:]
+        del cache[keep:]
+        bs = layout.class_block_size(cls)
+        bw = self.block_words(bs)
+        total = layout.blocks_per_sb(bs)
+        by_sb: dict[int, list[int]] = {}
+        for w in give:
+            by_sb.setdefault(self.heap.sb_of(w), []).append(w)
+        m = self.mem
+        for sb, blocks in by_sb.items():
+            base = self.heap.sb_word(sb)
+            aw = self.desc(sb, D_ANCHOR)
+            k = len(blocks)
+            while True:
+                old = m.read(aw)
+                state, avail, count, tag = unpack_anchor(old)
+                # thread the chain through the blocks' first words (transient)
+                for i, w in enumerate(blocks[:-1]):
+                    m.write(w, pp.encode(w, blocks[i + 1]))
+                lastw = blocks[-1]
+                if avail == ANCHOR_NIL_AVAIL:
+                    m.write(lastw, pp.PPTR_NULL)
+                else:
+                    m.write(lastw, pp.encode(lastw, base + avail * bw))
+                new_count = count + k
+                new_state = EMPTY if new_count == total else (
+                    PARTIAL if state == FULL else state)
+                new_avail = (blocks[0] - base) // bw
+                if m.cas(aw, old, pack_anchor(new_state, new_avail,
+                                              new_count, tag + 1)):
+                    break
+            if state == FULL and new_state == EMPTY:
+                self._push_list(layout.M_FREE_HEAD, D_NEXT_FREE, sb)
+            elif state == FULL and new_state == PARTIAL:
+                self._push_list(layout.M_PARTIAL_HEADS + cls, D_NEXT_PARTIAL, sb)
+            # PARTIAL→EMPTY: stays in the partial list; retired when fetched.
+
+    # ----------------------------------------------------------------- large
+    def _malloc_large(self, size: int) -> int | None:
+        nsb = math.ceil(size / SB_SIZE)
+        first = self._expand(nsb)
+        if first is None:
+            return None
+        m = self.mem
+        m.write(self.desc(first, D_SIZE_CLASS), LARGE_CLASS)
+        m.write(self.desc(first, D_BLOCK_SIZE), size)
+        to_persist = [self.desc(first, D_SIZE_CLASS), self.desc(first, D_BLOCK_SIZE)]
+        for sb in range(first + 1, first + nsb):
+            m.write(self.desc(sb, D_SIZE_CLASS), LARGE_CONT)
+            m.write(self.desc(sb, D_BLOCK_SIZE), 0)
+            to_persist.append(self.desc(sb, D_SIZE_CLASS))
+        self._persist(*to_persist)
+        _, _, _, tag = unpack_anchor(m.read(self.desc(first, D_ANCHOR)))
+        m.write(self.desc(first, D_ANCHOR),
+                pack_anchor(FULL, ANCHOR_NIL_AVAIL, 0, tag + 1))
+        return self.heap.sb_word(first)
+
+    def _free_large(self, first: int) -> None:
+        m = self.mem
+        size = m.read(self.desc(first, D_BLOCK_SIZE))
+        nsb = math.ceil(size / SB_SIZE)
+        for sb in range(first, first + nsb):
+            self._init_free_sb(sb)
+            self._push_list(layout.M_FREE_HEAD, D_NEXT_FREE, sb)
+
+    # ------------------------------------------------------------ block I/O
+    # Convenience accessors used by test data structures & benchmarks: they
+    # model application loads/stores to heap blocks (word granularity).
+    def read_word(self, w: int) -> int:
+        return self.mem.read(w)
+
+    def write_word(self, w: int, v: int) -> None:
+        self.mem.write(w, v)
+
+    def flush_range(self, w: int, nwords: int) -> None:
+        """Application-side durability (durable linearizability is the app's job)."""
+        if self.persist_on:
+            for line in range(w // 8, (w + max(nwords, 1) - 1) // 8 + 1):
+                self.mem.flush(line * 8)
+
+    def fence(self) -> None:
+        if self.persist_on:
+            self.mem.fence()
+
+
+def total_blocks(r: Ralloc, sb: int) -> int:
+    bs = r.mem.read(r.desc(sb, D_BLOCK_SIZE))
+    return layout.blocks_per_sb(int(bs)) if bs > 0 else 0

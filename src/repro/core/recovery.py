@@ -1,0 +1,200 @@
+"""Post-crash recovery: trace-based GC + metadata reconstruction (paper §4.5).
+
+Recovery steps (paper numbering):
+  2.  thread-local caches start empty (fresh process)
+  3.  superblock free list and partial lists reset to empty
+  4.  filter functions were registered by ``get_root`` calls
+  5.  trace all blocks reachable from persistent roots
+  6–9. sweep the superblock region: keep only traced blocks, rebuild every
+      descriptor, partial list, and the superblock free list
+  10. write back the three regions and fence
+
+"In use" after recovery = reachable, even if never malloc'd pre-crash
+(conservative false positives leak, never corrupt — paper Thm 5.4).
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from . import layout
+from . import pptr as pp
+from .layout import (ANCHOR_NIL_AVAIL, D_ANCHOR, D_BLOCK_SIZE, D_NEXT_FREE,
+                     D_NEXT_PARTIAL, D_SIZE_CLASS, EMPTY, FULL, LARGE_CLASS,
+                     LARGE_CONT, PARTIAL, SB_WORDS, WORD, pack_anchor,
+                     pack_head, unpack_anchor)
+
+
+def _valid_block_start(r, word: int, used_sbs: int) -> tuple[bool, int, int]:
+    """Validate a traced target as a block start.
+
+    Returns (valid, size_class, size_bytes).  Interior pointers are not
+    supported (paper §4.5); stale size classes on free superblocks can
+    admit false positives — a tolerated, safe leak.
+    """
+    base = r.config.sb_base
+    if not (base <= word < base + used_sbs * SB_WORDS):
+        return False, 0, 0
+    sb = (word - base) // SB_WORDS
+    cls = int(r.mem.read(r.desc(sb, D_SIZE_CLASS)))
+    bs = int(r.mem.read(r.desc(sb, D_BLOCK_SIZE)))
+    if cls == LARGE_CONT:
+        return False, 0, 0
+    if cls == LARGE_CLASS:
+        if bs > 0 and word == r.heap.sb_word(sb):
+            return True, LARGE_CLASS, bs
+        return False, 0, 0
+    if not (1 <= cls < layout.NUM_CLASSES) or bs <= 0:
+        return False, 0, 0
+    if bs != layout.class_block_size(cls):
+        return False, 0, 0
+    bw = bs // WORD if bs % WORD == 0 else max(1, -(-bs // WORD))
+    off = word - r.heap.sb_word(sb)
+    if off % bw != 0 or off + bw > SB_WORDS:
+        return False, 0, 0
+    return True, cls, bs
+
+
+def _conservative_targets(r, block_word: int, size_bytes: int):
+    """Vectorized conservative scan of one block (numpy fast path)."""
+    nwords = max(1, size_bytes // WORD)
+    vals = r.mem.read_block(block_word, nwords).astype(np.uint64)
+    tags = (vals >> np.uint64(48)) == np.uint64(pp.PPTR_TAG)
+    idxs = np.nonzero(tags)[0]
+    out = []
+    for k in idxs:
+        tgt = pp.decode(block_word + int(k), int(np.int64(vals[int(k)])))
+        if tgt is not None:
+            out.append((tgt, None))
+    return out
+
+
+def trace(r) -> dict[int, tuple[int, int]]:
+    """Mark phase: BFS from persistent roots (paper Fig. 3 ``collect``).
+
+    Returns {block_word: (size_class, size_bytes)} for every reachable block.
+    """
+    used_sbs = int(r.mem.read(layout.M_USED_SBS))
+    visited: dict[int, tuple[int, int]] = {}
+    pending: list[tuple[int, str | None]] = []
+
+    def visit(word: int, typename: str | None) -> None:
+        ok, cls, bs = _valid_block_start(r, word, used_sbs)
+        if ok and word not in visited:
+            visited[word] = (cls, bs)
+            pending.append((word, typename))
+
+    for i, typename in list(r._root_filters.items()):
+        root = r.heap.get_root(i)
+        if root is not None:
+            visit(root, typename)
+    # also trace any set roots without registered filters (conservative)
+    for i in range(layout.MAX_ROOTS):
+        root = r.heap.get_root(i)
+        if root is not None and i not in r._root_filters:
+            visit(root, None)
+
+    while pending:
+        word, typename = pending.pop()
+        _, bs = visited[word]
+        if typename is None:
+            for tgt, child in _conservative_targets(r, word, bs):
+                visit(tgt, child)
+        else:
+            fn = r.filters.get(typename)
+            for tgt, child in fn(r, word, bs):
+                visit(tgt, child)
+    return visited
+
+
+def recover(r) -> dict:
+    """Full recovery: steps 3 + 5–10.  Returns stats for the caller."""
+    t0 = time.perf_counter()
+    m = r.mem
+    # step 2: thread caches are empty in a fresh process; for in-process
+    # recovery (tests, partial-failure GC) drop them stop-the-world.
+    r.drop_all_caches()
+    # step 3: empty global lists
+    m.write(layout.M_FREE_HEAD, pack_head(-1, 0))
+    for c in range(layout.NUM_CLASSES):
+        m.write(layout.M_PARTIAL_HEADS + c, pack_head(-1, 0))
+
+    # step 5: mark
+    visited = trace(r)
+    t_mark = time.perf_counter()
+
+    # steps 6–9: sweep & rebuild
+    used_sbs = int(m.read(layout.M_USED_SBS))
+    by_sb: dict[int, list[int]] = {}
+    large_heads: dict[int, int] = {}       # sb -> span length
+    for word, (cls, bs) in visited.items():
+        sb = r.heap.sb_of(word)
+        if cls == LARGE_CLASS:
+            large_heads[sb] = -(-bs // layout.SB_SIZE)
+        else:
+            by_sb.setdefault(sb, []).append(word)
+
+    in_large_span: set[int] = set()
+    for sb, nsb in large_heads.items():
+        in_large_span.update(range(sb, sb + nsb))
+
+    n_free_sbs = n_partial = n_full = 0
+    for sb in range(used_sbs):
+        aw = r.desc(sb, D_ANCHOR)
+        if sb in in_large_span:
+            if sb in large_heads:
+                m.write(aw, pack_anchor(FULL, ANCHOR_NIL_AVAIL, 0, 0))
+                n_full += 1
+            else:
+                m.write(r.desc(sb, D_SIZE_CLASS), LARGE_CONT)
+            continue
+        marked = by_sb.get(sb)
+        if not marked:
+            m.write(aw, pack_anchor(EMPTY, ANCHOR_NIL_AVAIL, 0, 0))
+            _push(r, layout.M_FREE_HEAD, D_NEXT_FREE, sb)
+            n_free_sbs += 1
+            continue
+        cls = int(m.read(r.desc(sb, D_SIZE_CLASS)))
+        bs = layout.class_block_size(cls)
+        bw = bs // WORD
+        total = layout.blocks_per_sb(bs)
+        base = r.heap.sb_word(sb)
+        marked_idx = {(w - base) // bw for w in marked}
+        free_idx = [b for b in range(total) if b not in marked_idx]
+        if free_idx:
+            # rebuild the in-superblock free chain (transient words)
+            for a, b in zip(free_idx, free_idx[1:]):
+                wa = base + a * bw
+                m.write(wa, pp.encode(wa, base + b * bw))
+            last = base + free_idx[-1] * bw
+            m.write(last, pp.PPTR_NULL)
+            m.write(aw, pack_anchor(PARTIAL, free_idx[0], len(free_idx), 0))
+            _push(r, layout.M_PARTIAL_HEADS + cls, D_NEXT_PARTIAL, sb)
+            n_partial += 1
+        else:
+            m.write(aw, pack_anchor(FULL, ANCHOR_NIL_AVAIL, 0, 0))
+            n_full += 1
+
+    # step 10: write back all three regions, fence
+    m.drain()
+    m.fence()
+    t_end = time.perf_counter()
+    return {
+        "reachable_blocks": len(visited),
+        "free_superblocks": n_free_sbs,
+        "partial_superblocks": n_partial,
+        "full_superblocks": n_full,
+        "large_blocks": len(large_heads),
+        "mark_seconds": t_mark - t0,
+        "sweep_seconds": t_end - t_mark,
+        "total_seconds": t_end - t0,
+    }
+
+
+def _push(r, head_word: int, next_field: int, sb: int) -> None:
+    """Single-threaded (offline) list push — no CAS needed during recovery."""
+    idx, ctr = layout.unpack_head(r.mem.read(head_word))
+    r.mem.write(r.desc(sb, next_field), idx if idx >= 0 else -1)
+    r.mem.write(head_word, pack_head(sb, ctr + 1))

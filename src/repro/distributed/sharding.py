@@ -1,0 +1,157 @@
+"""Sharding rules for training (pjit auto-SPMD) and serving (shard_map).
+
+Training layout: 2-D "FSDP × TP" —
+
+  * batch over the data axes ("pod", "data");
+  * weight matrices sharded TP over "model" on their head/ffn dim and
+    FSDP over "data" on the other dim (ZeRO-3: optimizer state follows);
+  * embeddings vocab-sharded over "model" where divisible.
+
+Every rule is divisibility-checked against the actual dim: an axis that
+does not divide a dim is dropped (e.g. internvl2's vocab 92553 stays
+unsharded on "model").  This keeps one rule set valid across all ten
+architectures and both meshes.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def _fit(spec: P, shape, mesh) -> P:
+    """Drop axis names that do not evenly divide their dim."""
+    out = []
+    for i, entry in enumerate(spec):
+        if entry is None:
+            out.append(None)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        if i < len(shape) and shape[i] % size == 0:
+            out.append(entry)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def train_param_spec(path: str, shape, mesh, dp: str = "data",
+                     tp: str = "model") -> P:
+    last = path.split("/")[-1]
+    lead = 1 if path.startswith("units/") or "/units/" in f"/{path}" else 0
+    pre = (None,) * lead
+
+    def mk(*s):
+        full = pre + s + (None,) * (len(shape) - lead - len(s))
+        return _fit(P(*full), shape, mesh)
+
+    if "attn" in path:
+        if last in ("wq", "wk", "wv"):
+            return mk(dp, tp)
+        if last == "wo":
+            return mk(tp, dp)
+        return mk()                                   # biases
+    if "ffn" in path:
+        if last == "router":
+            return mk(dp, None)
+        if len(shape) - lead == 3:                    # moe experts [E, ·, ·]
+            import os
+            if os.environ.get("REPRO_MOE_NO_FSDP"):
+                # B2: fine-grained experts (d_ff 512) are tiny — replicate
+                # over data, shard only EP over model: zero FSDP collectives
+                return mk(tp, None, None)
+            if os.environ.get("REPRO_MOE_FSDP_NONCONTRACT"):
+                # perf fix: FSDP on the NON-contraction dim — sharding the
+                # contraction (d_model for wi, d_ff for wo) forces an
+                # all-reduce of the [E, cap, ·] dispatch buffer per layer
+                if last in ("wi", "wg"):
+                    return mk(tp, None, dp)
+                return mk(tp, dp, None)
+            if last in ("wi", "wg"):
+                return mk(tp, dp, None)
+            return mk(tp, None, dp)
+        if last in ("wi", "wg"):
+            return mk(dp, tp)
+        return mk(tp, dp)                             # wo
+    if "ssd" in path:
+        if last in ("in_z", "in_x", "in_dt"):
+            return mk(dp, tp)
+        if last == "in_bc":
+            return mk(dp, None)
+        if last == "conv_x_w":
+            return mk(None, tp)
+        if last in ("conv_x_b", "norm_w", "A_log", "dt_bias", "D"):
+            return mk(tp)
+        if last == "out_proj":
+            return mk(tp, dp)
+        return mk()
+    if "rglru" in path:
+        if last in ("in_x", "in_g"):
+            return mk(dp, tp)
+        if last == "conv_w":
+            return mk(None, tp)
+        if last in ("conv_b", "lam"):
+            return mk(tp)
+        if last in ("wa", "wx"):
+            return mk(dp, tp)
+        if last == "out":
+            return mk(tp, dp)
+        return mk()
+    if last in ("embed", "unembed"):
+        return _fit(P(tp, dp), shape, mesh)
+    return mk()                                       # norms etc.
+
+
+def tree_path_map(fn, tree, path=""):
+    if isinstance(tree, dict):
+        return {k: tree_path_map(fn, v, f"{path}/{k}".lstrip("/"))
+                for k, v in tree.items()}
+    return fn(path, tree)
+
+
+def train_param_specs(params_shape, mesh):
+    return tree_path_map(
+        lambda path, leaf: train_param_spec(path, leaf.shape, mesh),
+        params_shape)
+
+
+def train_param_shardings(params_shape, mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        train_param_specs(params_shape, mesh))
+
+
+def batch_spec(mesh) -> P:
+    dp = tuple(a for a in mesh.axis_names if a != "model")
+    return P(dp)
+
+
+def make_batch_constrainer(mesh):
+    """Returns f(x) pinning dim 0 of activations to the data axes.
+
+    XLA's auto-SPMD occasionally reshards attention intermediates from
+    batch-parallel to head-parallel (observed: full-batch f32 score
+    buffers).  An explicit constraint at every layer-unit boundary keeps
+    activations batch-sharded throughout.
+    """
+    if mesh is None:
+        return lambda x: x
+    dp = tuple(a for a in mesh.axis_names if a != "model")
+    size = 1
+    for a in dp:
+        size *= mesh.shape[a]
+
+    def constrain(x):
+        if x.ndim >= 1 and x.shape[0] % size == 0 and size > 1:
+            spec = P(dp, *([None] * (x.ndim - 1)))
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, spec))
+        return x
+
+    return constrain
+
+
+def opt_state_specs(params_specs):
+    """AdamW moments shard exactly like their parameters (ZeRO-3)."""
+    return {"m": params_specs, "v": params_specs}

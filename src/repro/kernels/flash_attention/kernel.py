@@ -1,0 +1,116 @@
+"""FlashAttention forward Pallas TPU kernel.
+
+TPU-native tiling: the grid's innermost dimension iterates KV blocks
+*sequentially per core*, so the running softmax state (m, l, acc) lives
+in VMEM scratch across grid steps — the canonical TPU flash schedule
+(contrast with the GPU warp-per-tile formulation; DESIGN.md §2).  GQA is
+handled by flattening query heads as (kv_head, group) and deriving the
+KV head index inside the BlockSpec index maps.
+
+Block shapes are MXU-aligned (multiples of 128 on the sequence dims,
+head_dim padded by the caller if needed).  Fully-masked causal blocks
+are skipped with ``pl.when``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, causal: bool, window: int,
+                  bq: int, bk: int, nk: int):
+    ik = pl.program_id(3)
+    iq = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    qpos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    kpos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    run = True
+    if causal:
+        # skip blocks strictly above the diagonal
+        run = (ik * bk) <= (iq * bq + bq - 1)
+    if window:
+        run = jnp.logical_and(run, (ik + 1) * bk - 1 >= 0)
+
+    @pl.when(run if not isinstance(run, bool) else True)
+    def _body():
+        q = q_ref[0].astype(jnp.float32) * scale          # [bq, d]
+        k = k_ref[0].astype(jnp.float32)                  # [bk, d]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        mask = jnp.ones((bq, bk), bool)
+        if causal:
+            mask = mask & (kpos <= qpos)
+        if window:
+            mask = mask & (kpos > qpos - window)
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        corr = jnp.exp(m_prev - m_new)
+        e = jnp.exp(s - m_new[:, None])
+        l_scr[...] = l_scr[...] * corr + e.sum(axis=1)
+        v = v_ref[0].astype(jnp.float32)
+        acc_scr[...] = acc_scr[...] * corr[:, None] + \
+            jax.lax.dot_general(e, v, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _final():
+        l = jnp.maximum(l_scr[...], 1e-20)
+        o_ref[0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = False):
+    """q: [B, H, S, dh]; k/v: [B, K, S, dh] (GQA).  Returns [B, H, S, dh]."""
+    B, H, S, dh = q.shape
+    K = k.shape[1]
+    g = H // K
+    bq = min(block_q, S)
+    bk = min(block_k, S)
+    assert S % bq == 0 and S % bk == 0
+    nq, nk = S // bq, S // bk
+    scale = dh ** -0.5
+
+    qf = q.reshape(B * H, S, dh)
+    kf = k.reshape(B * K, S, dh)
+    vf = v.reshape(B * K, S, dh)
+
+    grid = (B, H, nq, nk)
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, scale=scale, causal=causal,
+                          window=window, bq=bq, bk=bk, nk=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, dh), lambda b, h, iq, ik: (b * H + h, iq, 0)),
+            pl.BlockSpec((1, bk, dh),
+                         lambda b, h, iq, ik: (b * K + h // g, ik, 0)),
+            pl.BlockSpec((1, bk, dh),
+                         lambda b, h, iq, ik: (b * K + h // g, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, dh),
+                               lambda b, h, iq, ik: (b * H + h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, S, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),      # running max
+            pltpu.VMEM((bq,), jnp.float32),      # running denominator
+            pltpu.VMEM((bq, dh), jnp.float32),   # output accumulator
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(B, H, S, dh)

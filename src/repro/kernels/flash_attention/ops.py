@@ -1,0 +1,30 @@
+"""jit'd public wrapper for the flash-attention kernel.
+
+``interpret=True`` (the default off-TPU) runs the kernel body through
+the Pallas interpreter for correctness validation; on TPU hardware the
+same call compiles to a Mosaic kernel with the BlockSpec VMEM tiling.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .kernel import flash_attention
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k", "interpret"))
+def flash_attention_op(q, k, v, *, causal: bool = True, window: int = 0,
+                       block_q: int = 128, block_k: int = 128,
+                       interpret: bool | None = None):
+    if interpret is None:
+        interpret = not _on_tpu()
+    return flash_attention(q, k, v, causal=causal, window=window,
+                           block_q=block_q, block_k=block_k,
+                           interpret=interpret)

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the flash-attention kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """q: [B, H, S, dh]; k/v: [B, K, S, dh].  fp32 softmax, exact."""
+    B, H, S, dh = q.shape
+    K = k.shape[1]
+    g = H // K
+    qg = q.reshape(B, K, g, S, dh).astype(jnp.float32) * (dh ** -0.5)
+    s = jnp.einsum("bkgsd,bktd->bkgst", qg, k.astype(jnp.float32))
+    ii = jnp.arange(S)
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask = mask & (ii[None, :] <= ii[:, None])
+    if window:
+        mask = mask & (ii[None, :] > ii[:, None] - window)
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgst,bktd->bkgsd", p, v.astype(jnp.float32))
+    return o.reshape(B, H, S, dh).astype(q.dtype)

@@ -1,0 +1,71 @@
+"""KV-append Pallas kernel: scatter one token's K/V into its page slot.
+
+The write address comes from the allocator's block table (scalar
+prefetch) — the storage face of the paged arena.  The arena aliases
+input↔output so the update is in-place at whole-arena granularity; each
+visited page block is copied through VMEM and its one slot row updated
+(distinct sequences own distinct pages — engine contract — so grid
+steps never collide).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kv_update_kernel(pid_ref, slot_ref, kn_ref, vn_ref, ki_ref, vi_ref,
+                      ko_ref, vo_ref):
+    b = pl.program_id(0)
+    slot = slot_ref[b]
+    ko_ref[...] = ki_ref[...]
+    vo_ref[...] = vi_ref[...]
+
+    @pl.when(pid_ref[b] >= 0)
+    def _write():
+        ko_ref[0, slot] = kn_ref[0].astype(ko_ref.dtype)
+        vo_ref[0, slot] = vn_ref[0].astype(vo_ref.dtype)
+
+
+def kv_update(arena_k, arena_v, k_new, v_new, page_ids, slots, *,
+              interpret: bool = False):
+    """arena_k/v: [pages, page, K, dh]; k/v_new: [B, K, dh];
+    page_ids/slots: [B] (−1 page id ⇒ skip; the last page is the reserved
+    dump target and must not hold live data).  Aliased in-place update."""
+    B = k_new.shape[0]
+    npages, page, K, dh = arena_k.shape
+    # invalid lanes (pid −1) are routed to the RESERVED dump page (the
+    # last page): a block copy of page 0 here could clobber another
+    # lane's earlier in-place write (grid steps share the aliased buffer)
+    dump = npages - 1
+    page_spec = pl.BlockSpec(
+        (1, page, K, dh),
+        lambda b, pid, sl: (jnp.where(pid[b] < 0, dump, pid[b]), 0, 0, 0))
+    tok_spec = pl.BlockSpec((1, K, dh), lambda b, pid, sl: (b, 0, 0))
+    out = pl.pallas_call(
+        _kv_update_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(B,),
+            in_specs=[tok_spec, tok_spec, page_spec, page_spec],
+            out_specs=[page_spec, page_spec],
+        ),
+        out_shape=[jax.ShapeDtypeStruct(arena_k.shape, arena_k.dtype),
+                   jax.ShapeDtypeStruct(arena_v.shape, arena_v.dtype)],
+        input_output_aliases={4: 0, 5: 1},   # indices count scalar-prefetch args
+        interpret=interpret,
+    )(page_ids, slots, k_new, v_new, arena_k, arena_v)
+    return out
+
+
+def kv_update_ref(arena_k, arena_v, k_new, v_new, page_ids, slots):
+    """Pure-jnp oracle (dump-row trick for invalid ids)."""
+    dump = arena_k.shape[0]
+    pid = jnp.where(page_ids >= 0, page_ids, dump)
+    ak = jnp.concatenate([arena_k, jnp.zeros_like(arena_k[:1])])
+    av = jnp.concatenate([arena_v, jnp.zeros_like(arena_v[:1])])
+    ak = ak.at[pid, slots].set(k_new.astype(ak.dtype))
+    av = av.at[pid, slots].set(v_new.astype(av.dtype))
+    return ak[:-1], av[:-1]

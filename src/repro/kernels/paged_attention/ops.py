@@ -1,0 +1,18 @@
+"""jit'd public wrapper for the paged-attention decode kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .kernel import paged_attention
+
+
+@functools.partial(jax.jit, static_argnames=("window", "interpret"))
+def paged_attention_op(q, arena_k, arena_v, block_table, lengths, *,
+                       window: int = 0, interpret: bool | None = None):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return paged_attention(q, arena_k, arena_v, block_table, lengths,
+                           window=window, interpret=interpret)

@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for paged decode attention."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def paged_attention_ref(q, arena_k, arena_v, block_table, lengths, *,
+                        window: int = 0):
+    B, H, dh = q.shape
+    npages, page, K, _ = arena_k.shape
+    P = block_table.shape[1]
+    g = H // K
+    bt = jnp.clip(block_table, 0)
+    k = arena_k[bt].reshape(B, P * page, K, dh).astype(jnp.float32)
+    v = arena_v[bt].reshape(B, P * page, K, dh).astype(jnp.float32)
+    qg = q.reshape(B, K, g, dh).astype(jnp.float32) * (dh ** -0.5)
+    s = jnp.einsum("bkgd,btkd->bkgt", qg, k)
+    pos = jnp.arange(P * page)[None]
+    valid = (pos < lengths[:, None]) & \
+        jnp.repeat(block_table >= 0, page, axis=1)
+    if window:
+        valid = valid & (pos > (lengths[:, None] - 1 - window))
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgt,btkd->bkgd", p, v)
+    return o.reshape(B, H, dh).astype(q.dtype)

@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the SSD scan kernel — delegates to the model's
+chunked implementation (layers.ssd.ssd_chunked)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ...layers.ssd import ssd_chunked
+
+
+def ssd_scan_ref(xdt, loga, B, C, *, chunk: int = 128):
+    Bz, H, S, P = xdt.shape
+    N = B.shape[-1]
+    Q = min(chunk, S)
+    nc = S // Q
+    xdt_c = xdt.transpose(0, 2, 1, 3).reshape(Bz, nc, Q, H, P)
+    loga_c = loga.transpose(0, 2, 1).reshape(Bz, nc, Q, H)
+    Bc = B.reshape(Bz, nc, Q, N)
+    Cc = C.reshape(Bz, nc, Q, N)
+    y, _ = ssd_chunked(None, xdt_c.astype(jnp.float32),
+                       loga_c.astype(jnp.float32),
+                       Bc.astype(jnp.float32), Cc.astype(jnp.float32))
+    return y.reshape(Bz, S, H, P).transpose(0, 2, 1, 3)

@@ -1,0 +1,330 @@
+"""Roofline-term extraction from compiled (post-SPMD) HLO text.
+
+``compiled.cost_analysis()`` counts each ``while`` body **once**, so a
+scan-over-layers model under-reports FLOPs/bytes by ~num_layers (verified
+in this container: scan of 8 matmuls reports 1×).  This analyzer walks
+the optimized HLO, multiplies loop bodies by their trip counts, and also
+accumulates per-collective byte counts (absent from cost_analysis
+altogether).
+
+Costs per op (per device — post-SPMD shapes):
+  dot/convolution   2 · numel(out) · contraction-size FLOPs
+  fusion            bytes = operands + outputs (the fused-traffic model);
+                    FLOPs from any dots inside its computation
+  elementwise/other bytes = operands + outputs, FLOPs ≈ numel(out)
+  all-gather        bytes ≈ numel(out)           (receives (n−1)/n ≈ 1)
+  reduce-scatter    bytes ≈ numel(in)
+  all-reduce        bytes ≈ 2 · numel(in)        (ring: RS + AG)
+  all-to-all        bytes ≈ numel(in)
+  collective-permute bytes ≈ numel(in)
+
+Trip counts come from integer constants in the loop condition
+computation (lax.scan lowers to ``lt(counter, L)``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*?)\s*([\w\-]+)\((.*)\)")
+_CALL_RE = re.compile(r"(?:calls|to_apply|body|condition|branch_computations)="
+                      r"[{]?%?([\w.\-]+)")
+
+
+def _shape_bytes(stype: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(stype):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _dtype_size_of(stype: str) -> int:
+    m = _SHAPE_RE.search(stype)
+    return _DTYPE_BYTES.get(m.group(1), 4) if m else 4
+
+
+def _shape_numel(stype: str) -> int:
+    m = _SHAPE_RE.search(stype)
+    if not m:
+        return 0
+    n = 1
+    for d in m.group(2).split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    out_type: str
+    opcode: str
+    args: str
+    line: str
+
+
+@dataclasses.dataclass
+class Costs:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: float = 0.0
+    coll_counts: dict = dataclasses.field(default_factory=dict)
+
+    def add(self, other: "Costs", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        self.coll_bytes += other.coll_bytes * mult
+        for k, v in other.coll_counts.items():
+            self.coll_counts[k] = self.coll_counts.get(k, 0) + v * mult
+
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+_ARG_NAME_RE = re.compile(r"%([\w.\-]+)")
+
+
+class HloModule:
+    def __init__(self, text: str):
+        self.computations: dict[str, list[Op]] = {}
+        self.types: dict[str, str] = {}        # op name -> output type
+        cur = None
+        for line in text.splitlines():
+            s = re.sub(r"/\*.*?\*/", "", line).strip()
+            if ("{" in s and ("->" in s or s.startswith("ENTRY"))
+                    and "=" not in s.split("{")[0]):
+                m2 = re.match(r"^(?:ENTRY\s+)?%?([\w.\-]+)", s)
+                if m2:
+                    cur = m2.group(1)
+                    self.computations[cur] = []
+                continue
+            if s == "}" or s.startswith("}"):
+                continue
+            om = _OP_RE.match(s)
+            if om and cur is not None:
+                op = Op(om.group(1), om.group(2), om.group(3), om.group(4), s)
+                self.computations[cur].append(op)
+                self.types[op.name] = op.out_type
+        self.entry = self._find_entry(text)
+
+    def _arg_bytes(self, op: Op) -> int:
+        """Operand bytes resolved through the name→type map."""
+        total = 0
+        for name in _ARG_NAME_RE.findall(op.args):
+            total += _shape_bytes(self.types.get(name, ""))
+        return total
+
+    def _arg_shapes(self, op: Op) -> list[list[int]]:
+        out = []
+        for name in _ARG_NAME_RE.findall(op.args):
+            t = self.types.get(name, "")
+            m = _SHAPE_RE.search(t)
+            if m:
+                out.append([int(d) for d in m.group(2).split(",") if d])
+        return out
+
+    def _find_entry(self, text: str) -> str:
+        m = re.search(r"ENTRY\s+%?([\w.\-]+)", text)
+        if m:
+            return m.group(1)
+        return next(iter(self.computations))
+
+    # ------------------------------------------------------------------
+    def trip_count(self, cond_name: str) -> int:
+        ops = self.computations.get(cond_name, [])
+        best = 1
+        for op in ops:
+            if op.opcode == "constant":
+                m = re.search(r"constant\((\d+)\)", op.line)
+                if m:
+                    best = max(best, int(m.group(1)))
+        return best
+
+    def _dot_flops(self, op: Op) -> float:
+        out_n = _shape_numel(op.out_type)
+        # contraction size: lhs shape numel / product of lhs free dims —
+        # approximate via lhs numel / (out numel / rhs free) is fiddly;
+        # use lhs_contracting_dims against the lhs operand shape instead.
+        m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.line)
+        shapes = self._arg_shapes(op)
+        if not shapes:
+            return 0.0
+        lhs_dims = shapes[0]
+        contr = 1
+        if m:
+            for ix in m.group(1).split(","):
+                if ix and int(ix) < len(lhs_dims):
+                    contr *= lhs_dims[int(ix)]
+        return 2.0 * out_n * max(contr, 1)
+
+    def comp_costs(self, name: str, _memo=None) -> Costs:
+        if _memo is None:
+            _memo = {}
+        if name in _memo:
+            return _memo[name]
+        total = Costs()
+        _memo[name] = total                 # break recursion cycles
+        for op in self.computations.get(name, []):
+            oc = op.opcode
+            if oc == "while":
+                calls = dict(re.findall(r"(body|condition)=%?([\w.\-]+)",
+                                        op.line))
+                trips = self.trip_count(calls.get("condition", ""))
+                body = self.comp_costs(calls.get("body", ""), _memo)
+                total.add(body, trips)
+            elif oc in ("call", "fusion", "conditional", "map",
+                        "async-start"):
+                for sub in _CALL_RE.findall(op.line):
+                    sc = self.comp_costs(sub, _memo)
+                    if oc == "fusion":
+                        # fused interior traffic stays in registers/VMEM:
+                        # count only FLOPs + any collectives, plus the
+                        # fusion's boundary bytes below
+                        total.flops += sc.flops
+                        total.coll_bytes += sc.coll_bytes
+                        for kk, vv in sc.coll_counts.items():
+                            total.coll_counts[kk] = \
+                                total.coll_counts.get(kk, 0) + vv
+                    else:
+                        total.add(sc)
+                if oc == "fusion":
+                    handled = False
+                    out_n = _shape_numel(op.out_type)
+                    for sub in _CALL_RE.findall(op.line):
+                        ops = self.computations.get(sub, [])
+                        dus = [o for o in ops
+                               if o.opcode == "dynamic-update-slice"]
+                        if dus and _shape_numel(dus[-1].out_type) == out_n:
+                            # in-place (aliased) stacked update on TPU:
+                            # traffic = the update slice, not the stack
+                            handled = True
+                            shapes = self._arg_shapes(dus[-1])
+                            upd = 1
+                            if len(shapes) >= 2:
+                                for d in shapes[1]:
+                                    upd *= d
+                            total.bytes += 2 * upd * _dtype_size_of(
+                                dus[-1].out_type)
+                        elif ops and all(o.opcode in (
+                                "convert", "bitcast", "copy", "reshape",
+                                "transpose", "parameter", "constant",
+                                "broadcast") for o in ops):
+                            # pure dtype/layout fusion: XLA-CPU emulates
+                            # bf16 arithmetic via f32 round-trips; on TPU
+                            # (native bf16) this traffic does not exist
+                            handled = True
+                    if not handled:
+                        # operands consumed through an interior
+                        # dynamic-slice count as the slice, not the whole
+                        # (possibly unit-stacked) array
+                        in_bytes = 0
+                        interior_ds = []
+                        for sub in _CALL_RE.findall(op.line):
+                            interior_ds += [
+                                o for o in self.computations.get(sub, [])
+                                if o.opcode == "dynamic-slice"]
+                        if interior_ds:
+                            in_bytes = sum(_shape_bytes(o.out_type)
+                                           for o in interior_ds)
+                        else:
+                            in_bytes = self._arg_bytes(op)
+                        total.bytes += in_bytes + _shape_bytes(op.out_type)
+            elif oc in ("dot", "convolution"):
+                total.flops += self._dot_flops(op)
+                total.bytes += self._arg_bytes(op) + \
+                    _shape_bytes(op.out_type)
+            elif any(oc.startswith(c) for c in COLLECTIVES):
+                kind = next(c for c in COLLECTIVES if oc.startswith(c))
+                if kind == "all-gather":
+                    nb = _shape_bytes(op.out_type)
+                elif kind == "all-reduce":
+                    nb = 2 * self._arg_bytes(op)
+                else:
+                    nb = self._arg_bytes(op)
+                total.coll_bytes += nb
+                total.coll_counts[kind] = total.coll_counts.get(kind, 0) + 1
+                total.bytes += self._arg_bytes(op) + \
+                    _shape_bytes(op.out_type)
+            elif oc in ("parameter", "constant", "get-tuple-element",
+                        "tuple", "bitcast", "after-all", "copy-start",
+                        "copy-done"):
+                continue
+            elif oc == "dynamic-update-slice":
+                # aliased in-place: traffic = the update slice (read+write),
+                # NOT the full destination array (the scan-carry stacks are
+                # multi-GiB; counting them per step inflates bytes ~50×)
+                shapes = self._arg_shapes(op)
+                upd = 1
+                if len(shapes) >= 2:
+                    for d in shapes[1]:
+                        upd *= d
+                total.bytes += 2 * upd * _dtype_size_of(op.out_type)
+            elif oc == "dynamic-slice":
+                total.bytes += 2 * _shape_bytes(op.out_type)
+            elif oc == "gather":
+                total.bytes += 2 * _shape_bytes(op.out_type)
+            elif oc == "scatter":
+                shapes = self._arg_shapes(op)
+                upd = 1
+                if len(shapes) >= 3:
+                    for d in shapes[2]:
+                        upd *= d
+                total.bytes += 2 * upd * _dtype_size_of(op.out_type)
+            else:
+                ob = _shape_bytes(op.out_type)
+                total.flops += _shape_numel(op.out_type)
+                total.bytes += self._arg_bytes(op) + ob
+        # fusions inside: their internal dots were added above; internal
+        # elementwise double-counts a little — acceptable at roofline scale
+        return total
+
+    def entry_costs(self) -> Costs:
+        return self.comp_costs(self.entry)
+
+
+# hardware constants: TPU v5e
+PEAK_FLOPS = 197e12        # bf16 per chip
+HBM_BW = 819e9             # bytes/s per chip
+ICI_BW = 50e9              # bytes/s per link (~per chip, simplistic)
+
+
+def roofline(costs: Costs, chips: int) -> dict:
+    """Three roofline terms (seconds, per step) from per-device costs."""
+    t_compute = costs.flops / PEAK_FLOPS
+    t_memory = costs.bytes / HBM_BW
+    t_coll = costs.coll_bytes / ICI_BW
+    dominant = max(
+        (("compute", t_compute), ("memory", t_memory),
+         ("collective", t_coll)), key=lambda kv: kv[1])[0]
+    return {
+        "flops_per_device": costs.flops,
+        "bytes_per_device": costs.bytes,
+        "collective_bytes_per_device": costs.coll_bytes,
+        "collective_counts": costs.coll_counts,
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "chips": chips,
+    }
+
+
+def analyze(compiled_text: str, chips: int) -> dict:
+    mod = HloModule(compiled_text)
+    return roofline(mod.entry_costs(), chips)

@@ -1,0 +1,104 @@
+"""ShapeDtypeStruct input specs for every (arch × shape) dry-run cell.
+
+Never allocates device memory: abstract params via ``jax.eval_shape``,
+abstract batches/state via ShapeDtypeStruct — the shannon/kernels
+pattern.  Frontend-stub archs ([audio]/[vlm]) receive precomputed
+frame/patch embeddings instead of tokens.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs import SHAPES
+from ..distributed import sharding as shrules
+from ..models import transformer as T
+from ..models.config import ModelConfig
+from ..serving import decode as dec
+from ..train.optimizer import init_opt_state
+
+
+def sds(shape, dtype, mesh=None, spec=None):
+    sharding = NamedSharding(mesh, spec) if mesh is not None else None
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+
+
+def abstract_params(cfg: ModelConfig, mesh=None, layout: str = "train"):
+    shapes = jax.eval_shape(
+        lambda: T.init_params(cfg, jax.random.PRNGKey(0)))
+    if mesh is None:
+        return shapes
+    if layout == "train":
+        specs = shrules.train_param_specs(shapes, mesh)
+    else:
+        specs = dec.serve_param_specs(cfg, shapes, mesh.shape["model"])
+    return jax.tree.map(
+        lambda s, sp: jax.ShapeDtypeStruct(
+            s.shape, s.dtype, sharding=NamedSharding(mesh, sp)),
+        shapes, specs)
+
+
+def abstract_opt_state(params_abs, mesh):
+    shapes = jax.eval_shape(init_opt_state, params_abs)
+
+    def shard_like(s, ref):
+        if not s.shape:
+            return jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                        sharding=NamedSharding(mesh, P()))
+        return jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=ref.sharding)
+
+    return {
+        "m": jax.tree.map(shard_like, shapes["m"], params_abs),
+        "v": jax.tree.map(shard_like, shapes["v"], params_abs),
+        "step": jax.ShapeDtypeStruct((), jnp.int32,
+                                     sharding=NamedSharding(mesh, P())),
+    }
+
+
+def train_batch_specs(cfg: ModelConfig, shape_name: str, mesh):
+    info = SHAPES[shape_name]
+    B, S = info["global_batch"], info["seq_len"]
+    dp = shrules.batch_spec(mesh)
+    if cfg.frontend:
+        return {
+            "embeds": sds((B, S, cfg.d_model), jnp.bfloat16, mesh, dp),
+            "labels": sds((B, S), jnp.int32, mesh, dp),
+        }
+    return {
+        "tokens": sds((B, S), jnp.int32, mesh, dp),
+        "labels": sds((B, S), jnp.int32, mesh, dp),
+    }
+
+
+def prefill_batch_specs(cfg: ModelConfig, shape_name: str, mesh):
+    info = SHAPES[shape_name]
+    B, S = info["global_batch"], info["seq_len"]
+    dp = shrules.batch_spec(mesh)
+    if cfg.frontend:
+        return {"embeds": sds((B, S, cfg.d_model), jnp.bfloat16, mesh, dp)}
+    return {"tokens": sds((B, S), jnp.int32, mesh, dp)}
+
+
+def decode_state_specs(cfg: ModelConfig, shape_name: str, mesh):
+    """Abstract decode state + token batch for a decode-shape cell."""
+    info = SHAPES[shape_name]
+    B, S = info["global_batch"], info["seq_len"]
+    dp_axes = tuple(a for a in mesh.axis_names if a != "model")
+    dp_total = 1
+    for a in dp_axes:
+        dp_total *= mesh.shape[a]
+    batch_sharded = B % dp_total == 0 and B >= dp_total
+    dstate_shapes = jax.eval_shape(
+        lambda: dec.make_dstate(cfg, batch=B, max_seq=S,
+                                dp_shards=dp_total))
+    sspecs = dec.dstate_specs(cfg, mesh, batch_sharded)
+    dstate_abs = jax.tree.map(
+        lambda s, sp: jax.ShapeDtypeStruct(
+            s.shape, s.dtype, sharding=NamedSharding(mesh, sp)),
+        dstate_shapes, sspecs, is_leaf=lambda x: isinstance(
+            x, jax.ShapeDtypeStruct))
+    tok_spec = P(dp_axes) if batch_sharded else P()
+    tokens = sds((B,), jnp.int32, mesh, tok_spec)
+    return dstate_abs, tokens, batch_sharded

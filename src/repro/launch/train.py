@@ -1,0 +1,63 @@
+"""Training launcher.
+
+CPU-scale example (runs in this container):
+  PYTHONPATH=src python -m repro.launch.train --arch starcoder2-3b \
+      --smoke --steps 50 --ckpt /tmp/train.heap
+
+On a TPU fleet the same driver runs the full config with the production
+mesh (remove --smoke); per-host data sharding comes from the
+deterministic pipeline's host index.
+"""
+
+import argparse
+
+import jax
+
+from ..checkpoint.manager import CheckpointManager
+from ..configs import get_config, get_smoke_config
+from ..core.ralloc import Ralloc
+from ..data.pipeline import TokenStream
+from ..distributed.compression import Int8ErrorFeedback
+from ..train.loop import Trainer
+from ..train.optimizer import AdamWConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--compress-grads", action="store_true")
+    args = ap.parse_args()
+
+    cfg = (get_smoke_config if args.smoke else get_config)(args.arch)
+    ckpt = None
+    if args.ckpt:
+        heap = Ralloc(args.ckpt, 1 << 30)
+        ckpt = CheckpointManager(heap)
+    stream = TokenStream(cfg.vocab_size, args.batch, args.seq, seed=0,
+                         frontend_dim=cfg.d_model if cfg.frontend else 0)
+    trainer = Trainer(cfg, AdamWConfig(lr=args.lr),
+                      ckpt=ckpt, ckpt_every=args.ckpt_every,
+                      microbatches=args.microbatches)
+    if args.compress_grads:
+        trainer.step_fn = jax.jit(
+            __import__("repro.train.step", fromlist=["make_train_step"])
+            .make_train_step(cfg, AdamWConfig(lr=args.lr),
+                             microbatches=args.microbatches,
+                             compressor=Int8ErrorFeedback(trainer.params)))
+    hist = trainer.run(stream, steps=args.steps)
+    print(f"final loss {hist[-1]:.4f}; straggler events: "
+          f"{trainer.straggler_events}")
+    if ckpt:
+        heap.close()
+
+
+if __name__ == "__main__":
+    main()

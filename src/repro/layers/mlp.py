@@ -1,0 +1,39 @@
+"""Feed-forward variants used by the assigned architectures.
+
+  * ``swiglu``        — gated SiLU (LLaMA / Qwen2.5 / Moonlight)
+  * ``squared_relu``  — non-gated ReLU² (Nemotron-4, Primer)
+  * ``gelu``          — non-gated GELU (StarCoder2 / granite GPT-BigCode
+                        lineage, HuBERT, ViT stubs)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import param
+
+
+def init_mlp(cfg, key):
+    k1, k2, k3 = jax.random.split(key, 3)
+    d, f = cfg.d_model, cfg.d_ff
+    if cfg.mlp == "swiglu":
+        return {"wi": param(k1, (d, f), cfg.dtype),
+                "wg": param(k2, (d, f), cfg.dtype),
+                "wo": param(k3, (f, d), cfg.dtype)}
+    return {"wi": param(k1, (d, f), cfg.dtype),
+            "wo": param(k3, (f, d), cfg.dtype)}
+
+
+def apply_mlp(cfg, p, x):
+    if cfg.mlp == "swiglu":
+        h = jnp.einsum("...d,df->...f", x, p["wi"])
+        g = jnp.einsum("...d,df->...f", x, p["wg"])
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * h
+    else:
+        h = jnp.einsum("...d,df->...f", x, p["wi"])
+        if cfg.mlp == "squared_relu":
+            h = jnp.square(jax.nn.relu(h))
+        else:
+            h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    return jnp.einsum("...f,fd->...d", h, p["wo"])

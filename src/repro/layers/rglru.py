@@ -1,0 +1,90 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+Full-sequence mode uses ``lax.associative_scan`` over the elementwise
+linear recurrence h_t = a_t ⊙ h_{t-1} + b_t — O(log S) depth on TPU.
+Decode keeps per-sequence state pages in the Ralloc arena (constant
+memory; together with the bounded local-attention window this is why
+recurrentgemma runs the ``long_500k`` shape).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import param
+
+_C = 8.0  # Griffin's fixed exponent scale
+
+
+def init_rglru(cfg, key):
+    ks = jax.random.split(key, 7)
+    D, W = cfg.d_model, cfg.lru_width
+    return {
+        "in_x": param(ks[0], (D, W), cfg.dtype),      # recurrent branch
+        "in_g": param(ks[1], (D, W), cfg.dtype),      # gelu gate branch
+        "conv_w": param(ks[2], (cfg.conv_width, W), cfg.dtype,
+                        scale=cfg.conv_width ** -0.5),
+        "conv_b": jnp.zeros((W,), cfg.dtype),
+        "wa": param(ks[3], (W, W), cfg.dtype),        # recurrence gate r_t
+        "wx": param(ks[4], (W, W), cfg.dtype),        # input gate i_t
+        "lam": jnp.full((W,), 2.0, jnp.float32),      # Λ (a = σ(Λ) ≈ 0.88)
+        "out": param(ks[5], (W, D), cfg.dtype),
+    }
+
+
+def _conv(cfg, p, u):
+    W = cfg.conv_width
+    pad = jnp.pad(u, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(pad[:, k:k + u.shape[1], :] * p["conv_w"][k] for k in range(W))
+    return (out + p["conv_b"]).astype(u.dtype)
+
+
+def _gates(p, x):
+    r = jax.nn.sigmoid(jnp.einsum("...w,wv->...v", x, p["wa"])
+                       .astype(jnp.float32))
+    i = jax.nn.sigmoid(jnp.einsum("...w,wv->...v", x, p["wx"])
+                       .astype(jnp.float32))
+    log_a = -_C * r * jax.nn.softplus(p["lam"])       # log a_t  (a_t ∈ (0,1))
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.clip(1.0 - a * a, 1e-12)) * (i * x.astype(jnp.float32))
+    return a, b
+
+
+def rglru_forward(cfg, p, x):
+    """x: [B, S, D] → [B, S, D] via associative scan over the recurrence."""
+    xr = jnp.einsum("bsd,dw->bsw", x, p["in_x"])
+    xg = jnp.einsum("bsd,dw->bsw", x, p["in_g"])
+    xr = _conv(cfg, p, xr)
+    a, b = _gates(p, xr)
+
+    def combine(u, v):
+        au, bu = u
+        av, bv = v
+        return au * av, bu * av + bv
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    y = h * jax.nn.gelu(xg.astype(jnp.float32))
+    return jnp.einsum("bsw,wd->bsd", y.astype(x.dtype), p["out"])
+
+
+def rglru_init_state(cfg, batch):
+    return {
+        "h": jnp.zeros((batch, cfg.lru_width), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, cfg.lru_width),
+                          jnp.float32),
+    }
+
+
+def rglru_decode(cfg, p, x, state):
+    """Single-token update.  x: [B, D] → ([B, D], state')."""
+    xr = jnp.einsum("bd,dw->bw", x, p["in_x"]).astype(jnp.float32)
+    xg = jnp.einsum("bd,dw->bw", x, p["in_g"])
+    hist = jnp.concatenate([state["conv"], xr[:, None, :]], axis=1)
+    conv = jnp.einsum("bwc,wc->bc", hist, p["conv_w"].astype(jnp.float32))
+    conv = (conv + p["conv_b"].astype(jnp.float32)).astype(x.dtype)
+    a, b = _gates(p, conv)
+    h = a * state["h"] + b
+    y = h * jax.nn.gelu(xg.astype(jnp.float32))
+    out = jnp.einsum("bw,wd->bd", y.astype(x.dtype), p["out"])
+    return out, {"h": h, "conv": hist[:, 1:, :]}

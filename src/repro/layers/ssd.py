@@ -1,0 +1,169 @@
+"""Mamba-2 (SSD — state-space duality, arXiv:2405.21060).
+
+Chunked implementation: within-chunk interactions use the quadratic
+"attention-like" dual form (MXU-friendly Q×Q matmuls), while the O(S)
+inter-chunk state is carried by a ``lax.scan``.  Decode is a single
+recurrent update over persistent per-sequence state pages — which the
+paged-state manager allocates from the Ralloc arena exactly like KV
+pages (constant memory per sequence: the reason this arch runs the
+``long_500k`` shape).
+
+Projections are kept *split* (z | x | BC | dt) rather than fused so that
+tensor parallelism can shard z/x/dt by SSM head and replicate the small
+B/C/state projections (see ``serving.tp_layers``).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import param
+
+
+def d_inner(cfg):
+    return cfg.expand * cfg.d_model
+
+
+def n_heads(cfg):
+    return d_inner(cfg) // cfg.ssm_head_dim
+
+
+def init_mamba2(cfg, key):
+    ks = jax.random.split(key, 8)
+    D, Di, N, H = cfg.d_model, d_inner(cfg), cfg.ssm_state, n_heads(cfg)
+    return {
+        "in_z": param(ks[0], (D, Di), cfg.dtype),
+        "in_x": param(ks[1], (D, Di), cfg.dtype),
+        "in_bc": param(ks[2], (D, 2 * N), cfg.dtype),
+        "in_dt": param(ks[3], (D, H), cfg.dtype),
+        "conv_x_w": param(ks[4], (cfg.conv_width, Di), cfg.dtype,
+                          scale=cfg.conv_width ** -0.5),
+        "conv_x_b": jnp.zeros((Di,), cfg.dtype),
+        "conv_bc_w": param(ks[5], (cfg.conv_width, 2 * N), cfg.dtype,
+                           scale=cfg.conv_width ** -0.5),
+        "conv_bc_b": jnp.zeros((2 * N,), cfg.dtype),
+        "A_log": jnp.zeros((H,), jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "norm_w": jnp.ones((Di,), jnp.float32),
+        "out_proj": param(ks[6], (Di, D), cfg.dtype),
+    }
+
+
+def _causal_conv(u, w, b):
+    """Depthwise causal conv1d over [B, S, C]."""
+    W = w.shape[0]
+    pad = jnp.pad(u, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(pad[:, k:k + u.shape[1], :] * w[k] for k in range(W))
+    return jax.nn.silu((out + b).astype(jnp.float32)).astype(u.dtype)
+
+
+def _gated_norm(y, z, w, eps=1e-6):
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = y * jax.lax.rsqrt(jnp.mean(y * y, axis=-1, keepdims=True) + eps)
+    return y * w
+
+
+def ssd_chunked(cfg, xdt, loga, Bc, Cc, h0=None):
+    """Core chunked SSD over pre-discretized inputs.
+
+    xdt:  [B, nc, Q, H, P] (x ⊙ dt, fp32)
+    loga: [B, nc, Q, H]    (dt · A, fp32 log-decay)
+    Bc/Cc:[B, nc, Q, N]
+    Returns (y [B, nc, Q, H, P], h_final [B, H, P, N]).
+    """
+    Bsz, nc, Q, H, P = xdt.shape
+    N = Bc.shape[-1]
+    cums = jnp.cumsum(loga, axis=2)
+    G = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)
+    rel = cums[:, :, :, None, :] - cums[:, :, None, :, :]
+    ii = jnp.arange(Q)
+    causal = ii[:, None] >= ii[None, :]
+    L = jnp.where(causal[None, None, :, :, None], jnp.exp(rel), 0.0)
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", G[..., None] * L, xdt)
+
+    decay_out = jnp.exp(cums[:, :, -1:, :] - cums)
+    chunk_state = jnp.einsum("bcjn,bcjh,bcjhp->bchpn", Bc, decay_out, xdt)
+    chunk_decay = jnp.exp(cums[:, :, -1, :])
+
+    def step(h, inp):
+        st, dec = inp
+        return h * dec[:, :, None, None] + st, h
+
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, H, P, N), jnp.float32)
+    h_fin, h_ins = jax.lax.scan(
+        step, h0, (chunk_state.transpose(1, 0, 2, 3, 4),
+                   chunk_decay.transpose(1, 0, 2)))
+    h_ins = h_ins.transpose(1, 0, 2, 3, 4)
+    y_inter = jnp.einsum("bcin,bchpn,bcih->bcihp", Cc, h_ins, jnp.exp(cums))
+    return y_intra + y_inter, h_fin
+
+
+def mamba2_forward(cfg, p, x):
+    """Full-sequence SSD.  x: [B, S, D] → [B, S, D]."""
+    Bsz, S, D = x.shape
+    Di, N, H, P = d_inner(cfg), cfg.ssm_state, n_heads(cfg), cfg.ssm_head_dim
+    Q = cfg.ssm_chunk
+    assert S % Q == 0, f"seq {S} not divisible by chunk {Q}"
+    nc = S // Q
+
+    z = jnp.einsum("bsd,de->bse", x, p["in_z"])
+    xs = jnp.einsum("bsd,de->bse", x, p["in_x"])
+    bc = jnp.einsum("bsd,de->bse", x, p["in_bc"])
+    dt = jnp.einsum("bsd,de->bse", x, p["in_dt"])
+    xs = _causal_conv(xs, p["conv_x_w"], p["conv_x_b"])
+    bc = _causal_conv(bc, p["conv_bc_w"], p["conv_bc_b"])
+    Bm, Cm = bc[..., :N], bc[..., N:]
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    loga = (dt * A).reshape(Bsz, nc, Q, H)
+    xh = xs.reshape(Bsz, nc, Q, H, P).astype(jnp.float32)
+    xdt = xh * dt.reshape(Bsz, nc, Q, H)[..., None]
+    Bc = Bm.reshape(Bsz, nc, Q, N).astype(jnp.float32)
+    Cc = Cm.reshape(Bsz, nc, Q, N).astype(jnp.float32)
+
+    y, _ = ssd_chunked(cfg, xdt, loga, Bc, Cc)
+    y = y.reshape(Bsz, S, H, P) + p["D"][None, None, :, None] * \
+        xh.reshape(Bsz, S, H, P)
+    y = _gated_norm(y.reshape(Bsz, S, Di), z.astype(jnp.float32), p["norm_w"])
+    return jnp.einsum("bse,ed->bsd", y.astype(x.dtype), p["out_proj"])
+
+
+def mamba2_init_state(cfg, batch):
+    Di, N, H, P = d_inner(cfg), cfg.ssm_state, n_heads(cfg), cfg.ssm_head_dim
+    return {
+        "h": jnp.zeros((batch, H, P, N), jnp.float32),
+        "conv_x": jnp.zeros((batch, cfg.conv_width - 1, Di), jnp.float32),
+        "conv_bc": jnp.zeros((batch, cfg.conv_width - 1, 2 * N), jnp.float32),
+    }
+
+
+def mamba2_decode(cfg, p, x, state):
+    """Single-token recurrent update.  x: [B, D] → ([B, D], state')."""
+    Bsz, D = x.shape
+    Di, N, H, P = d_inner(cfg), cfg.ssm_state, n_heads(cfg), cfg.ssm_head_dim
+    z = jnp.einsum("bd,de->be", x, p["in_z"])
+    xs = jnp.einsum("bd,de->be", x, p["in_x"]).astype(jnp.float32)
+    bc = jnp.einsum("bd,de->be", x, p["in_bc"]).astype(jnp.float32)
+    dt = jnp.einsum("bd,de->be", x, p["in_dt"])
+
+    hist_x = jnp.concatenate([state["conv_x"], xs[:, None, :]], axis=1)
+    hist_bc = jnp.concatenate([state["conv_bc"], bc[:, None, :]], axis=1)
+    cx = jnp.einsum("bwc,wc->bc", hist_x, p["conv_x_w"].astype(jnp.float32))
+    cx = jax.nn.silu(cx + p["conv_x_b"].astype(jnp.float32))
+    cbc = jnp.einsum("bwc,wc->bc", hist_bc, p["conv_bc_w"].astype(jnp.float32))
+    cbc = jax.nn.silu(cbc + p["conv_bc_b"].astype(jnp.float32))
+    Bm, Cm = cbc[:, :N], cbc[:, N:]
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    a = jnp.exp(dt * -jnp.exp(p["A_log"]))
+    xh = cx.reshape(Bsz, H, P)
+    h = (state["h"] * a[:, :, None, None]
+         + jnp.einsum("bn,bhp,bh->bhpn", Bm, xh, dt))
+    y = jnp.einsum("bn,bhpn->bhp", Cm, h) + p["D"][None, :, None] * xh
+    y = _gated_norm(y.reshape(Bsz, Di), z.astype(jnp.float32), p["norm_w"])
+    out = jnp.einsum("be,ed->bd", y.astype(x.dtype), p["out_proj"])
+    return out, {"h": h, "conv_x": hist_x[:, 1:, :], "conv_bc": hist_bc[:, 1:, :]}

@@ -1,0 +1,228 @@
+"""Unified model stack: init + full-sequence forward for all families.
+
+Layers are grouped into *pattern units* and scanned (``lax.scan`` over
+stacked unit parameters) with optional per-unit rematerialization — the
+combination that keeps both HLO size and activation memory bounded at
+the assigned model scales.  The decode path (single token, paged KV /
+recurrent state) lives in ``repro.serving``; this module is the
+training/prefill oracle.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..layers import attention, mlp as mlp_lib, moe as moe_lib, rglru, ssd
+from ..layers.common import apply_norm, embed, norm_params, param, unembed
+from .config import ModelConfig
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+def _init_layer(cfg: ModelConfig, spec, key):
+    mixer, ffn = spec
+    kmix, kffn, kn1, kn2 = jax.random.split(key, 4)
+    p = {"norm1": norm_params(cfg.norm, cfg.d_model, kn1)}
+    if mixer in ("attn", "local_attn"):
+        p["attn"] = attention.init_attention(cfg, kmix)
+    elif mixer == "mamba2":
+        p["ssd"] = ssd.init_mamba2(cfg, kmix)
+    elif mixer == "rglru":
+        p["rglru"] = rglru.init_rglru(cfg, kmix)
+    else:
+        raise ValueError(mixer)
+    if ffn != "none":
+        p["norm2"] = norm_params(cfg.norm, cfg.d_model, kn2)
+        p["ffn"] = (moe_lib.init_moe(cfg, kffn) if ffn == "moe"
+                    else mlp_lib.init_mlp(cfg, kffn))
+    return p
+
+
+def _init_unit(cfg: ModelConfig, key):
+    keys = jax.random.split(key, len(cfg.pattern))
+    return {f"l{i}": _init_layer(cfg, spec, keys[i])
+            for i, spec in enumerate(cfg.pattern)}
+
+
+def init_params(cfg: ModelConfig, key):
+    ku, kt, ke, kh, kf = jax.random.split(key, 5)
+    units = jax.vmap(lambda k: _init_unit(cfg, k))(
+        jax.random.split(ku, cfg.full_units))
+    params = {
+        "units": units,
+        "final_norm": norm_params(cfg.norm, cfg.d_model, kh),
+        "embed": param(ke, (cfg.vocab_size, cfg.d_model), cfg.dtype,
+                       scale=1.0 / (cfg.d_model ** 0.5)),
+    }
+    if cfg.tail_specs:
+        tkeys = jax.random.split(kt, len(cfg.tail_specs))
+        params["tail"] = {f"t{i}": _init_layer(cfg, spec, tkeys[i])
+                          for i, spec in enumerate(cfg.tail_specs)}
+    if not cfg.tie_embeddings:
+        params["unembed"] = param(kf, (cfg.vocab_size, cfg.d_model),
+                                  cfg.dtype, scale=1.0 / (cfg.d_model ** 0.5))
+    return params
+
+
+# ---------------------------------------------------------------------------
+# forward (full sequence)
+# ---------------------------------------------------------------------------
+def _apply_layer(cfg: ModelConfig, spec, p, x, positions,
+                 constrain=lambda a: a):
+    mixer, ffn = spec
+    aux = jnp.float32(0.0)
+    kv = None
+    h = apply_norm(cfg.norm, p["norm1"], x)
+    if mixer == "attn":
+        h, kv = attention.attention_fwd(cfg, p["attn"], h, positions,
+                                        causal=cfg.causal, window=0)
+    elif mixer == "local_attn":
+        h, kv = attention.attention_fwd(cfg, p["attn"], h, positions,
+                                        causal=cfg.causal, window=cfg.window)
+    elif mixer == "mamba2":
+        h = ssd.mamba2_forward(cfg, p["ssd"], h)
+    elif mixer == "rglru":
+        h = rglru.rglru_forward(cfg, p["rglru"], h)
+    x = x + h
+    if ffn != "none":
+        h = apply_norm(cfg.norm, p["norm2"], x)
+        if ffn == "moe":
+            h, aux = moe_lib.apply_moe(cfg, p["ffn"], h,
+                                       capacity_factor=cfg.capacity_factor,
+                                       constrain=constrain)
+        else:
+            h = mlp_lib.apply_mlp(cfg, p["ffn"], h)
+        x = x + h
+    return x, aux, kv
+
+
+def forward(cfg: ModelConfig, params, batch, *, collect_kv: bool = False,
+            constrain=lambda x: x):
+    """Full-sequence forward.
+
+    batch: {"tokens": i32[B,S]} or {"embeds": [B,S,D]} for stub frontends.
+    Returns (logits f32[B,S,V], aux_loss[, kv]) — with ``collect_kv`` the
+    per-attention-layer (k, v) tensors are stacked across scan units
+    (prefill writes them into the paged arena; see ``serving.engine``).
+    """
+    if cfg.frontend is not None and "embeds" in batch:
+        x = batch["embeds"].astype(cfg.dtype)
+    else:
+        x = embed(batch["tokens"], params["embed"])
+    x = constrain(x)
+    B, S = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+    def unit_fn(x, unit_p):
+        aux = jnp.float32(0.0)
+        kvs = {}
+        for i, spec in enumerate(cfg.pattern):
+            x, a, kv = _apply_layer(cfg, spec, unit_p[f"l{i}"], x, positions,
+                                    constrain)
+            x = constrain(x)
+            aux = aux + a
+            if collect_kv and kv is not None:
+                kvs[f"l{i}"] = kv
+        return x, (aux, kvs)
+
+    body = unit_fn
+    if cfg.remat == "unit":
+        body = jax.checkpoint(unit_fn, prevent_cse=False)
+
+    x, (auxs, kv_units) = jax.lax.scan(lambda c, p: body(c, p),
+                                       x, params["units"])
+    aux = auxs.sum()
+    kv_tail = {}
+    for i, spec in enumerate(cfg.tail_specs):
+        x, a, kv = _apply_layer(cfg, spec, params["tail"][f"t{i}"], x,
+                                positions)
+        aux = aux + a
+        if collect_kv and kv is not None:
+            kv_tail[f"t{i}"] = kv
+    x = apply_norm(cfg.norm, params["final_norm"], x)
+    table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    logits = unembed(x, table)
+    if collect_kv:
+        return logits, aux, {"units": kv_units, "tail": kv_tail}
+    return logits, aux
+
+
+def hidden_states(cfg: ModelConfig, params, batch, constrain=lambda x: x):
+    """Final-norm hidden states [B, S, D] (the pre-unembed activations)."""
+    if cfg.frontend is not None and "embeds" in batch:
+        x = batch["embeds"].astype(cfg.dtype)
+    else:
+        x = embed(batch["tokens"], params["embed"])
+    x = constrain(x)
+    B, S = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+    def unit_fn(x, unit_p):
+        aux = jnp.float32(0.0)
+        for i, spec in enumerate(cfg.pattern):
+            x, a, _ = _apply_layer(cfg, spec, unit_p[f"l{i}"], x, positions,
+                                   constrain)
+            x = constrain(x)
+            aux = aux + a
+        return x, aux
+
+    body = unit_fn
+    if cfg.remat == "unit":
+        body = jax.checkpoint(unit_fn, prevent_cse=False)
+    x, auxs = jax.lax.scan(lambda c, p: body(c, p), x, params["units"])
+    aux = auxs.sum()
+    for i, spec in enumerate(cfg.tail_specs):
+        x, a, _ = _apply_layer(cfg, spec, params["tail"][f"t{i}"], x,
+                               positions)
+        aux = aux + a
+    return apply_norm(cfg.norm, params["final_norm"], x), aux
+
+
+def chunked_ce(cfg: ModelConfig, x, table, labels, *, chunk: int = 256):
+    """CE over the vocabulary computed in remat'd sequence chunks.
+
+    Avoids ever materializing [B, S, V] fp32 logits — the unembed matmul
+    and the logsumexp are recomputed per chunk in the backward pass.  The
+    single biggest activation-memory lever for the large-vocab archs.
+    """
+    B, S, D = x.shape
+    chunk = min(chunk, S)
+    while S % chunk:
+        chunk -= 1
+    nc = S // chunk
+    xc = x.reshape(B, nc, chunk, D).transpose(1, 0, 2, 3)
+    lc = labels.reshape(B, nc, chunk).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def one(xs, ls):
+        logits = jnp.einsum("bsd,vd->bsv", xs, table,
+                            preferred_element_type=jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, jnp.clip(ls, 0)[..., None], axis=-1)[..., 0]
+        mask = ls >= 0
+        return (jnp.where(mask, lse - gold, 0.0).sum(),
+                mask.sum().astype(jnp.float32))
+
+    def body(acc, inp):
+        s, n = one(*inp)
+        return (acc[0] + s, acc[1] + n), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.float32(0), jnp.float32(0)),
+                                 (xc, lc))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def loss_fn(cfg: ModelConfig, params, batch, *, aux_weight: float = 0.01,
+            loss_chunk: int = 256, constrain=lambda x: x):
+    """Next-token (causal) or frame-classification (encoder) CE loss."""
+    x, aux = hidden_states(cfg, params, batch, constrain)
+    labels = batch["labels"]
+    if cfg.causal:
+        x = x[:, :-1]
+        labels = labels[:, 1:]
+    table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    ce = chunked_ce(cfg, x, table, labels, chunk=loss_chunk)
+    return ce + aux_weight * aux, {"ce": ce, "aux": aux}

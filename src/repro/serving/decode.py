@@ -1,0 +1,339 @@
+"""serve_step (decode): shard_map assembly over (pod, data, model).
+
+One decode step = embed → scan over pattern units (each unit applies its
+mixers/ffns via ``tp_layers``) → final norm → vocab-parallel logits →
+greedy sample.  Batch and KV pages are sharded over the data axes
+(shard-local page ids — one arena per data shard); ``model`` carries
+Megatron-style TP plus slot-sharded paged attention.
+
+The decode state is a pytree:
+
+  {"pos": i32[B], "block_table": i32[B, P], "kv_pos": i32[B, P, page],
+   "units": {"l<i>": mixer-state stacked over units}, "tail": {...}}
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from ..layers.common import apply_norm
+from ..models.config import ModelConfig
+from . import tp_layers as tpl
+
+MODEL_AXIS = "model"
+
+
+def data_axes(mesh) -> tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a != MODEL_AXIS)
+
+
+# ---------------------------------------------------------------------------
+# sharding specs
+# ---------------------------------------------------------------------------
+def serve_param_specs(cfg: ModelConfig, params_shape, tp: int = 16) -> dict:
+    """PartitionSpecs for the serving weight layout (model-axis TP only).
+
+    Vocab tables whose row count does not divide the TP axis are
+    replicated (internvl2: 92553, granite-moe: 49155, hubert: 504).
+    """
+    M = MODEL_AXIS
+    vocab_ok = cfg.vocab_size % tp == 0
+
+    def spec_for(path: str, ndim: int, lead: int):
+        pre = (None,) * lead
+
+        def p(*s):
+            return P(*(pre + s + (None,) * (ndim - lead - len(s))))
+
+        last = path.split("/")[-1]
+        if "attn" in path:
+            if last in ("wq", "wk", "wv", "wo"):
+                return p(M, None)
+            return p()                        # biases replicated
+        if "ffn" in path:
+            if last == "router":
+                return p()
+            if last in ("wi", "wg"):
+                return p(M) if ndim - lead == 3 else p(None, M)
+            if last == "wo":
+                return p(M) if ndim - lead == 3 else p(M, None)
+        if "ssd" in path:
+            if last in ("in_z", "in_x", "in_dt", "conv_x_w"):
+                return p(None, M)
+            if last in ("conv_x_b", "A_log", "dt_bias", "D", "norm_w"):
+                return p(M)
+            if last == "out_proj":
+                return p(M, None)
+            return p()                        # in_bc / conv_bc_* replicated
+        if "rglru" in path:
+            if last in ("in_x", "in_g", "conv_w"):
+                return p(None, M)
+            if last in ("conv_b", "lam"):
+                return p(M)
+            if last in ("wa", "wx", "out"):
+                return p(M, None)
+            return p()
+        if last in ("embed", "unembed"):
+            return P(M, None) if vocab_ok else P(None, None)
+        return p()                            # norms etc. replicated
+
+    def walk(tree, path="", lead=0):
+        if isinstance(tree, dict):
+            out = {}
+            for k, v in tree.items():
+                l2 = lead + 1 if k == "units" and path == "" else lead
+                out[k] = walk(v, f"{path}/{k}", l2)
+            return out
+        return spec_for(path, len(tree.shape), lead)
+
+    return walk(params_shape)
+
+
+def mixer_state_specs(cfg: ModelConfig, mesh, stacked: bool,
+                      batch_sharded: bool):
+    """Specs for one pattern position's state (optionally unit-stacked).
+
+    With ``batch_sharded`` the batch dim is split over the data axes and
+    each data shard keeps its own sequences' pages.  Otherwise (batch <
+    dp, e.g. long_500k) the *pages* are split over the data axes —
+    sequence parallelism — and recurrent states are replicated over dp.
+    """
+    dp = data_axes(mesh)
+    pre = (None,) if stacked else ()
+    M = MODEL_AXIS
+    bdp = dp if batch_sharded else None
+
+    def mk(*s):
+        return P(*(pre + s))
+
+    out = {}
+    for i, (mixer, _) in enumerate(cfg.pattern):
+        key = f"l{i}"
+        if mixer in ("attn", "local_attn"):
+            out[key] = {"k": mk(dp, M, None, None),
+                        "v": mk(dp, M, None, None)}
+            if cfg.kv_dtype == "int8":
+                out[key]["ks"] = mk(dp, M, None)
+                out[key]["vs"] = mk(dp, M, None)
+        elif mixer == "mamba2":
+            out[key] = {"h": mk(bdp, M, None, None),
+                        "conv_x": mk(bdp, None, M),
+                        "conv_bc": mk(bdp, None, None)}
+        elif mixer == "rglru":
+            out[key] = {"h": mk(bdp, M), "conv": mk(bdp, None, M)}
+    return out
+
+
+def dstate_specs(cfg: ModelConfig, mesh, batch_sharded: bool = True):
+    dp = data_axes(mesh)
+    if batch_sharded:
+        pos_s, bt_s, kvp_s = P(dp), P(dp, None), P(dp, None, MODEL_AXIS)
+    else:  # sequence parallelism: pages over dp, batch replicated
+        pos_s, bt_s, kvp_s = P(), P(None, dp), P(None, dp, MODEL_AXIS)
+    specs = {
+        "pos": pos_s,
+        "block_table": bt_s,
+        "kv_pos": kvp_s,
+        "units": mixer_state_specs(cfg, mesh, True, batch_sharded),
+    }
+    tail = {}
+    for i, (mixer, _) in enumerate(cfg.tail_specs):
+        sub = mixer_state_specs(cfg, mesh, False, batch_sharded)
+        if f"l{i}" in sub:
+            tail[f"t{i}"] = sub[f"l{i}"]
+    specs["tail"] = tail
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# decode state construction
+# ---------------------------------------------------------------------------
+def make_dstate(cfg: ModelConfig, *, batch: int, max_seq: int,
+                pages_per_shard: int | None = None, dp_shards: int = 1,
+                dtype=None):
+    """Zero-initialized decode state (host-side; engine fills block tables)."""
+    from ..layers import rglru, ssd
+    dtype = dtype or cfg.dtype
+    page = cfg.page_size
+    if cfg.attn_layers == 0:
+        Pn = dp_shards                    # attention-free: vestigial table
+    else:
+        Pn = max(1, max_seq // page)
+        if cfg.window:                    # ring buffer of window pages
+            Pn = min(Pn, (cfg.window + page - 1) // page + 1)
+        Pn = -(-Pn // dp_shards) * dp_shards   # divisible for seq-parallel
+    pages = pages_per_shard or max(batch // dp_shards, 1) * (Pn // dp_shards
+                                   if batch < dp_shards else Pn) + 1
+    pages_g = pages * dp_shards
+
+    def attn_state(n_units):
+        K, dh = cfg.num_kv_heads, cfg.head_dim
+        shape = (pages_g, page, K, dh)
+        sshape = (pages_g, page, K)
+        if n_units:
+            shape = (n_units,) + shape
+            sshape = (n_units,) + sshape
+        if cfg.kv_dtype == "int8":
+            return {"k": jnp.zeros(shape, jnp.int8),
+                    "v": jnp.zeros(shape, jnp.int8),
+                    "ks": jnp.zeros(sshape, jnp.float32),
+                    "vs": jnp.zeros(sshape, jnp.float32)}
+        return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+    units, tail = {}, {}
+    U = cfg.full_units
+    for i, (mixer, _) in enumerate(cfg.pattern):
+        if mixer in ("attn", "local_attn"):
+            units[f"l{i}"] = attn_state(U)
+        elif mixer == "mamba2":
+            s = ssd.mamba2_init_state(cfg, batch)
+            units[f"l{i}"] = jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (U,) + a.shape), s)
+        elif mixer == "rglru":
+            s = rglru.rglru_init_state(cfg, batch)
+            units[f"l{i}"] = jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (U,) + a.shape), s)
+    for i, (mixer, _) in enumerate(cfg.tail_specs):
+        if mixer in ("attn", "local_attn"):
+            tail[f"t{i}"] = attn_state(0)
+        elif mixer == "mamba2":
+            tail[f"t{i}"] = ssd.mamba2_init_state(cfg, batch)
+        elif mixer == "rglru":
+            tail[f"t{i}"] = rglru.rglru_init_state(cfg, batch)
+    return {
+        "pos": jnp.zeros((batch,), jnp.int32),
+        "block_table": jnp.full((batch, Pn), -1, jnp.int32),
+        "kv_pos": jnp.full((batch, Pn, page), -1, jnp.int32),
+        "units": units,
+        "tail": tail,
+    }
+
+
+# ---------------------------------------------------------------------------
+# the step itself
+# ---------------------------------------------------------------------------
+def _apply_layer_tp(cfg, spec, p, x, pos, block_table, kv_pos, state,
+                    seq_dp_axes=()):
+    mixer, ffn = spec
+    M = MODEL_AXIS
+    h = apply_norm(cfg.norm, p["norm1"], x)
+    new_state = state
+    if mixer in ("attn", "local_attn"):
+        win = cfg.window if mixer == "local_attn" else 0
+        scales = ((state["ks"], state["vs"])
+                  if cfg.kv_dtype == "int8" else None)
+        y, ak, av, kv_pos2, nsc = tpl.attn_decode_tp(
+            cfg, p["attn"], h, pos, state["k"], state["v"], block_table,
+            kv_pos, window=win, axis=M, seq_dp_axes=seq_dp_axes,
+            scales=scales)
+        new_state = {"k": ak, "v": av}
+        if nsc is not None:
+            new_state["ks"], new_state["vs"] = nsc
+    elif mixer == "mamba2":
+        y, new_state = tpl.mamba2_decode_tp(cfg, p["ssd"], h, state, M)
+    elif mixer == "rglru":
+        y, new_state = tpl.rglru_decode_tp(cfg, p["rglru"], h, state, M)
+    x = x + y
+    if ffn != "none":
+        h = apply_norm(cfg.norm, p["norm2"], x)
+        if ffn == "moe":
+            x = x + tpl.moe_decode_tp(cfg, p["ffn"], h, M)
+        else:
+            x = x + tpl.mlp_decode_tp(cfg, p["ffn"], h, M)
+    return x, new_state
+
+
+def _decode_local(cfg: ModelConfig, seq_dp_axes, params, dstate, tokens,
+                  return_logits: bool = False, vocab_sharded: bool = True):
+    """Runs per-device inside shard_map."""
+    M = MODEL_AXIS
+    pos = dstate["pos"]
+    block_table = dstate["block_table"]
+    kv_pos = dstate["kv_pos"]
+    x = tpl.embed_tp(params["embed"], tokens, M, sharded=vocab_sharded)
+
+    def body(x, inp):
+        unit_p, unit_s = inp
+        new_s = {}
+        for i, spec in enumerate(cfg.pattern):
+            st = unit_s.get(f"l{i}")
+            x, ns = _apply_layer_tp(cfg, spec, unit_p[f"l{i}"], x, pos,
+                                    block_table, kv_pos, st, seq_dp_axes)
+            if ns is not None:
+                new_s[f"l{i}"] = ns
+        return x, new_s
+
+    x, new_units = lax.scan(body, x, (params["units"], dstate["units"]))
+    new_tail = {}
+    for i, spec in enumerate(cfg.tail_specs):
+        st = dstate["tail"].get(f"t{i}")
+        x, ns = _apply_layer_tp(cfg, spec, params["tail"][f"t{i}"], x, pos,
+                                block_table, kv_pos, st, seq_dp_axes)
+        if ns is not None:
+            new_tail[f"t{i}"] = ns
+    x = apply_norm(cfg.norm, params["final_norm"], x)
+    table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    logits_loc = tpl.logits_tp(table, x, M)
+    next_tok = tpl.greedy_sample_tp(logits_loc, M, sharded=vocab_sharded)
+
+    # one new token is now resident at position pos for every sequence:
+    # advance position; mark its slot in kv_pos (idempotent w.r.t. layers)
+    page_loc = kv_pos.shape[-1]
+    page = page_loc * lax.axis_size(M)
+    P_loc = kv_pos.shape[1]
+    slot = pos % page
+    mine = (slot // page_loc) == lax.axis_index(M)
+    gpage = pos // page
+    if seq_dp_axes:
+        mine = mine & ((gpage // P_loc) == tpl.dp_linear_index(seq_dp_axes))
+        lpage = gpage % P_loc
+    else:
+        lpage = gpage
+    b_ix = jnp.arange(pos.shape[0])
+    lslot = jnp.where(mine, slot % page_loc, 0)
+    kv_pos = kv_pos.at[b_ix, lpage, lslot].set(
+        jnp.where(mine, pos, kv_pos[b_ix, lpage, lslot]))
+    out_state = dict(dstate, pos=pos + 1, kv_pos=kv_pos,
+                     units=new_units, tail=new_tail)
+    if return_logits:
+        full = (lax.all_gather(logits_loc, MODEL_AXIS, axis=1, tiled=True)
+                if vocab_sharded else logits_loc)
+        return out_state, next_tok, full
+    return out_state, next_tok
+
+
+def make_decode_step(cfg: ModelConfig, mesh, params_shape, *,
+                     batch_sharded: bool = True, return_logits: bool = False):
+    """Build the jitted serve_step: (params, dstate, tokens) → (dstate', tok).
+
+    ``batch_sharded=False`` switches to sequence-parallel mode for
+    global_batch < #data-shards (the long_500k shape): pages are spread
+    over the data axes and the attention merge spans (data + model).
+    """
+    dp = data_axes(mesh)
+    tp = mesh.shape[MODEL_AXIS]
+    vocab_sharded = cfg.vocab_size % tp == 0
+    pspecs = serve_param_specs(cfg, params_shape, tp)
+    sspecs = dstate_specs(cfg, mesh, batch_sharded)
+    tok_spec = P(dp) if batch_sharded else P()
+    seq_dp_axes = () if batch_sharded else dp
+
+    out_specs = (sspecs, tok_spec)
+    if return_logits:
+        out_specs = out_specs + ((P(dp, None) if batch_sharded
+                                  else P(None, None)),)
+    fn = jax.shard_map(
+        functools.partial(_decode_local, cfg, seq_dp_axes,
+                          return_logits=return_logits,
+                          vocab_sharded=vocab_sharded),
+        mesh=mesh,
+        in_specs=(pspecs, sspecs, tok_spec),
+        out_specs=out_specs,
+        check_vma=False,
+    )
+    return jax.jit(fn, donate_argnums=(1,)), pspecs, sspecs

@@ -1,0 +1,261 @@
+"""Continuous-batching serving engine over the Ralloc paged arena.
+
+The engine owns:
+  * an ``AllocState`` whose blocks are KV pages (1 block = 1 page, so the
+    position-independent offsets the allocator returns *are* page ids);
+  * the decode step built by ``serving.decode`` (shard_map TP);
+  * per-lane sessions (a lane = one decode stream).
+
+Page allocation happens lazily: a lane that crosses a page boundary gets
+a fresh page from the allocator (vectorized ``alloc`` over all lanes —
+the rank-indexed cache makes the common step allocation-free).  Evicted
+sessions free their pages in one vectorized ``free``.
+
+Recoverability (paper §4.5 transplanted to inference): the persistent
+fields of the allocator plus each session's block-table row (the "page
+table", reachable from the session root) survive a crash; ``recover()``
+rebuilds every transient allocator structure with the vectorized
+mark–sweep and the engine resumes mid-generation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import jax_alloc as ja
+from ..core import jax_recovery as jr
+from ..models.config import ModelConfig
+from . import decode as dec
+
+PAGE_CLS = 0
+
+
+@dataclasses.dataclass
+class Session:
+    lane: int
+    tokens: list
+    done: bool = False
+
+
+class ServingEngine:
+    def __init__(self, cfg: ModelConfig, mesh, params, *, lanes: int = 8,
+                 max_seq: int = 512, pages_per_sb: int = 16):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.params = params
+        self.lanes = lanes
+        self.max_seq = max_seq
+        n_pages = lanes * (max_seq // cfg.page_size + 2) + pages_per_sb
+        num_sbs = -(-n_pages // pages_per_sb)
+        self.acfg = ja.ArenaConfig(num_sbs=num_sbs, sb_words=pages_per_sb,
+                                   class_words=(1,),
+                                   cache_cap=max(64, 2 * lanes))
+        self.astate = ja.init_state(self.acfg, max_roots=lanes)
+        self._alloc = jax.jit(functools.partial(ja.alloc, cfg=self.acfg,
+                                                cls=PAGE_CLS))
+        self._free = jax.jit(functools.partial(ja.free, cfg=self.acfg,
+                                               cls=PAGE_CLS))
+        pshape = jax.tree.map(
+            lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), params)
+        self.step_fn, _, _ = dec.make_decode_step(cfg, mesh, pshape)
+        self.dstate = dec.make_dstate(cfg, batch=lanes, max_seq=max_seq,
+                                      pages_per_shard=int(num_sbs
+                                                          * pages_per_sb) + 1)
+        self.sessions: dict[int, Session] = {}
+        self.cur_tokens = np.zeros((lanes,), np.int32)
+        self.free_lanes = list(range(lanes))
+        # prefix sharing (RadixAttention-style): pages holding a shared
+        # prompt prefix are referenced by several block tables; refcounts
+        # enforce the paper's "no block used for two purposes" discipline —
+        # a shared page returns to the allocator only at refcount zero
+        self.page_refs: dict[int, int] = {}
+        self._prefix_cache: dict[tuple, tuple] = {}   # prompt -> (pages, len)
+
+    # ------------------------------------------------------------- requests
+    def add_request(self, prompt: list[int],
+                    share_prefix: bool = False) -> int:
+        lane = self.free_lanes.pop()
+        self.sessions[lane] = Session(lane=lane, tokens=list(prompt))
+        # reset lane state (pos=0) and feed the prompt token by token
+        self.dstate["pos"] = self.dstate["pos"].at[lane].set(0)
+        self.dstate["block_table"] = \
+            self.dstate["block_table"].at[lane].set(-1)
+        self.dstate["kv_pos"] = self.dstate["kv_pos"].at[lane].set(-1)
+        self.cur_tokens[lane] = prompt[0]
+        if share_prefix:
+            hit = self._prefix_cache.get(tuple(prompt))
+            if hit is not None:
+                pages, plen, kvp, next_tok = hit
+                bt = np.asarray(self.dstate["block_table"]).copy()
+                bt[lane, :len(pages)] = pages
+                self.dstate["block_table"] = jnp.asarray(bt)
+                kv = np.asarray(self.dstate["kv_pos"]).copy()
+                kv[lane, :len(pages)] = kvp
+                self.dstate["kv_pos"] = jnp.asarray(kv)
+                self.dstate["pos"] = self.dstate["pos"].at[lane].set(plen)
+                # the model's continuation at the prompt boundary was
+                # sampled by the publisher — it is part of the prefix
+                self.sessions[lane].tokens = list(prompt) + [next_tok]
+                self.cur_tokens[lane] = next_tok
+                for p in pages:
+                    self.page_refs[p] = self.page_refs.get(p, 1) + 1
+        # the allocator root for this lane points at its page table
+        self.astate = ja.set_root(self.astate, lane, jnp.int32(lane))
+        return lane
+
+    def publish_prefix(self, lane: int) -> None:
+        """Register this lane's fully-processed prompt as a shared prefix.
+
+        Only whole pages are shared (a partially-filled page would be
+        written by the owner — violating block disjointness)."""
+        s = self.sessions[lane]
+        pos = int(np.asarray(self.dstate["pos"][lane]))
+        page = self.cfg.page_size
+        full = pos // page
+        if full == 0:
+            return
+        bt = np.asarray(self.dstate["block_table"][lane])
+        kv = np.asarray(self.dstate["kv_pos"][lane])
+        if pos != full * page or pos != len(s.tokens) - (
+                1 if len(s.tokens) > full * page else 0):
+            # share only a fully-processed, page-aligned prompt
+            if pos < full * page:
+                return
+        pages = tuple(int(p) for p in bt[:full])
+        for p in pages:
+            # +1: the prefix cache itself holds a reference, so the pages
+            # survive the publishing session's eviction
+            self.page_refs[p] = self.page_refs.get(p, 1) + 1
+        self._prefix_cache[tuple(s.tokens[:full * page])] = (
+            pages, full * page, kv[:full].copy(),
+            int(self.cur_tokens[lane]))
+
+    def drop_prefix_cache(self) -> None:
+        """Release the cache's references; fully-unreferenced pages free."""
+        for pages, _, _, _ in self._prefix_cache.values():
+            stale = []
+            for p in pages:
+                if p in self.page_refs:
+                    self.page_refs[p] -= 1
+                    if self.page_refs[p] <= 0:
+                        stale.append(p)
+                        del self.page_refs[p]
+            if stale:
+                offs = np.full((self.acfg.cache_cap,), -1, np.int32)
+                offs[:len(stale)] = stale
+                self.astate = self._free(state=self.astate,
+                                         offs=jnp.asarray(offs),
+                                         mask=jnp.asarray(offs >= 0))
+        self._prefix_cache.clear()
+
+    # ------------------------------------------------------------------ step
+    def step(self) -> dict[int, int]:
+        """One decode step for every active lane; returns emitted tokens."""
+        active = np.zeros((self.lanes,), bool)
+        for lane, s in self.sessions.items():
+            if not s.done:
+                active[lane] = True
+        if not active.any():
+            return {}
+        # page-boundary lanes need a fresh page before the step
+        pos = np.asarray(self.dstate["pos"])
+        page = self.cfg.page_size
+        need = active & (pos % page == 0) & (self.cfg.attn_layers > 0)
+        if need.any():
+            self.astate, offs = self._alloc(state=self.astate,
+                                            need=jnp.asarray(need))
+            offs = np.asarray(offs)
+            bt = np.asarray(self.dstate["block_table"]).copy()
+            for lane in np.nonzero(need)[0]:
+                if offs[lane] < 0:
+                    raise MemoryError("KV arena exhausted")
+                bt[lane, pos[lane] // page] = offs[lane]
+            self.dstate["block_table"] = jnp.asarray(bt)
+
+        self.dstate, toks = self.step_fn(self.params, self.dstate,
+                                         jnp.asarray(self.cur_tokens))
+        toks = np.asarray(toks)
+        out = {}
+        for lane, s in list(self.sessions.items()):
+            if s.done:
+                continue
+            t = int(pos[lane]) + 1
+            if t < len(s.tokens):
+                self.cur_tokens[lane] = s.tokens[t]       # teacher-forced
+            else:
+                s.tokens.append(int(toks[lane]))
+                self.cur_tokens[lane] = int(toks[lane])
+                out[lane] = int(toks[lane])
+            if len(s.tokens) >= self.max_seq - 1:
+                self.finish(lane)
+        return out
+
+    def finish(self, lane: int) -> None:
+        """Evict a session: free its pages (shared pages only at ref 0)."""
+        s = self.sessions.pop(lane)
+        s.done = True
+        bt = np.asarray(self.dstate["block_table"][lane])
+        pages = bt[bt >= 0].astype(np.int32)
+        keep = []
+        for p in pages.tolist():
+            if p in self.page_refs:
+                self.page_refs[p] -= 1
+                if self.page_refs[p] > 0:
+                    keep.append(p)          # still referenced elsewhere
+                else:
+                    del self.page_refs[p]
+        if keep:
+            pages = np.asarray([p for p in pages.tolist() if p not in keep],
+                               np.int32)
+        if pages.size:
+            offs = np.full((self.acfg.cache_cap,), -1, np.int32)
+            offs[:pages.size] = pages
+            self.astate = self._free(state=self.astate,
+                                     offs=jnp.asarray(offs),
+                                     mask=jnp.asarray(offs >= 0))
+        self.dstate["block_table"] = \
+            self.dstate["block_table"].at[lane].set(-1)
+        self.astate = ja.set_root(self.astate, lane, jnp.int32(-1))
+        self.free_lanes.append(lane)
+
+    # ------------------------------------------------------------- recovery
+    def ref_table(self) -> np.ndarray:
+        """Filter function output: each live session's root block (its
+        first page) references the session's remaining pages."""
+        S = jr.num_slots(self.acfg)
+        R = self.dstate["block_table"].shape[1]
+        refs = np.full((S, R), -1, np.int32)
+        bt = np.asarray(self.dstate["block_table"])
+        for lane, s in self.sessions.items():
+            if s.done:
+                continue
+            pages = bt[lane][bt[lane] >= 0]
+            if pages.size == 0:
+                continue
+            root = int(pages[0])
+            refs[root, :pages.size - 1] = pages[1:]
+        return refs
+
+    def crash_and_recover(self) -> dict:
+        """Simulate losing all transient allocator state, then rebuild it
+        from (persistent fields + session page tables) via vectorized GC."""
+        persistent = ja.persistent_snapshot(self.astate)
+        roots = np.full((self.lanes,), -1, np.int32)
+        bt = np.asarray(self.dstate["block_table"])
+        for lane, s in self.sessions.items():
+            pages = bt[lane][bt[lane] >= 0]
+            if pages.size:
+                roots[lane] = int(pages[0])
+        persistent["roots"] = jnp.asarray(roots)
+        new_state, marked = jr.recover(self.acfg, persistent,
+                                       jnp.asarray(self.ref_table()))
+        live_before = ja.live_blocks(self.astate, self.acfg)[PAGE_CLS]
+        self.astate = new_state
+        live_after = ja.live_blocks(new_state, self.acfg)[PAGE_CLS]
+        return {"marked": int(np.asarray(marked).sum()),
+                "live_before": live_before, "live_after": live_after}

@@ -1,0 +1,103 @@
+"""Fault-tolerant training driver.
+
+Wraps ``make_train_step`` with the production concerns:
+  * recoverable checkpointing on a Ralloc persistent heap (crash at any
+    point ⇒ restart resumes from the last *committed* manifest root;
+    half-written checkpoints are GC'd, never read);
+  * automatic restart-from-checkpoint on step failure;
+  * straggler watchdog: a step exceeding ``straggler_factor`` × the
+    rolling median is logged and counted (on a real multi-host fleet the
+    same hook triggers scale-down / hot-spare swap — here single-host);
+  * elastic rescale: ``restore_onto`` re-shards a checkpoint onto a new
+    mesh (arrays are stored unsharded + position-independent, so any
+    mesh works — see examples/elastic_rescale.py).
+"""
+
+from __future__ import annotations
+
+import statistics
+import time
+
+import jax
+import numpy as np
+
+from ..checkpoint.manager import CheckpointManager
+from ..models import transformer as T
+from ..models.config import ModelConfig
+from .optimizer import AdamWConfig, init_opt_state
+from .step import make_train_step
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, opt_cfg: AdamWConfig, *,
+                 mesh=None, ckpt: CheckpointManager | None = None,
+                 ckpt_every: int = 50, microbatches: int = 1,
+                 compressor=None, straggler_factor: float = 3.0,
+                 seed: int = 0):
+        self.cfg = cfg
+        self.opt_cfg = opt_cfg
+        self.mesh = mesh
+        self.ckpt = ckpt
+        self.ckpt_every = ckpt_every
+        self.straggler_factor = straggler_factor
+        self.step_fn = jax.jit(make_train_step(
+            cfg, opt_cfg, microbatches=microbatches, compressor=compressor,
+            mesh=mesh))
+        self.params = T.init_params(cfg, jax.random.PRNGKey(seed))
+        self.opt = init_opt_state(self.params)
+        self.start_step = 0
+        self.step_times: list[float] = []
+        self.straggler_events = 0
+        if ckpt is not None:
+            restored, step = ckpt.load_latest({"p": self.params,
+                                               "o_m": self.opt["m"],
+                                               "o_v": self.opt["v"]})
+            if restored is not None:
+                self.params = jax.tree.map(jax.numpy.asarray, restored["p"])
+                self.opt["m"] = jax.tree.map(jax.numpy.asarray,
+                                             restored["o_m"])
+                self.opt["v"] = jax.tree.map(jax.numpy.asarray,
+                                             restored["o_v"])
+                self.opt["step"] = jax.numpy.int32(step)
+                self.start_step = step
+
+    def _maybe_checkpoint(self, step: int) -> None:
+        if self.ckpt is not None and step % self.ckpt_every == 0 and step:
+            self.ckpt.save({"p": self.params, "o_m": self.opt["m"],
+                            "o_v": self.opt["v"]}, step=step)
+
+    def run(self, batches, steps: int, log_every: int = 10):
+        history = []
+        step = self.start_step
+        while step < steps:
+            batch = {k: jax.numpy.asarray(v)
+                     for k, v in batches.batch_at(step).items()}
+            t0 = time.perf_counter()
+            try:
+                self.params, self.opt, metrics = self.step_fn(
+                    self.params, self.opt, batch)
+                loss = float(metrics["loss"])
+            except Exception as e:                      # fault tolerance
+                if self.ckpt is None:
+                    raise
+                print(f"[trainer] step {step} failed ({e!r}); "
+                      f"restoring last checkpoint")
+                self.__init__(self.cfg, self.opt_cfg, mesh=self.mesh,
+                              ckpt=self.ckpt, ckpt_every=self.ckpt_every)
+                step = self.start_step
+                continue
+            dt = time.perf_counter() - t0
+            if len(self.step_times) >= 5:
+                med = statistics.median(self.step_times[-20:])
+                if dt > self.straggler_factor * med:
+                    self.straggler_events += 1
+                    print(f"[trainer] straggler: step {step} took "
+                          f"{dt:.2f}s (median {med:.2f}s)")
+            self.step_times.append(dt)
+            history.append(loss)
+            if step % log_every == 0:
+                print(f"[trainer] step {step} loss {loss:.4f} "
+                      f"({dt*1e3:.0f} ms)")
+            step += 1
+            self._maybe_checkpoint(step)
+        return history

@@ -1,0 +1,61 @@
+"""AdamW with fp32 moments, sharded like the parameters (ZeRO-3)."""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+
+
+def init_opt_state(params):
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {"m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "step": jnp.int32(0)}
+
+
+def _schedule(cfg: AdamWConfig, step):
+    warm = jnp.minimum(step / max(cfg.warmup_steps, 1), 1.0)
+    return cfg.lr * warm
+
+
+def apply_updates(cfg: AdamWConfig, params, opt, grads):
+    step = opt["step"] + 1
+    lr = _schedule(cfg, step.astype(jnp.float32))
+    # global-norm clip
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m2 = cfg.b1 * m + (1 - cfg.b1) * g
+        v2 = cfg.b2 * v + (1 - cfg.b2) * g * g
+        mh = m2 / (1 - cfg.b1 ** step)
+        vh = v2 / (1 - cfg.b2 ** step)
+        delta = mh / (jnp.sqrt(vh) + cfg.eps) + \
+            cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m2, v2
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(opt["m"])
+    flat_v = jax.tree.leaves(opt["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "step": step}, gnorm

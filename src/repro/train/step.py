@@ -1,0 +1,58 @@
+"""train_step: loss + grads + AdamW update, with optional microbatching
+(gradient accumulation) and a gradient-compression hook."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..models import transformer as T
+from ..models.config import ModelConfig
+from .optimizer import AdamWConfig, apply_updates
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig,
+                    *, microbatches: int = 1, compressor=None, mesh=None):
+    """Returns train_step(params, opt, batch) → (params', opt', metrics)."""
+    from ..distributed.sharding import make_batch_constrainer
+    constrain = make_batch_constrainer(mesh)
+
+    def loss(params, batch):
+        return T.loss_fn(cfg, params, batch, constrain=constrain)
+
+    def train_step(params, opt, batch):
+        if microbatches > 1:
+            def micro(batch_slice):
+                return jax.value_and_grad(loss, has_aux=True)(
+                    params, batch_slice)
+
+            def split(x):
+                b = x.shape[0]
+                return x.reshape(microbatches, b // microbatches,
+                                 *x.shape[1:])
+
+            mb = jax.tree.map(split, batch)
+
+            def body(acc, sl):
+                (l, parts), g = micro(sl)
+                acc_g, acc_l = acc
+                return (jax.tree.map(jnp.add, acc_g, g), acc_l + l), None
+
+            zero_g = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, lsum), _ = jax.lax.scan(body, (zero_g, jnp.float32(0)),
+                                            mb)
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            lval = lsum / microbatches
+        else:
+            (lval, parts), grads = jax.value_and_grad(loss, has_aux=True)(
+                params, batch)
+        if compressor is not None:
+            grads = compressor(grads)
+        params2, opt2, gnorm = apply_updates(opt_cfg, params, opt, grads)
+        metrics = {"loss": lval, "grad_norm": gnorm}
+        return params2, opt2, metrics
+
+    return train_step

@@ -1,0 +1,113 @@
+"""Recoverable checkpointing, trainer fault tolerance, compression codec."""
+
+import dataclasses
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs import get_smoke_config
+from repro.core.ralloc import Ralloc
+from repro.data.pipeline import TokenStream
+from repro.distributed.compression import Int8ErrorFeedback
+from repro.train.loop import Trainer
+from repro.train.optimizer import AdamWConfig
+
+MB = 1 << 20
+
+
+def test_checkpoint_roundtrip_and_crash():
+    path = tempfile.mktemp()
+    heap = Ralloc(path, 64 * MB, sim_nvm=True, seed=3)
+    cm = CheckpointManager(heap)
+    tree = {"w": np.arange(1000, dtype=np.float32).reshape(10, 100),
+            "b": np.ones((7,), np.int64)}
+    cm.save(tree, step=10)
+    tree2 = {k: np.asarray(v) * 2 for k, v in tree.items()}
+    cm.save(tree2, step=20)
+    # crash mid-"checkpoint": leaked shard allocations, no commit
+    for _ in range(5):
+        heap.malloc(8000)
+    heap.heap.crash()
+    del heap, cm
+
+    heap2 = Ralloc(path, 64 * MB, sim_nvm=True, seed=4)
+    assert heap2.dirty_restart
+    cm2 = CheckpointManager(heap2)
+    heap2.get_root(0, "ckpt_manifest")
+    heap2.get_root(1, "ckpt_manifest")
+    heap2.recover()
+    restored, step = cm2.load_latest(tree)
+    assert step == 20
+    np.testing.assert_array_equal(restored["w"], tree2["w"])
+    # heap remains serviceable
+    cm2.save({k: np.asarray(v) * 3 for k, v in tree.items()}, step=30)
+    r3, s3 = cm2.load_latest(tree)
+    assert s3 == 30 and np.allclose(r3["w"], tree["w"] * 3)
+    heap2.close()
+    os.unlink(path)
+
+
+def test_trainer_resumes_from_checkpoint():
+    cfg = dataclasses.replace(get_smoke_config("starcoder2_3b"),
+                              num_layers=2, vocab_size=64)
+    path = tempfile.mktemp()
+    heap = Ralloc(path, 256 * MB)
+    cm = CheckpointManager(heap)
+    stream = TokenStream(cfg.vocab_size, 2, 32, seed=1)
+    tr = Trainer(cfg, AdamWConfig(warmup_steps=2), ckpt=cm, ckpt_every=5)
+    tr.run(stream, steps=7, log_every=1000)
+    w_after7 = np.asarray(jax.tree.leaves(tr.params)[0], np.float32)
+
+    # "crash": new trainer over the same heap resumes at the ckpt step
+    tr2 = Trainer(cfg, AdamWConfig(warmup_steps=2), ckpt=cm, ckpt_every=5)
+    assert tr2.start_step == 5
+    w_restored = np.asarray(jax.tree.leaves(tr2.params)[0], np.float32)
+    assert w_restored.shape == w_after7.shape
+    # deterministic data ⇒ re-running steps 5..7 reproduces the state
+    tr2.run(stream, steps=7, log_every=1000)
+    w_replay = np.asarray(jax.tree.leaves(tr2.params)[0], np.float32)
+    np.testing.assert_allclose(w_replay, w_after7, atol=2e-2)
+    heap.close()
+    os.unlink(path)
+
+
+def test_int8_error_feedback_unbiased():
+    params = {"w": jnp.zeros((64, 64))}
+    codec = Int8ErrorFeedback(params)
+    rng = np.random.default_rng(0)
+    g = {"w": jnp.asarray(rng.standard_normal((64, 64)), jnp.float32)}
+    # accumulated dequantized grads converge to accumulated true grads
+    acc_q = np.zeros((64, 64))
+    for _ in range(50):
+        dq = codec(g)
+        acc_q += np.asarray(dq["w"])
+    err = np.abs(acc_q / 50 - np.asarray(g["w"])).max()
+    assert err < 2e-2, err             # error feedback keeps it unbiased
+
+
+def test_elastic_restore_across_meshes():
+    """Checkpoint written under one mesh restores onto another (1×1 here;
+    the arrays are stored unsharded + position-independent)."""
+    cfg = dataclasses.replace(get_smoke_config("qwen2_5_32b"), num_layers=2)
+    path = tempfile.mktemp()
+    heap = Ralloc(path, 256 * MB)
+    cm = CheckpointManager(heap)
+    from repro.models import transformer as T
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    cm.save({"p": params}, step=1)
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    restored, step = cm.load_latest({"p": params})
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    resharded = jax.tree.map(
+        lambda a: jax.device_put(a, NamedSharding(mesh, P())),
+        restored["p"])
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(resharded)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+    heap.close()
+    os.unlink(path)

@@ -1,0 +1,162 @@
+"""Host-side Ralloc: unit + property tests (paper §5 invariants)."""
+
+import threading
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import layout
+from repro.core import pptr as pp
+from repro.core.ralloc import Ralloc
+
+MB = 1 << 20
+
+
+# ---------------------------------------------------------------- layout
+def test_size_classes_paper_geometry():
+    assert len(layout.SIZE_CLASSES) == 39          # paper §4.2
+    assert layout.SIZE_CLASSES[0] == 8
+    assert layout.SIZE_CLASSES[-1] == 14336
+    for s in layout.SIZE_CLASSES:
+        assert s % 8 == 0
+
+
+@given(st.integers(1, 14336))
+def test_size_to_class_covers(sz):
+    cls = layout.size_to_class(sz)
+    assert 1 <= cls < layout.NUM_CLASSES
+    assert layout.class_block_size(cls) >= sz
+    if cls > 1:
+        assert layout.class_block_size(cls - 1) < sz
+
+
+@given(st.integers(0, 2), st.integers(0, (1 << 20) - 1),
+       st.integers(0, (1 << 20) - 1), st.integers(0, (1 << 22) - 1))
+def test_anchor_roundtrip(state, avail, count, tag):
+    a = layout.pack_anchor(state, avail, count, tag)
+    assert layout.unpack_anchor(a) == (state, avail, count, tag)
+
+
+@given(st.integers(-1, (1 << 30) - 2), st.integers(0, (1 << 34) - 1))
+def test_head_roundtrip(idx, ctr):
+    h = layout.pack_head(idx, ctr)
+    assert layout.unpack_head(h) == (idx, ctr)
+
+
+@given(st.integers(0, 1 << 40), st.integers(0, 1 << 40))
+def test_pptr_roundtrip(holder, target):
+    if holder == target:
+        target += 1
+    enc = pp.encode(holder, target)
+    assert pp.is_pptr(enc)
+    assert pp.decode(holder, enc) == target
+
+
+@given(st.integers(min_value=-(2**63), max_value=2**63 - 1))
+def test_pptr_tag_rejects_most_integers(v):
+    # only values carrying the 0xA5A5 tag pattern decode as references
+    if (v >> 48) & 0xFFFF != pp.PPTR_TAG:
+        assert not pp.looks_like_pptr(v)
+
+
+# ------------------------------------------------------------- allocation
+def test_malloc_free_no_overlap():
+    r = Ralloc(None, 16 * MB)
+    ptrs = [r.malloc(sz) for sz in (8, 64, 400, 4096, 14336) for _ in range(50)]
+    assert None not in ptrs
+    spans = sorted((p, p + -(-sz // 8)) for p, sz in
+                   zip(ptrs, [8, 64, 400, 4096, 14336] * 50))
+    # no two live blocks overlap
+    ptrs_sorted = sorted(ptrs)
+    assert len(set(ptrs)) == len(ptrs)
+
+
+def test_persistence_cost_near_zero():
+    """The paper's headline: typical ops persist nothing."""
+    r = Ralloc(None, 16 * MB)
+    r.malloc(64)
+    r.mem.reset_counters()
+    for _ in range(1000):
+        r.free(r.malloc(64))
+    assert r.mem.n_flush <= 4          # only superblock (re)init persists
+    assert r.mem.n_fence <= 2
+
+
+def test_large_blocks_span_superblocks():
+    r = Ralloc(None, 32 * MB)
+    big = r.malloc(200_000)            # > 64 KiB ⇒ multi-superblock
+    assert big is not None
+    sb = r.heap.sb_of(big)
+    assert r.mem.read(r.desc(sb, layout.D_BLOCK_SIZE)) == 200_000
+    assert r.mem.read(r.desc(sb + 1, layout.D_SIZE_CLASS)) == layout.LARGE_CONT
+    r.free(big)
+    # superblocks are reusable afterwards
+    again = [r.malloc(60_000) for _ in range(4)]
+    assert None not in again
+
+
+def test_block_reuse_after_free():
+    r = Ralloc(None, 8 * MB)
+    a = r.malloc(128)
+    r.free(a)
+    b = r.malloc(128)
+    assert b == a                      # LIFO thread cache reuses immediately
+
+
+def test_out_of_memory_returns_none():
+    r = Ralloc(None, 2 * MB)
+    got = [r.malloc(14336) for _ in range(500)]
+    assert None in got                 # bounded heap must eventually fail
+    assert got[0] is not None
+
+
+def test_multithreaded_no_overlap():
+    r = Ralloc(None, 64 * MB)
+    live, errs = [[] for _ in range(6)], []
+
+    def worker(t):
+        try:
+            import random
+            rng = random.Random(t)
+            mine = []
+            for _ in range(1500):
+                if mine and rng.random() < 0.45:
+                    r.free(mine.pop(rng.randrange(len(mine))))
+                else:
+                    p = r.malloc(rng.choice([16, 64, 256, 400]))
+                    assert p is not None
+                    mine.append(p)
+            live[t] = mine
+        except Exception as e:         # pragma: no cover
+            errs.append(repr(e))
+
+    ts = [threading.Thread(target=worker, args=(t,)) for t in range(6)]
+    [t.start() for t in ts]
+    [t.join() for t in ts]
+    assert not errs
+    flat = [p for lst in live for p in lst]
+    assert len(flat) == len(set(flat)), "cross-thread overlap"
+
+
+# ------------------------------------------------ property: random workload
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.tuples(st.booleans(), st.integers(8, 2048)),
+                min_size=1, max_size=300))
+def test_property_alloc_free_invariants(ops):
+    r = Ralloc(None, 16 * MB)
+    live = {}
+    for is_free, sz in ops:
+        if is_free and live:
+            p = next(iter(live))
+            r.free(p)
+            del live[p]
+        else:
+            p = r.malloc(sz)
+            if p is not None:
+                assert p not in live
+                live[p] = sz
+    # all live blocks disjoint
+    spans = sorted((p, p + -(-s // 8)) for p, s in live.items())
+    for (a0, a1), (b0, b1) in zip(spans, spans[1:]):
+        assert a1 <= b0

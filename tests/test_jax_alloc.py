@@ -1,0 +1,120 @@
+"""Device-side vectorized allocator + vectorized GC recovery."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import jax_alloc as ja
+from repro.core import jax_recovery as jr
+
+CFG = ja.ArenaConfig(num_sbs=32, sb_words=256, class_words=(8, 32),
+                     cache_cap=128)
+
+
+@pytest.fixture(scope="module")
+def fns():
+    return {
+        (c, "alloc"): jax.jit(functools.partial(ja.alloc, cfg=CFG, cls=c))
+        for c in (0, 1)
+    } | {
+        (c, "free"): jax.jit(functools.partial(ja.free, cfg=CFG, cls=c))
+        for c in (0, 1)
+    }
+
+
+def test_randomized_invariants(fns):
+    st = ja.init_state(CFG)
+    L = 16
+    rng = np.random.default_rng(0)
+    live = {0: set(), 1: set()}
+    for _ in range(150):
+        cls = int(rng.integers(2))
+        if rng.random() < 0.55:
+            need = jnp.asarray(rng.random(L) < 0.7)
+            st, offs = fns[(cls, "alloc")](state=st, need=need)
+            got = np.asarray(offs)
+            got = got[got >= 0]
+            assert not (set(got.tolist()) & live[cls]), "double alloc"
+            live[cls] |= set(got.tolist())
+        else:
+            pool = list(live[cls])
+            k = min(len(pool), L)
+            sel = rng.choice(pool, size=k, replace=False) if k else []
+            offs = np.full(L, -1, np.int64)
+            offs[:k] = sel
+            st = fns[(cls, "free")](state=st, offs=jnp.asarray(offs, jnp.int32),
+                                    mask=jnp.asarray(offs >= 0))
+            live[cls] -= set(int(x) for x in sel)
+    # cross-class word-range disjointness
+    spans = sorted((o, o + CFG.class_words[c])
+                   for c, s in live.items() for o in s)
+    for (a0, a1), (b0, b1) in zip(spans, spans[1:]):
+        assert a1 <= b0
+    lb = ja.live_blocks(st, CFG)
+    assert lb[0] == len(live[0]) and lb[1] == len(live[1])
+
+
+def test_oom_partial_service(fns):
+    tiny = ja.ArenaConfig(num_sbs=2, sb_words=64, class_words=(32,),
+                          cache_cap=16, expand_sbs=1)
+    alloc = jax.jit(functools.partial(ja.alloc, cfg=tiny, cls=0))
+    st = ja.init_state(tiny)
+    st, o1 = alloc(state=st, need=jnp.ones(4, bool))
+    assert int((np.asarray(o1) >= 0).sum()) == 4   # 2 sbs × 2 blocks
+    st, o2 = alloc(state=st, need=jnp.ones(4, bool))
+    assert int((np.asarray(o2) >= 0).sum()) == 0   # exhausted → all -1
+
+
+def test_vectorized_recovery(fns):
+    st = ja.init_state(CFG)
+    alloc0 = fns[(0, "alloc")]
+    alloc1 = fns[(1, "alloc")]
+    st, data = alloc0(state=st, need=jnp.ones(16, bool))
+    st, tables = alloc1(state=st, need=jnp.asarray([True] * 4 + [False] * 12))
+    data = np.asarray(data)
+    tables = np.asarray(tables)[:4]
+
+    S = jr.num_slots(CFG)
+    refs = np.full((S, 4), -1, np.int32)
+    minw = min(CFG.class_words)
+    for i, t in enumerate(tables):
+        refs[t // minw] = data[i * 4:(i + 1) * 4]
+    roots = np.full((64,), -1, np.int32)
+    roots[:4] = tables
+    pers = ja.persistent_snapshot(st)
+    pers["roots"] = jnp.asarray(roots)
+
+    st2, marked = jax.jit(functools.partial(jr.recover, cfg=CFG))(
+        persistent=pers, ref_table=jnp.asarray(refs))
+    reach = set(tables.tolist()) | set(data.tolist())
+    marked_offs = {int(s) * minw for s in np.nonzero(np.asarray(marked))[0]}
+    assert marked_offs == reach
+    lb = ja.live_blocks(st2, CFG)
+    assert lb[0] == 16 and lb[1] == 4
+    # fresh allocations never overlap recovered-live blocks
+    got = set()
+    for _ in range(20):
+        st2, offs = alloc0(state=st2, need=jnp.ones(16, bool))
+        offs = np.asarray(offs)
+        got |= set(offs[offs >= 0].tolist())
+    assert not (got & reach)
+
+
+def test_retire_on_fetch_preserved():
+    """PARTIAL→EMPTY superblocks retire when fetched (paper §4.4)."""
+    cfg = ja.ArenaConfig(num_sbs=4, sb_words=64, class_words=(8,),
+                         cache_cap=16, expand_sbs=1)
+    alloc = jax.jit(functools.partial(ja.alloc, cfg=cfg, cls=0))
+    free = jax.jit(functools.partial(ja.free, cfg=cfg, cls=0))
+    st = ja.init_state(cfg)
+    st, offs = alloc(state=st, need=jnp.ones(8, bool))
+    st = free(state=st, offs=offs, mask=jnp.ones(8, bool))
+    # spill everything back
+    for _ in range(4):
+        st, o = alloc(state=st, need=jnp.ones(8, bool))
+        st = free(state=st, offs=o, mask=jnp.ones(8, bool))
+    lb = ja.live_blocks(st, cfg)
+    assert lb[0] == 0

@@ -1,0 +1,114 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode, shape/dtype sweeps)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.kernel import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.kv_update.kernel import kv_update, kv_update_ref
+from repro.kernels.paged_attention.kernel import paged_attention
+from repro.kernels.paged_attention.ref import paged_attention_ref
+
+
+@pytest.mark.parametrize("B,H,K,S,dh,causal,win,dt", [
+    (1, 4, 2, 256, 64, True, 0, jnp.float32),
+    (2, 4, 1, 256, 128, True, 0, jnp.bfloat16),     # MQA (granite/rg)
+    (1, 8, 8, 128, 64, False, 0, jnp.float32),      # encoder (hubert)
+    (1, 4, 2, 512, 64, True, 128, jnp.float32),     # local window (rg)
+    (1, 16, 16, 128, 80, False, 0, jnp.bfloat16),   # MHA, non-pow2 dh
+])
+def test_flash_attention_vs_ref(B, H, K, S, dh, causal, win, dt):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, H, S, dh), dt)
+    k = jax.random.normal(ks[1], (B, K, S, dh), dt)
+    v = jax.random.normal(ks[2], (B, K, S, dh), dt)
+    out = flash_attention(q, k, v, causal=causal, window=win,
+                          interpret=True)
+    ref = attention_ref(q, k, v, causal=causal, window=win)
+    tol = 3e-2 if dt == jnp.bfloat16 else 2e-5
+    err = float(jnp.abs(out.astype(jnp.float32)
+                        - ref.astype(jnp.float32)).max())
+    assert err < tol, err
+
+
+@pytest.mark.parametrize("B,H,K,pages,page,P,dh,dt,win", [
+    (2, 4, 2, 16, 16, 4, 64, jnp.float32, 0),
+    (2, 8, 1, 16, 32, 3, 128, jnp.bfloat16, 0),     # MQA decode
+    (1, 4, 4, 8, 16, 2, 64, jnp.float32, 24),       # windowed decode
+    (3, 8, 2, 24, 8, 6, 128, jnp.float32, 0),       # small pages
+])
+def test_paged_attention_vs_ref(B, H, K, pages, page, P, dh, dt, win):
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (B, H, dh), dt)
+    ak = jax.random.normal(ks[1], (pages, page, K, dh), dt)
+    av = jax.random.normal(ks[2], (pages, page, K, dh), dt)
+    rng = np.random.default_rng(0)
+    bt = np.full((B, P), -1, np.int32)
+    lens = np.zeros((B,), np.int32)
+    for b in range(B):
+        n = int(rng.integers(1, P * page))
+        lens[b] = n
+        need = -(-n // page)
+        bt[b, :need] = rng.choice(pages, size=need, replace=False)
+    out = paged_attention(q, ak, av, jnp.asarray(bt), jnp.asarray(lens),
+                          window=win, interpret=True)
+    ref = paged_attention_ref(q, ak, av, jnp.asarray(bt), jnp.asarray(lens),
+                              window=win)
+    tol = 3e-2 if dt == jnp.bfloat16 else 1e-5
+    err = float(jnp.abs(out.astype(jnp.float32)
+                        - ref.astype(jnp.float32)).max())
+    assert err < tol, err
+
+
+def test_kv_update_visited_pages():
+    """Interpret-mode aliasing zeroes unvisited blocks (TPU donation keeps
+    them); compare only the pages the kernel touches."""
+    key = jax.random.PRNGKey(0)
+    B, K, dh, pages, page = 4, 2, 64, 8, 16
+    kn = jax.random.normal(key, (B, K, dh), jnp.float32)
+    vn = jax.random.normal(jax.random.PRNGKey(1), (B, K, dh), jnp.float32)
+    ak = jax.random.normal(jax.random.PRNGKey(2), (pages, page, K, dh))
+    av = jax.random.normal(jax.random.PRNGKey(3), (pages, page, K, dh))
+    pids = jnp.asarray([0, 3, -1, 5], jnp.int32)
+    slots = jnp.asarray([1, 15, 0, 7], jnp.int32)
+    ak2, av2 = kv_update(ak, av, kn, vn, pids, slots, interpret=True)
+    rk, rv = kv_update_ref(ak, av, kn, vn, pids, slots)
+    visited = [0, 3, 5]          # page 7 is the reserved dump page
+    for p in visited:
+        np.testing.assert_allclose(np.asarray(ak2[p]), np.asarray(rk[p]),
+                                   atol=1e-6)
+        np.testing.assert_allclose(np.asarray(av2[p]), np.asarray(rv[p]),
+                                   atol=1e-6)
+
+
+def test_flash_attention_block_shape_sweep():
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = jax.random.normal(ks[0], (1, 2, 256, 64), jnp.float32)
+    k = jax.random.normal(ks[1], (1, 2, 256, 64), jnp.float32)
+    v = jax.random.normal(ks[2], (1, 2, 256, 64), jnp.float32)
+    ref = attention_ref(q, k, v, causal=True)
+    for bq, bk in [(64, 64), (128, 64), (64, 128), (256, 256)]:
+        out = flash_attention(q, k, v, causal=True, block_q=bq, block_k=bk,
+                              interpret=True)
+        assert float(jnp.abs(out - ref).max()) < 2e-5, (bq, bk)
+
+
+@pytest.mark.parametrize("Bz,H,S,P,N", [
+    (2, 2, 256, 64, 32),
+    (1, 4, 128, 32, 64),
+    (2, 1, 512, 64, 128),     # full mamba2-370m state width
+])
+def test_ssd_scan_vs_ref(Bz, H, S, P, N):
+    from repro.kernels.ssd_scan.kernel import ssd_scan
+    from repro.kernels.ssd_scan.ref import ssd_scan_ref
+    ks = jax.random.split(jax.random.PRNGKey(3), 4)
+    xdt = jax.random.normal(ks[0], (Bz, H, S, P), jnp.float32) * 0.1
+    loga = -jnp.abs(jax.random.normal(ks[1], (Bz, H, S), jnp.float32)) * 0.1
+    B = jax.random.normal(ks[2], (Bz, S, N), jnp.float32) * 0.3
+    C = jax.random.normal(ks[3], (Bz, S, N), jnp.float32) * 0.3
+    out = ssd_scan(xdt, loga, B, C, interpret=True)
+    ref = ssd_scan_ref(xdt, loga, B, C)
+    rel = float(jnp.abs(out - ref).max()) / (float(jnp.abs(ref).max()) + 1e-9)
+    assert rel < 1e-4, rel

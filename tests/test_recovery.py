@@ -1,0 +1,184 @@
+"""Recoverability (paper Thm 5.4): crash injection + GC recovery."""
+
+import os
+import tempfile
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import layout, pptr as pp
+from repro.core.ralloc import Ralloc
+
+MB = 1 << 20
+
+
+def _durable_stack(r, n, cls_name="stack_node", base=1000):
+    head = None
+    for k in range(n):
+        node = r.malloc(16)
+        r.write_word(node, pp.PPTR_NULL if head is None else
+                     pp.encode(node, head))
+        r.write_word(node + 1, base + k)
+        r.flush_range(node, 2)
+        r.fence()
+        head = node
+    return head
+
+
+def _walk_stack(r, head):
+    vals = []
+    w = head
+    while w is not None:
+        vals.append(r.read_word(w + 1))
+        w = pp.decode(w, r.read_word(w))
+    return vals
+
+
+def test_crash_recover_stack_with_filter():
+    path = tempfile.mktemp()
+    r = Ralloc(path, 8 * MB, sim_nvm=True, seed=11)
+    head = _durable_stack(r, 80)
+    r.set_root(0, head, "stack_node")
+    for _ in range(300):
+        r.malloc(64)                   # leaked: allocated, never attached
+    r.heap.crash()
+    del r
+
+    r2 = Ralloc(path, 8 * MB, sim_nvm=True, seed=12)
+    assert r2.dirty_restart
+    root = r2.get_root(0, "stack_node")
+    stats = r2.recover()
+    assert stats["reachable_blocks"] == 80
+    assert _walk_stack(r2, root) == [1079 - k for k in range(80)]
+    r2.close()
+    os.unlink(path)
+
+
+def test_crash_recover_conservative():
+    """No filter function ⇒ Boehm-style scan still finds the structure."""
+    path = tempfile.mktemp()
+    r = Ralloc(path, 8 * MB, sim_nvm=True, seed=21)
+    head = _durable_stack(r, 40)
+    r.set_root(0, head)                # no type registered
+    r.heap.crash()
+    del r
+    r2 = Ralloc(path, 8 * MB, sim_nvm=True, seed=22)
+    r2.get_root(0)                     # conservative
+    stats = r2.recover()
+    assert stats["reachable_blocks"] >= 40     # false positives allowed
+    assert _walk_stack(r2, r2.get_root(0))[:3] == [1039, 1038, 1037]
+    r2.close()
+    os.unlink(path)
+
+
+def test_recovered_blocks_never_rehanded():
+    path = tempfile.mktemp()
+    r = Ralloc(path, 8 * MB, sim_nvm=True, seed=31)
+    head = _durable_stack(r, 60)
+    r.set_root(0, head, "stack_node")
+    r.heap.crash()
+    del r
+    r2 = Ralloc(path, 8 * MB, sim_nvm=True, seed=32)
+    root = r2.get_root(0, "stack_node")
+    r2.recover()
+    live = set()
+    w = root
+    while w is not None:
+        live.add(w)
+        w = pp.decode(w, r2.read_word(w))
+    fresh = {r2.malloc(16) for _ in range(4000)}
+    assert None not in fresh
+    assert not (fresh & live)
+    r2.close()
+    os.unlink(path)
+
+
+def test_tree_recovery_binary_filter():
+    path = tempfile.mktemp()
+    r = Ralloc(path, 8 * MB, sim_nvm=True, seed=41)
+
+    def insert(root, key):
+        node = r.malloc(32)
+        r.write_word(node, key)
+        r.write_word(node + 1, key * 10)
+        r.write_word(node + 2, pp.PPTR_NULL)
+        r.write_word(node + 3, pp.PPTR_NULL)
+        r.flush_range(node, 4)
+        r.fence()
+        if root is None:
+            return node
+        cur = root
+        while True:
+            slot = 2 if key < r.read_word(cur) else 3
+            child = pp.decode(cur + slot, r.read_word(cur + slot))
+            if child is None:
+                r.write_word(cur + slot, pp.encode(cur + slot, node))
+                r.flush_range(cur + slot, 1)
+                r.fence()
+                return root
+            cur = child
+
+    rng = np.random.default_rng(0)
+    keys = rng.permutation(200)
+    root = None
+    for k in keys:
+        root = insert(root, int(k))
+    r.set_root(0, root, "tree_node")
+    r.heap.crash()
+    del r
+
+    r2 = Ralloc(path, 8 * MB, sim_nvm=True, seed=42)
+    rt = r2.get_root(0, "tree_node")
+    stats = r2.recover()
+    assert stats["reachable_blocks"] == 200
+
+    def count(n):
+        if n is None:
+            return 0
+        l = pp.decode(n + 2, r2.read_word(n + 2))
+        rr = pp.decode(n + 3, r2.read_word(n + 3))
+        return 1 + count(l) + count(rr)
+
+    assert count(rt) == 200
+    r2.close()
+    os.unlink(path)
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(1, 60), st.integers(0, 200))
+def test_property_crash_anywhere_recovers(seed, n_nodes, n_leaks):
+    """Random durable structure + random leaks + crash ⇒ after recovery all
+    and only reachable blocks are allocated; traversal intact."""
+    path = tempfile.mktemp()
+    r = Ralloc(path, 8 * MB, sim_nvm=True, seed=seed)
+    head = _durable_stack(r, n_nodes)
+    r.set_root(0, head, "stack_node")
+    rng = np.random.default_rng(seed)
+    for _ in range(n_leaks):
+        r.malloc(int(rng.choice([16, 64, 400])))
+    r.heap.crash()
+    del r
+    r2 = Ralloc(path, 8 * MB, sim_nvm=True, seed=seed + 1)
+    assert r2.dirty_restart
+    root = r2.get_root(0, "stack_node")
+    stats = r2.recover()
+    assert stats["reachable_blocks"] == n_nodes
+    assert len(_walk_stack(r2, root)) == n_nodes
+    r2.close()
+    os.unlink(path)
+
+
+def test_clean_restart_no_gc():
+    path = tempfile.mktemp()
+    r = Ralloc(path, 8 * MB, sim_nvm=True, seed=51)
+    head = _durable_stack(r, 10)
+    r.set_root(0, head, "stack_node")
+    r.close()
+    r2 = Ralloc(path, 8 * MB, sim_nvm=True, seed=52)
+    assert not r2.dirty_restart        # clean shutdown detected
+    assert len(_walk_stack(r2, r2.get_root(0))) == 10
+    p = r2.malloc(64)
+    assert p is not None
+    r2.close()
+    os.unlink(path)

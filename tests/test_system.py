@@ -1,0 +1,62 @@
+"""End-to-end behaviour: the paper's system working as one piece.
+
+Train a tiny model with recoverable checkpointing, kill it mid-run,
+restart, serve it with the paged engine, crash the engine's allocator
+state, recover, and keep generating — the full Ralloc lifecycle.
+"""
+
+import dataclasses
+import os
+import tempfile
+
+import jax
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs import get_smoke_config
+from repro.core.ralloc import Ralloc
+from repro.data.pipeline import TokenStream
+from repro.serving.engine import ServingEngine
+from repro.train.loop import Trainer
+from repro.train.optimizer import AdamWConfig
+
+
+def test_train_crash_restart_then_serve():
+    cfg = dataclasses.replace(get_smoke_config("starcoder2_3b"),
+                              num_layers=2, vocab_size=64, page_size=8)
+    path = tempfile.mktemp()
+    heap = Ralloc(path, 256 << 20, sim_nvm=True, seed=7)
+    cm = CheckpointManager(heap)
+    stream = TokenStream(cfg.vocab_size, 2, 32, seed=3)
+
+    tr = Trainer(cfg, AdamWConfig(warmup_steps=2), ckpt=cm, ckpt_every=4)
+    tr.run(stream, steps=6, log_every=1000)
+    heap.heap.crash()                      # full-system crash, no close()
+    del tr, cm, heap
+
+    heap2 = Ralloc(path, 256 << 20, sim_nvm=True, seed=8)
+    assert heap2.dirty_restart
+    cm2 = CheckpointManager(heap2)
+    heap2.get_root(0, "ckpt_manifest")
+    heap2.get_root(1, "ckpt_manifest")
+    stats = heap2.recover()
+    assert stats["reachable_blocks"] > 0
+    tr2 = Trainer(cfg, AdamWConfig(warmup_steps=2), ckpt=cm2, ckpt_every=4)
+    assert tr2.start_step == 4             # resumed from the committed root
+    tr2.run(stream, steps=8, log_every=1000)
+
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    eng = ServingEngine(cfg, mesh, tr2.params, lanes=2, max_seq=48)
+    lane = eng.add_request([1, 2, 3])
+    for _ in range(12):
+        eng.step()
+    assert len(eng.sessions[lane].tokens) > 6
+    rec = eng.crash_and_recover()
+    assert rec["live_before"] == rec["live_after"]
+    before = list(eng.sessions[lane].tokens)
+    for _ in range(4):
+        eng.step()
+    assert eng.sessions[lane].tokens[:len(before)] == before
+    heap2.close()
+    os.unlink(path)
