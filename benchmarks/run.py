@@ -46,6 +46,15 @@ def bench_larson(threads=(1, 2)):
             a.close()
 
 
+def bench_largebench(threads=(1, 2)):
+    for kind in KINDS:
+        for t in threads:
+            a = fresh(kind)
+            _row(f"largebench[{kind},t={t}]",
+                 workloads.largebench(a, n_threads=t))
+            a.close()
+
+
 def bench_prodcon(pairs=(1,)):
     for kind in KINDS:
         for p in pairs:
@@ -102,6 +111,7 @@ def main() -> None:
     bench_threadtest()
     bench_shbench()
     bench_larson()
+    bench_largebench()
     bench_prodcon()
     bench_vacation()
     bench_ycsb()

@@ -103,6 +103,33 @@ def larson(alloc, n_threads=2, rounds=2, objs=400, iters=2000):
     return n_threads * rounds * iters / total
 
 
+def largebench(alloc, n_threads=2, iters=150, small=256, large=200_000):
+    """Large-object path (paper §4.4 ``LARGE_CLASS``): interleave small
+    allocations with multi-superblock objects so superblock (re)init,
+    span expansion and span free all sit on the hot path."""
+    def body(t):
+        rng = random.Random(t)
+        bigs, smalls = [], []
+        for _ in range(iters):
+            if bigs and rng.random() < 0.4:
+                alloc.free(bigs.pop(rng.randrange(len(bigs))))
+            else:
+                p = alloc.malloc(large + rng.randrange(4) * 65536)
+                assert p is not None
+                bigs.append(p)
+            smalls.append(alloc.malloc(small))
+            if len(smalls) > 64:
+                for p in smalls:
+                    alloc.free(p)
+                smalls.clear()
+        for p in bigs:
+            alloc.free(p)
+        for p in smalls:
+            alloc.free(p)
+    dt = run_threads(n_threads, body)
+    return n_threads * iters * 2 / dt
+
+
 def prodcon(alloc, n_pairs=1, items=4000, size=64):
     """Producer/consumer via an M&S-style queue: producer allocates,
     consumer frees (paper's Prod-con)."""

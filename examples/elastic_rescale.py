@@ -20,6 +20,7 @@ from repro.configs import get_smoke_config
 from repro.core.ralloc import Ralloc
 from repro.distributed.sharding import train_param_specs
 from repro.models import transformer as T
+from repro.runtime import make_host_mesh
 
 cfg = dataclasses.replace(get_smoke_config("qwen2_5_32b"), num_layers=2)
 path = os.path.join(tempfile.gettempdir(), "elastic.heap")
@@ -38,8 +39,7 @@ print("checkpoint written under mesh A")
 heap2 = Ralloc(path, 256 << 20)
 cm2 = CheckpointManager(heap2)
 restored, step = cm2.load_latest({"p": params})
-mesh_b = jax.make_mesh((1, 1), ("data", "model"),
-                       axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh_b = make_host_mesh()
 shapes = jax.eval_shape(lambda: params)
 specs = train_param_specs(shapes, mesh_b)
 resharded = jax.tree.map(

@@ -15,11 +15,11 @@ import jax
 from repro.configs import get_smoke_config
 from repro.core import jax_alloc as ja
 from repro.models import transformer as T
+from repro.runtime import make_host_mesh
 from repro.serving.engine import ServingEngine
 
 cfg = dataclasses.replace(get_smoke_config("qwen2_5_32b"), page_size=8)
-mesh = jax.make_mesh((1, 1), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = make_host_mesh()
 params = T.init_params(cfg, jax.random.PRNGKey(0))
 engine = ServingEngine(cfg, mesh, params, lanes=4, max_seq=96)
 

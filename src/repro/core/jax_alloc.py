@@ -26,6 +26,16 @@ Mapping from the paper:
 
 All operations are pure functions ``(state, …) -> (state, …)`` and are
 jit/vmap/scan-compatible; ``size_class`` arguments are static.
+
+Large objects (paper §4.4's ``LARGE_CLASS`` path, ported to the device
+arena): a request bigger than one superblock takes a *contiguous* run of
+superblocks straight off the watermark — the head superblock is tagged
+``LARGE_CLS`` in ``sb_class`` with the object's total word count in
+``sb_block_words`` (both persistent, mirroring the host's
+``D_SIZE_CLASS``/``D_BLOCK_SIZE``), and every continuation superblock is
+tagged ``LARGE_CONT``.  ``free_large`` resets the whole span's class
+records before returning the superblocks to the free stack, so recovery
+can never observe an orphaned continuation marker.
 """
 
 from __future__ import annotations
@@ -39,6 +49,12 @@ import jax.numpy as jnp
 from jax import lax
 
 NULL = jnp.int32(-1)
+
+# ``sb_class`` sentinels.  -1 = uninitialized/free (as before); the large
+# markers sit below it so every small class keeps its index >= 0.
+FREE_CLS = -1
+LARGE_CLS = -2        # head superblock of a multi-superblock object
+LARGE_CONT = -3       # continuation superblock of a large span
 
 
 @dataclasses.dataclass(frozen=True)
@@ -291,8 +307,17 @@ def _spill(st: AllocState, cfg: ArenaConfig, cls: int):
 
 
 def free(state: AllocState, cfg: ArenaConfig, cls: int, offs, mask):
-    """Vectorized deallocation of one block per masked lane."""
+    """Vectorized deallocation of one block per masked lane.
+
+    Lanes whose superblock is not currently initialized for ``cls`` are
+    rejected (masked out) rather than pushed into the class cache — the
+    vector analogue of the host-side rule that ``free`` must never index
+    a thread cache with a large-span sentinel (double-free of a large
+    object, or a small free aimed into a large span, is a no-op here).
+    """
     mask = mask.astype(bool) & (offs >= 0)
+    sb = jnp.clip(offs // cfg.sb_words, 0, cfg.num_sbs - 1)
+    mask = mask & (state.sb_class[sb] == cls)
     k = mask.sum(dtype=jnp.int32)
     state = lax.cond(state.cache_top[cls] + k > cfg.cache_cap,
                      lambda s: _spill(s, cfg, cls), lambda s: s, state)
@@ -304,6 +329,92 @@ def free(state: AllocState, cfg: ArenaConfig, cls: int, offs, mask):
         block_cache=state.block_cache.at[cls].set(row),
         cache_top=state.cache_top.at[cls].add(k),
         free_count=state.free_count + k)
+
+
+def span_sbs(cfg: ArenaConfig, nwords):
+    """Superblocks needed for a large object of ``nwords`` words."""
+    return (nwords + cfg.sb_words - 1) // cfg.sb_words
+
+
+def alloc_large(state: AllocState, cfg: ArenaConfig, nwords):
+    """Contiguous multi-superblock allocation (paper §4.4 large path).
+
+    Placement tries a contiguous run of *free* superblocks below the
+    watermark first (a vectorized windowed-popcount over ``sb_class ==
+    FREE_CLS``), then falls back to expanding the watermark like the
+    host allocator.  Without the free-run search, every span would
+    consume fresh watermark forever and alloc/free cycles of large
+    objects would deterministically exhaust the arena even when it is
+    entirely free.  Returns (state, off) where ``off`` is the word
+    offset of the span start, or -1 when neither placement fits.
+    jit-compatible; ``nwords`` may be a traced scalar.
+    """
+    nwords = jnp.asarray(nwords, jnp.int32)
+    nsb = span_sbs(cfg, nwords)
+    ids = jnp.arange(cfg.num_sbs, dtype=jnp.int32)
+
+    # leftmost window of nsb consecutive free superblocks below the
+    # watermark (free ⟺ class FREE_CLS & in use ⟺ member of the free
+    # stack: retired and never-initialized superblocks only)
+    free_sb = (state.sb_class == FREE_CLS) & (ids < state.used_sbs)
+    csum = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                            jnp.cumsum(free_sb.astype(jnp.int32))])
+    win = csum[jnp.clip(ids + nsb, 0, cfg.num_sbs)] - csum[ids]
+    ok_win = (ids + nsb <= cfg.num_sbs) & (win == nsb)
+    has_run = ok_win.any()
+    wm_ok = state.used_sbs + nsb <= cfg.num_sbs
+    ok = (nwords > 0) & (has_run | wm_ok)
+    first = jnp.where(has_run, jnp.argmax(ok_win).astype(jnp.int32),
+                      state.used_sbs)
+    span = ok & (ids >= first) & (ids < first + nsb)
+    head = span & (ids == first)
+    cont = span & ~head
+    # persistent records: class sentinel on every span member, total size
+    # on the head (the device mirror of D_SIZE_CLASS / D_BLOCK_SIZE)
+    sb_class = jnp.where(head, LARGE_CLS,
+                         jnp.where(cont, LARGE_CONT, state.sb_class))
+    sb_block_words = jnp.where(head, nwords,
+                               jnp.where(cont, 0, state.sb_block_words))
+    # claimed superblocks leave the free stack (order-preserving compact)
+    stack = state.free_stack
+    live = jnp.arange(stack.shape[0]) < state.free_top
+    claimed = ok & has_run & (stack >= first) & (stack < first + nsb)
+    keep = live & ~claimed
+    pos = jnp.cumsum(keep.astype(jnp.int32)) - 1
+    dump = stack.shape[0] - 1
+    new_stack = jnp.full_like(stack, -1).at[
+        jnp.where(keep, pos, dump)].set(jnp.where(keep, stack, -1))
+    new_stack = new_stack.at[dump].set(-1)
+    state = state._replace(
+        sb_class=sb_class,
+        sb_block_words=sb_block_words,
+        free_stack=new_stack,
+        free_top=keep.sum(dtype=jnp.int32),
+        used_sbs=jnp.where(ok & ~has_run, state.used_sbs + nsb,
+                           state.used_sbs),
+        alloc_count=state.alloc_count + ok.astype(jnp.int32))
+    return state, jnp.where(ok, first * cfg.sb_words, -1)
+
+
+def free_large(state: AllocState, cfg: ArenaConfig, off):
+    """Free a large span: reset every member's class record (head *and*
+    continuations — recovery must never see orphaned ``LARGE_CONT``
+    markers), then push the superblocks onto the free stack for reuse by
+    any class.  A non-head / already-freed ``off`` is rejected (no-op),
+    which makes double-free safe.
+    """
+    off = jnp.asarray(off, jnp.int32)
+    sb = jnp.clip(off // cfg.sb_words, 0, cfg.num_sbs - 1)
+    valid = (off >= 0) & (state.sb_class[sb] == LARGE_CLS)
+    nsb = span_sbs(cfg, state.sb_block_words[sb])
+    ids = jnp.arange(cfg.num_sbs, dtype=jnp.int32)
+    span = valid & (ids >= sb) & (ids < sb + nsb)
+    fs, ft = _push_many(state.free_stack, state.free_top, ids, span)
+    return state._replace(
+        sb_class=jnp.where(span, FREE_CLS, state.sb_class),
+        sb_block_words=jnp.where(span, 0, state.sb_block_words),
+        free_stack=fs, free_top=ft,
+        free_count=state.free_count + valid.astype(jnp.int32))
 
 
 def set_root(state: AllocState, i: int, off) -> AllocState:
@@ -322,12 +433,18 @@ def persistent_snapshot(state: AllocState) -> dict:
 
 
 def live_blocks(state: AllocState, cfg: ArenaConfig):
-    """Debug/test helper: per-class count of blocks not free anywhere."""
+    """Debug/test helper: per-class count of blocks not free anywhere.
+
+    The extra ``"large"`` key counts live multi-superblock objects (one
+    per ``LARGE_CLS`` head below the watermark).
+    """
     out = {}
+    in_use = jnp.arange(cfg.num_sbs) < state.used_sbs
     for c in range(cfg.num_classes):
         total = cfg.blocks_per_sb(c)
-        sbs = (state.sb_class == c) & (jnp.arange(cfg.num_sbs) < state.used_sbs)
+        sbs = (state.sb_class == c) & in_use
         in_sb = jnp.where(sbs, total - state.sb_free_count, 0).sum()
         cached = state.cache_top[c]
         out[c] = int(in_sb - cached)
+    out["large"] = int(((state.sb_class == LARGE_CLS) & in_use).sum())
     return out

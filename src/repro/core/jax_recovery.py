@@ -31,7 +31,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from .jax_alloc import AllocState, ArenaConfig, init_state
+from .jax_alloc import (FREE_CLS, LARGE_CLS, LARGE_CONT, AllocState,
+                        ArenaConfig, init_state, span_sbs)
 
 
 def slot_of(cfg: ArenaConfig, off):
@@ -95,11 +96,30 @@ def sweep(cfg: ArenaConfig, persistent: dict, marked) -> AllocState:
 
     free_bitmap = jnp.zeros((n, cfg.max_blocks), bool)
     counts = jnp.zeros((n,), jnp.int32)
-    empty = in_use & (sb_class < 0)              # never initialized → free
+    empty = in_use & (sb_class == FREE_CLS)      # never initialized → free
     partial_stacks = []
     partial_tops = []
     Spad = num_slots(cfg)
     marked_pad = jnp.concatenate([marked, jnp.zeros((1,), bool)])
+
+    # ---- large spans: a span is live iff its *head* block is marked -------
+    # Associate every superblock with the nearest head at-or-before it (a
+    # cummax over head indices), then check it falls inside that head's
+    # recorded span.  Orphaned LARGE_CONT markers (no owning head, or out
+    # of the head's reach) and unmarked spans are swept to the free stack.
+    is_head = in_use & (sb_class == LARGE_CLS)
+    span_len = jnp.where(is_head, span_sbs(cfg, persistent["sb_block_words"]),
+                         0)
+    head_of = lax.associative_scan(
+        jnp.maximum, jnp.where(is_head, sb_ids, -1))
+    reach = jnp.where(head_of >= 0, head_of + span_len[jnp.maximum(head_of, 0)],
+                      0)
+    in_span = in_use & (head_of >= 0) & (sb_ids < reach)
+    head_slot = jnp.where(in_span, (head_of * cfg.sb_words) // minw, Spad)
+    head_marked = marked_pad[head_slot]
+    is_large = in_use & ((sb_class == LARGE_CLS) | (sb_class == LARGE_CONT))
+    live_large = is_large & in_span & head_marked
+    empty = empty | (is_large & ~live_large)
 
     new_class = sb_class
     for c in range(cfg.num_classes):
@@ -124,9 +144,11 @@ def sweep(cfg: ArenaConfig, persistent: dict, marked) -> AllocState:
         partial_stacks.append(stack_c)
         partial_tops.append(top_c)
 
-    # empty superblocks: wipe their bitmaps/counts and stack them as free
+    # empty superblocks (incl. dead/orphaned large spans): wipe their
+    # bitmaps/counts, clear their class records, and stack them as free
     free_bitmap = jnp.where(empty[:, None], False, free_bitmap)
     counts = jnp.where(empty, 0, counts)
+    new_class = jnp.where(empty, FREE_CLS, new_class)
     free_stack, free_top = _compact(empty, n + 1)
 
     st = init_state(cfg, max_roots=persistent["roots"].shape[0])

@@ -124,7 +124,21 @@ class Ralloc:
         sb = self.heap.sb_of(ptr)
         assert 0 <= sb < self.config.num_sbs, "free of non-heap pointer"
         cls = self.mem.read(self.desc(sb, D_SIZE_CLASS))
+        if cls == LARGE_CONT:
+            # interior pointer into a live large span: redirect to the
+            # owning head superblock instead of indexing the thread cache
+            # with the sentinel (which silently corrupted the last class)
+            while cls == LARGE_CONT:
+                sb -= 1
+                cls = self.mem.read(self.desc(sb, D_SIZE_CLASS))
+            if cls != LARGE_CLASS:
+                raise ValueError(
+                    f"free of pointer {ptr} inside an orphaned large-span "
+                    f"continuation (no owning head superblock)")
         if cls == LARGE_CLASS:
+            if self.mem.read(self.desc(sb, D_BLOCK_SIZE)) <= 0:
+                raise ValueError(
+                    f"double/invalid free of large block at superblock {sb}")
             self._free_large(sb)
             return
         cache = self._tcache()[cls]
@@ -342,6 +356,18 @@ class Ralloc:
         m = self.mem
         size = m.read(self.desc(first, D_BLOCK_SIZE))
         nsb = math.ceil(size / SB_SIZE)
+        # clear the persistent span records (head size + LARGE_CONT
+        # continuation markers) *before* the superblocks become reachable
+        # from the free list: a crash between the push and a lazy reset
+        # would otherwise leave recovery staring at orphaned continuation
+        # markers / a stale head that could resurrect the whole span
+        to_persist = []
+        for sb in range(first, first + nsb):
+            m.write(self.desc(sb, D_SIZE_CLASS), 0)
+            m.write(self.desc(sb, D_BLOCK_SIZE), 0)
+            to_persist += [self.desc(sb, D_SIZE_CLASS),
+                           self.desc(sb, D_BLOCK_SIZE)]
+        self._persist(*to_persist)
         for sb in range(first, first + nsb):
             self._init_free_sb(sb)
             self._push_list(layout.M_FREE_HEAD, D_NEXT_FREE, sb)

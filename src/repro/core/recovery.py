@@ -152,6 +152,13 @@ def recover(r) -> dict:
             continue
         marked = by_sb.get(sb)
         if not marked:
+            # clear stale class records (mirrors the device sweep): a
+            # crash mid-_free_large can leave a dead head / orphaned
+            # LARGE_CONT here, and a free-listed superblock still tagged
+            # as a live large head would let a stale pointer re-free the
+            # span into duplicate free-list entries
+            m.write(r.desc(sb, D_SIZE_CLASS), 0)
+            m.write(r.desc(sb, D_BLOCK_SIZE), 0)
             m.write(aw, pack_anchor(EMPTY, ANCHOR_NIL_AVAIL, 0, 0))
             _push(r, layout.M_FREE_HEAD, D_NEXT_FREE, sb)
             n_free_sbs += 1

@@ -16,7 +16,9 @@ architectures and both meshes.
 from __future__ import annotations
 
 import jax
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
+
+from ..runtime import named_sharding
 
 
 def _fit(spec: P, shape, mesh) -> P:
@@ -118,7 +120,7 @@ def train_param_specs(params_shape, mesh):
 
 
 def train_param_shardings(params_shape, mesh):
-    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+    return jax.tree.map(lambda s: named_sharding(mesh, s),
                         train_param_specs(params_shape, mesh))
 
 
@@ -146,7 +148,7 @@ def make_batch_constrainer(mesh):
         if x.ndim >= 1 and x.shape[0] % size == 0 and size > 1:
             spec = P(dp, *([None] * (x.ndim - 1)))
             return jax.lax.with_sharding_constraint(
-                x, NamedSharding(mesh, spec))
+                x, named_sharding(mesh, spec))
         return x
 
     return constrain

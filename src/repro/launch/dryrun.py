@@ -38,6 +38,8 @@ from ..train.step import make_train_step
 
 def _analysis(lowered, compiled, mesh, extra):
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):    # jax 0.4.x: one dict per program
+        ca = ca[0] if ca else {}
     ma = compiled.memory_analysis()
     chips = mesh.devices.size
     roof = hlo_analysis.analyze(compiled.as_text(), chips)

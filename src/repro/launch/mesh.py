@@ -3,24 +3,19 @@
 A function (not a module-level constant) so importing this module never
 touches jax device state — the dry-run must set
 ``XLA_FLAGS=--xla_force_host_platform_device_count=512`` *before* any
-jax initialization.
+jax initialization.  Mesh construction itself goes through the
+version-agnostic ``repro.runtime`` layer.
 """
 
 from __future__ import annotations
 
-import jax
+from ..runtime import make_host_mesh, make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
-def make_host_mesh(data: int = 1, model: int = 1):
-    """Small mesh for CPU tests/examples."""
-    return jax.make_mesh(
-        (data, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+__all__ = ["make_production_mesh", "make_host_mesh"]

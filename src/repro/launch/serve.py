@@ -15,6 +15,7 @@ import jax
 
 from ..configs import get_config, get_smoke_config
 from ..models import transformer as T
+from ..runtime import make_host_mesh
 from ..serving.engine import ServingEngine
 
 
@@ -29,8 +30,7 @@ def main():
     args = ap.parse_args()
 
     cfg = (get_smoke_config if args.smoke else get_config)(args.arch)
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_host_mesh()
     params = T.init_params(cfg, jax.random.PRNGKey(0))
     engine = ServingEngine(cfg, mesh, params, lanes=max(args.requests, 2),
                            max_seq=args.max_seq)

@@ -10,18 +10,19 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from ..configs import SHAPES
 from ..distributed import sharding as shrules
 from ..models import transformer as T
 from ..models.config import ModelConfig
+from ..runtime import named_sharding
 from ..serving import decode as dec
 from ..train.optimizer import init_opt_state
 
 
 def sds(shape, dtype, mesh=None, spec=None):
-    sharding = NamedSharding(mesh, spec) if mesh is not None else None
+    sharding = named_sharding(mesh, spec) if mesh is not None else None
     return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
 
 
@@ -36,7 +37,7 @@ def abstract_params(cfg: ModelConfig, mesh=None, layout: str = "train"):
         specs = dec.serve_param_specs(cfg, shapes, mesh.shape["model"])
     return jax.tree.map(
         lambda s, sp: jax.ShapeDtypeStruct(
-            s.shape, s.dtype, sharding=NamedSharding(mesh, sp)),
+            s.shape, s.dtype, sharding=named_sharding(mesh, sp)),
         shapes, specs)
 
 
@@ -46,14 +47,14 @@ def abstract_opt_state(params_abs, mesh):
     def shard_like(s, ref):
         if not s.shape:
             return jax.ShapeDtypeStruct(s.shape, s.dtype,
-                                        sharding=NamedSharding(mesh, P()))
+                                        sharding=named_sharding(mesh, P()))
         return jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=ref.sharding)
 
     return {
         "m": jax.tree.map(shard_like, shapes["m"], params_abs),
         "v": jax.tree.map(shard_like, shapes["v"], params_abs),
         "step": jax.ShapeDtypeStruct((), jnp.int32,
-                                     sharding=NamedSharding(mesh, P())),
+                                     sharding=named_sharding(mesh, P())),
     }
 
 
@@ -96,7 +97,7 @@ def decode_state_specs(cfg: ModelConfig, shape_name: str, mesh):
     sspecs = dec.dstate_specs(cfg, mesh, batch_sharded)
     dstate_abs = jax.tree.map(
         lambda s, sp: jax.ShapeDtypeStruct(
-            s.shape, s.dtype, sharding=NamedSharding(mesh, sp)),
+            s.shape, s.dtype, sharding=named_sharding(mesh, sp)),
         dstate_shapes, sspecs, is_leaf=lambda x: isinstance(
             x, jax.ShapeDtypeStruct))
     tok_spec = P(dp_axes) if batch_sharded else P()

@@ -1,0 +1,19 @@
+"""Runtime layer: version-agnostic device/mesh/sharding construction.
+
+No module outside this package may touch ``jax.sharding.AxisType``,
+``jax.make_mesh``'s ``axis_types=``, or the moving ``shard_map`` entry
+point directly — import from here instead.
+"""
+
+from .compat import (AXIS_TYPE_AUTO, axis_size, axis_types_kwargs,
+                     make_host_mesh, make_mesh, named_sharding, shard_map)
+
+__all__ = [
+    "AXIS_TYPE_AUTO",
+    "axis_size",
+    "axis_types_kwargs",
+    "make_host_mesh",
+    "make_mesh",
+    "named_sharding",
+    "shard_map",
+]

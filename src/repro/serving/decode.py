@@ -23,6 +23,7 @@ from jax.sharding import PartitionSpec as P
 
 from ..layers.common import apply_norm
 from ..models.config import ModelConfig
+from ..runtime import axis_size, shard_map
 from . import tp_layers as tpl
 
 MODEL_AXIS = "model"
@@ -284,7 +285,7 @@ def _decode_local(cfg: ModelConfig, seq_dp_axes, params, dstate, tokens,
     # one new token is now resident at position pos for every sequence:
     # advance position; mark its slot in kv_pos (idempotent w.r.t. layers)
     page_loc = kv_pos.shape[-1]
-    page = page_loc * lax.axis_size(M)
+    page = page_loc * axis_size(M)
     P_loc = kv_pos.shape[1]
     slot = pos % page
     mine = (slot // page_loc) == lax.axis_index(M)
@@ -327,13 +328,12 @@ def make_decode_step(cfg: ModelConfig, mesh, params_shape, *,
     if return_logits:
         out_specs = out_specs + ((P(dp, None) if batch_sharded
                                   else P(None, None)),)
-    fn = jax.shard_map(
+    fn = shard_map(
         functools.partial(_decode_local, cfg, seq_dp_axes,
                           return_logits=return_logits,
                           vocab_sharded=vocab_sharded),
         mesh=mesh,
         in_specs=(pspecs, sspecs, tok_spec),
         out_specs=out_specs,
-        check_vma=False,
     )
     return jax.jit(fn, donate_argnums=(1,)), pspecs, sspecs

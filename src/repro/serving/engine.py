@@ -60,6 +60,13 @@ class ServingEngine:
                                                 cls=PAGE_CLS))
         self._free = jax.jit(functools.partial(ja.free, cfg=self.acfg,
                                                cls=PAGE_CLS))
+        self._alloc_large = jax.jit(functools.partial(ja.alloc_large,
+                                                      cfg=self.acfg))
+        self._free_large = jax.jit(functools.partial(ja.free_large,
+                                                     cfg=self.acfg))
+        # lanes holding a contiguous multi-superblock page span (oversized
+        # prompts): lane -> (span head offset, n_pages), freed via free_large
+        self.large_spans: dict[int, tuple[int, int]] = {}
         pshape = jax.tree.map(
             lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), params)
         self.step_fn, _, _ = dec.make_decode_step(cfg, mesh, pshape)
@@ -87,6 +94,16 @@ class ServingEngine:
             self.dstate["block_table"].at[lane].set(-1)
         self.dstate["kv_pos"] = self.dstate["kv_pos"].at[lane].set(-1)
         self.cur_tokens[lane] = prompt[0]
+        # oversized prompt: its page table will not fit the per-step lazy
+        # path gracefully — reserve one contiguous multi-superblock span
+        # covering every prompt page up front (device large-object path).
+        # Clamped to the page-table width: generation stops at max_seq, so
+        # pages past it would never be touched.
+        n_prompt_pages = min(-(-len(prompt) // self.cfg.page_size),
+                             int(self.dstate["block_table"].shape[1]))
+        if (self.cfg.attn_layers > 0 and not share_prefix
+                and n_prompt_pages > self.acfg.sb_words):
+            self._reserve_span(lane, n_prompt_pages)
         if share_prefix:
             hit = self._prefix_cache.get(tuple(prompt))
             if hit is not None:
@@ -108,11 +125,29 @@ class ServingEngine:
         self.astate = ja.set_root(self.astate, lane, jnp.int32(lane))
         return lane
 
+    def _reserve_span(self, lane: int, n_pages: int) -> None:
+        """Back ``n_pages`` page-table slots of ``lane`` with one
+        contiguous large-object span (page ids = span offsets)."""
+        self.astate, off = self._alloc_large(state=self.astate,
+                                             nwords=jnp.int32(n_pages))
+        off = int(off)
+        if off < 0:
+            self.free_lanes.append(lane)
+            del self.sessions[lane]
+            raise MemoryError(
+                f"KV arena cannot reserve a contiguous {n_pages}-page span")
+        self.large_spans[lane] = (off, n_pages)
+        bt = np.asarray(self.dstate["block_table"]).copy()
+        bt[lane, :n_pages] = off + np.arange(n_pages, dtype=np.int32)
+        self.dstate["block_table"] = jnp.asarray(bt)
+
     def publish_prefix(self, lane: int) -> None:
         """Register this lane's fully-processed prompt as a shared prefix.
 
         Only whole pages are shared (a partially-filled page would be
         written by the owner — violating block disjointness)."""
+        if lane in self.large_spans:
+            return          # span pages are owned whole, never refcounted
         s = self.sessions[lane]
         pos = int(np.asarray(self.dstate["pos"][lane]))
         page = self.cfg.page_size
@@ -162,10 +197,16 @@ class ServingEngine:
                 active[lane] = True
         if not active.any():
             return {}
-        # page-boundary lanes need a fresh page before the step
+        # page-boundary lanes need a fresh page before the step — unless
+        # the slot is already backed (prefix hit or a reserved large span)
         pos = np.asarray(self.dstate["pos"])
         page = self.cfg.page_size
         need = active & (pos % page == 0) & (self.cfg.attn_layers > 0)
+        if need.any():
+            # only boundary steps pay the block-table device→host sync
+            bt_now = np.asarray(self.dstate["block_table"])
+            slot = np.clip(pos // page, 0, bt_now.shape[1] - 1)
+            need &= bt_now[np.arange(self.lanes), slot] < 0
         if need.any():
             self.astate, offs = self._alloc(state=self.astate,
                                             need=jnp.asarray(need))
@@ -201,6 +242,14 @@ class ServingEngine:
         s.done = True
         bt = np.asarray(self.dstate["block_table"][lane])
         pages = bt[bt >= 0].astype(np.int32)
+        if lane in self.large_spans:
+            # the prompt's page table is one large span (freed whole);
+            # pages decoded past the span were lazily allocated and go
+            # through the ordinary per-page free below
+            off, n_span = self.large_spans.pop(lane)
+            self.astate = self._free_large(state=self.astate,
+                                           off=jnp.int32(off))
+            pages = pages[(pages < off) | (pages >= off + n_span)]
         keep = []
         for p in pages.tolist():
             if p in self.page_refs:

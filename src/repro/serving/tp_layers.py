@@ -25,12 +25,13 @@ import jax.numpy as jnp
 from jax import lax
 
 from ..layers.rope import apply_rope
+from ..runtime import axis_size
 
 NEG_INF = -1e30
 
 
 def _tp(axis):
-    return lax.axis_size(axis)
+    return axis_size(axis)
 
 
 def _idx(axis):
@@ -85,7 +86,7 @@ def dp_linear_index(dp_axes) -> jax.Array:
     """Flattened index over (possibly several) data axes."""
     out = jnp.int32(0)
     for a in dp_axes:
-        out = out * lax.axis_size(a) + lax.axis_index(a)
+        out = out * axis_size(a) + lax.axis_index(a)
     return out
 
 

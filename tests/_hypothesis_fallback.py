@@ -1,0 +1,101 @@
+"""Minimal stand-in for ``hypothesis`` when it is not installed.
+
+The property tests in this repo use a small slice of hypothesis's API:
+``@given`` over ``integers`` / ``booleans`` / ``tuples`` / ``lists``
+strategies, plus ``@settings(max_examples=…, deadline=…)``.  This shim
+re-implements exactly that slice as deterministic seeded random sampling
+so the suite still *runs* the properties (rather than skipping whole
+modules) in environments where dependencies cannot be installed.
+
+It is NOT a replacement for hypothesis — no shrinking, no example
+database, no sophisticated search.  ``requirements-dev.txt`` pins the
+real thing; test modules import it first and fall back to this shim:
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _hypothesis_fallback import given, settings, strategies as st
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import zlib
+
+DEFAULT_MAX_EXAMPLES = 25
+
+
+class _Strategy:
+    def __init__(self, sample):
+        self._sample = sample
+
+    def sample(self, rng: random.Random):
+        return self._sample(rng)
+
+
+class strategies:  # noqa: N801 — mirrors ``hypothesis.strategies`` module
+    @staticmethod
+    def integers(min_value=None, max_value=None):
+        lo = -(2 ** 63) if min_value is None else min_value
+        hi = 2 ** 63 - 1 if max_value is None else max_value
+
+        def sample(rng):
+            # bias toward boundaries — the cheapest bug-finding trick
+            r = rng.random()
+            if r < 0.1:
+                return lo
+            if r < 0.2:
+                return hi
+            return rng.randint(lo, hi)
+        return _Strategy(sample)
+
+    @staticmethod
+    def booleans():
+        return _Strategy(lambda rng: rng.random() < 0.5)
+
+    @staticmethod
+    def tuples(*strats):
+        return _Strategy(lambda rng: tuple(s.sample(rng) for s in strats))
+
+    @staticmethod
+    def lists(elem, min_size=0, max_size=10):
+        def sample(rng):
+            n = rng.randint(min_size, max_size)
+            return [elem.sample(rng) for _ in range(n)]
+        return _Strategy(sample)
+
+
+def given(*strats):
+    def decorate(fn):
+        @functools.wraps(fn)
+        def runner(*args, **kwargs):
+            n = getattr(runner, "_max_examples", DEFAULT_MAX_EXAMPLES)
+            # deterministic per-test seed so failures reproduce
+            seed = zlib.crc32(fn.__qualname__.encode())
+            rng = random.Random(seed)
+            for _ in range(n):
+                drawn = [s.sample(rng) for s in strats]
+                fn(*args, *drawn, **kwargs)
+        if not hasattr(runner, "_max_examples"):  # wraps() copies a stashed
+            runner._max_examples = DEFAULT_MAX_EXAMPLES  # below-given value
+        runner.hypothesis_fallback = True
+        # hide the strategy-filled parameters from pytest's fixture
+        # resolution (wraps() exposes them via __wrapped__ otherwise)
+        del runner.__wrapped__
+        runner.__signature__ = inspect.Signature()
+        return runner
+    return decorate
+
+
+def settings(max_examples: int = DEFAULT_MAX_EXAMPLES, deadline=None,
+             **_ignored):
+    def decorate(fn):
+        if hasattr(fn, "_max_examples"):      # applied above @given
+            fn._max_examples = max_examples
+            return fn
+        # applied below @given: stash for given() to pick up via wraps
+        fn._max_examples = max_examples
+        return fn
+    return decorate

@@ -13,6 +13,7 @@ from repro.configs import get_smoke_config
 from repro.core.ralloc import Ralloc
 from repro.data.pipeline import TokenStream
 from repro.distributed.compression import Int8ErrorFeedback
+from repro.runtime import make_host_mesh
 from repro.train.loop import Trainer
 from repro.train.optimizer import AdamWConfig
 
@@ -99,8 +100,7 @@ def test_elastic_restore_across_meshes():
     from repro.models import transformer as T
     params = T.init_params(cfg, jax.random.PRNGKey(0))
     cm.save({"p": params}, step=1)
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_host_mesh()
     restored, step = cm.load_latest({"p": params})
     from jax.sharding import NamedSharding, PartitionSpec as P
     resharded = jax.tree.map(

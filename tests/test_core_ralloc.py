@@ -4,7 +4,11 @@ import threading
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                      # container without dev deps
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.core import layout
 from repro.core import pptr as pp
@@ -94,6 +98,49 @@ def test_large_blocks_span_superblocks():
     # superblocks are reusable afterwards
     again = [r.malloc(60_000) for _ in range(4)]
     assert None not in again
+
+
+def test_free_large_resets_continuation_metadata():
+    """Regression: ``_free_large`` must clear D_SIZE_CLASS/D_BLOCK_SIZE on
+    every span superblock (head + LARGE_CONT continuations) before they
+    reach the free list — stale markers poisoned later frees/recovery."""
+    r = Ralloc(None, 32 * MB)
+    big = r.malloc(300_000)                # 5-superblock span
+    sb = r.heap.sb_of(big)
+    n_cont = sum(
+        1 for s in range(sb + 1, r.config.num_sbs)
+        if r.mem.read(r.desc(s, layout.D_SIZE_CLASS)) == layout.LARGE_CONT)
+    assert n_cont == 4
+    r.free(big)
+    for s in range(sb, sb + 5):
+        assert r.mem.read(r.desc(s, layout.D_SIZE_CLASS)) == 0
+        assert r.mem.read(r.desc(s, layout.D_BLOCK_SIZE)) == 0
+
+
+def test_free_of_continuation_pointer_redirects_to_head():
+    """Regression: freeing a pointer that lands in a LARGE_CONT superblock
+    used to index the thread cache with the -1 sentinel (corrupting the
+    last size class); it must free the owning large object instead."""
+    r = Ralloc(None, 4 * MB)
+    big = r.malloc(200_000)
+    interior = big + layout.SB_WORDS + 7   # inside the 2nd span superblock
+    r.free(interior)
+    sb = r.heap.sb_of(big)
+    assert r.mem.read(r.desc(sb, layout.D_BLOCK_SIZE)) == 0   # span freed
+    # the span's superblocks really return: exhaust the small heap and
+    # check allocations landed inside the freed span's superblock range
+    got_sbs = set()
+    while (p := r.malloc(14336)) is not None:
+        got_sbs.add(r.heap.sb_of(p))
+    assert {sb, sb + 1, sb + 2, sb + 3} <= got_sbs
+
+
+def test_double_free_of_large_block_rejected():
+    r = Ralloc(None, 32 * MB)
+    big = r.malloc(200_000)
+    r.free(big)
+    with pytest.raises(ValueError):
+        r.free(big)
 
 
 def test_block_reuse_after_free():

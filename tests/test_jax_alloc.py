@@ -103,6 +103,111 @@ def test_vectorized_recovery(fns):
     assert not (got & reach)
 
 
+def test_large_alloc_crash_recovery_roundtrip():
+    """alloc_large → write → crash → vectorized recover → read parity."""
+    cfg = ja.ArenaConfig(num_sbs=16, sb_words=64, class_words=(8,),
+                         cache_cap=32, expand_sbs=2)
+    st = ja.init_state(cfg)
+    st, off = jax.jit(functools.partial(ja.alloc_large, cfg=cfg))(
+        state=st, nwords=jnp.int32(200))           # 4-superblock span
+    off = int(off)
+    assert off == 0
+    assert np.asarray(st.sb_class)[:4].tolist() == \
+        [ja.LARGE_CLS] + [ja.LARGE_CONT] * 3
+    # the consumer's data array: write through the span's word offsets
+    data = np.zeros((cfg.total_words,), np.int64)
+    data[off:off + 200] = np.arange(200) + 7
+    # some small blocks too — one rooted, the rest leaked
+    st, smalls = jax.jit(functools.partial(ja.alloc, cfg=cfg, cls=0))(
+        state=st, need=jnp.ones(8, bool))
+    smalls = np.asarray(smalls)
+
+    pers = ja.persistent_snapshot(st)
+    roots = np.full((64,), -1, np.int32)
+    roots[0] = off                                  # span head is a root
+    roots[1] = int(smalls[0])
+    pers["roots"] = jnp.asarray(roots)
+    S = jr.num_slots(cfg)
+    refs = jnp.full((S, 1), -1, jnp.int32)
+    st2, marked = jax.jit(functools.partial(jr.recover, cfg=cfg))(
+        persistent=pers, ref_table=refs)
+
+    lb = ja.live_blocks(st2, cfg)
+    assert lb["large"] == 1 and lb[0] == 1          # span + rooted small
+    assert np.asarray(st2.sb_class)[:4].tolist() == \
+        [ja.LARGE_CLS] + [ja.LARGE_CONT] * 3
+    assert int(st2.sb_block_words[0]) == 200        # size record intact
+    assert data[off:off + 200].tolist() == (np.arange(200) + 7).tolist()
+    # fresh allocations (small or large) never overlap the live span
+    alloc = jax.jit(functools.partial(ja.alloc, cfg=cfg, cls=0))
+    got = []
+    for _ in range(30):
+        st2, o = alloc(state=st2, need=jnp.ones(8, bool))
+        got += np.asarray(o)[np.asarray(o) >= 0].tolist()
+    assert got and all(not (off <= g < off + 4 * cfg.sb_words) for g in got)
+    # free the span: every superblock returns for reuse, markers cleared
+    st2 = jax.jit(functools.partial(ja.free_large, cfg=cfg))(
+        state=st2, off=jnp.int32(off))
+    assert ja.live_blocks(st2, cfg)["large"] == 0
+    assert np.asarray(st2.sb_class)[:4].tolist() == [-1] * 4
+
+
+def test_large_alloc_watermark_exhaustion():
+    """A contiguous request the watermark cannot satisfy returns -1 and
+    leaves the state untouched (partial spans must never leak out)."""
+    cfg = ja.ArenaConfig(num_sbs=4, sb_words=64, class_words=(8,),
+                         cache_cap=16, expand_sbs=1)
+    st = ja.init_state(cfg)
+    st, ok_off = ja.alloc_large(st, cfg, jnp.int32(2 * 64))   # 2 of 4 sbs
+    assert int(ok_off) == 0
+    st, bad = ja.alloc_large(st, cfg, jnp.int32(3 * 64))      # needs 3 > 2
+    assert int(bad) == -1
+    assert int(st.used_sbs) == 2                              # unchanged
+    assert np.asarray(st.sb_class)[2:].tolist() == [-1, -1]
+    st, fit = ja.alloc_large(st, cfg, jnp.int32(2 * 64))      # exact fit
+    assert int(fit) == 2 * 64
+    assert ja.live_blocks(st, cfg)["large"] == 2
+
+
+def test_large_alloc_reuses_freed_spans():
+    """Regression: alloc/free cycles of large spans must not exhaust the
+    arena — freed spans are found again by the contiguous-run search
+    (watermark alone would leak every cycle and fail permanently)."""
+    cfg = ja.ArenaConfig(num_sbs=6, sb_words=64, class_words=(8,),
+                         cache_cap=16, expand_sbs=1)
+    allocL = jax.jit(functools.partial(ja.alloc_large, cfg=cfg))
+    freeL = jax.jit(functools.partial(ja.free_large, cfg=cfg))
+    st = ja.init_state(cfg)
+    for i in range(10):                       # 10 cycles ≫ 3 sbs of slack
+        st, off = allocL(state=st, nwords=jnp.int32(2 * 64))
+        assert int(off) >= 0, f"cycle {i} exhausted the arena"
+        st = freeL(state=st, off=off)
+    # two live spans + one freed-and-reallocated span still coexist
+    st, a = allocL(state=st, nwords=jnp.int32(2 * 64))
+    st, b = allocL(state=st, nwords=jnp.int32(2 * 64))
+    st = freeL(state=st, off=a)
+    st, c = allocL(state=st, nwords=jnp.int32(2 * 64))
+    assert int(b) >= 0 and int(c) >= 0 and int(c) != int(b)
+    assert ja.live_blocks(st, cfg)["large"] == 2
+    # small allocations still work off the remaining superblocks
+    st, offs = ja.alloc(st, cfg, 0, jnp.ones(4, bool))
+    assert int((np.asarray(offs) >= 0).sum()) == 4
+
+
+def test_small_free_into_large_span_rejected():
+    """The vector analogue of the host rule: ``free`` lanes aimed at a
+    superblock not initialized for their class are masked out."""
+    cfg = ja.ArenaConfig(num_sbs=8, sb_words=64, class_words=(8,),
+                         cache_cap=16, expand_sbs=1)
+    st = ja.init_state(cfg)
+    st, off = ja.alloc_large(st, cfg, jnp.int32(100))
+    before = ja.live_blocks(st, cfg)
+    st = ja.free(st, cfg, 0, jnp.asarray([int(off) + 8], jnp.int32),
+                 jnp.ones(1, bool))
+    assert ja.live_blocks(st, cfg) == before
+    assert int(st.cache_top[0]) == 0                # nothing entered a cache
+
+
 def test_retire_on_fetch_preserved():
     """PARTIAL→EMPTY superblocks retire when fetched (paper §4.4)."""
     cfg = ja.ArenaConfig(num_sbs=4, sb_words=64, class_words=(8,),

@@ -31,15 +31,14 @@ _SCRIPT = textwrap.dedent("""
     from repro.models import transformer as T
     from repro.serving import decode as dec
     from repro.distributed import sharding as shrules
+    from repro.runtime import make_mesh, named_sharding
     from repro.train.optimizer import AdamWConfig, init_opt_state
     from repro.train.step import make_train_step
-    from jax.sharding import NamedSharding, PartitionSpec as P
+    from jax.sharding import PartitionSpec as P
 
-    AX = (jax.sharding.AxisType.Auto,) * 2
-    mesh1 = jax.sharding.Mesh(
-        np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"),
-        axis_types=AX)
-    mesh4 = jax.make_mesh((2, 2), ("data", "model"), axis_types=AX)
+    mesh1 = make_mesh((1, 1), ("data", "model"),
+                      devices=jax.devices()[:1])
+    mesh4 = make_mesh((2, 2), ("data", "model"))
 
     # smoke config with dims divisible by tp=2 everywhere
     cfg = dataclasses.replace(get_smoke_config("qwen2_5_32b"),
@@ -120,15 +119,15 @@ _SCRIPT = textwrap.dedent("""
     p1, o1, m1 = jax.jit(step_fn)(params, opt, batch)
 
     pspecs = shrules.train_param_specs(jax.eval_shape(lambda: params), mesh4)
-    psh = jax.tree.map(lambda s: NamedSharding(mesh4, s), pspecs)
+    psh = jax.tree.map(lambda s: named_sharding(mesh4, s), pspecs)
     params4 = jax.tree.map(lambda a, s: jax.device_put(a, s), params, psh)
-    osh = {"m": psh, "v": psh, "step": NamedSharding(mesh4, P())}
+    osh = {"m": psh, "v": psh, "step": named_sharding(mesh4, P())}
     opt4 = {"m": jax.tree.map(lambda a, s: jax.device_put(a, s),
                               opt["m"], psh),
             "v": jax.tree.map(lambda a, s: jax.device_put(a, s),
                               opt["v"], psh),
             "step": opt["step"]}
-    bsh = NamedSharding(mesh4, P(("data",)))
+    bsh = named_sharding(mesh4, P(("data",)))
     batch4 = jax.tree.map(lambda a: jax.device_put(a, bsh), batch)
     step4 = make_train_step(cfg, AdamWConfig(warmup_steps=1), mesh=mesh4)
     p4, o4, m4 = jax.jit(step4)(params4, opt4, batch4)

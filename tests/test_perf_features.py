@@ -10,13 +10,13 @@ import pytest
 from repro.configs import get_smoke_config
 from repro.layers import moe as moe_lib
 from repro.models import transformer as T
+from repro.runtime import make_host_mesh
 from repro.serving import decode as dec
 
 
 @pytest.fixture(scope="module")
 def mesh():
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_host_mesh()
 
 
 def test_int8_kv_decode_parity(mesh):

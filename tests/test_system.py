@@ -16,6 +16,7 @@ from repro.checkpoint.manager import CheckpointManager
 from repro.configs import get_smoke_config
 from repro.core.ralloc import Ralloc
 from repro.data.pipeline import TokenStream
+from repro.runtime import make_host_mesh
 from repro.serving.engine import ServingEngine
 from repro.train.loop import Trainer
 from repro.train.optimizer import AdamWConfig
@@ -45,8 +46,7 @@ def test_train_crash_restart_then_serve():
     assert tr2.start_step == 4             # resumed from the committed root
     tr2.run(stream, steps=8, log_every=1000)
 
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_host_mesh()
     eng = ServingEngine(cfg, mesh, tr2.params, lanes=2, max_seq=48)
     lane = eng.add_request([1, 2, 3])
     for _ in range(12):
