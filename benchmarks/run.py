@@ -55,6 +55,18 @@ def bench_largebench(threads=(1, 2)):
             a.close()
 
 
+def bench_fragbench():
+    """Steady-state span churn: the extra ``fragbench_watermark`` rows are
+    ``name,watermark_growth_sbs,reuse_rate`` (not us/ops)."""
+    for kind in KINDS:
+        a = fresh(kind)
+        ops, growth, reuse = workloads.fragbench(a)
+        _row(f"fragbench[{kind},t=1]", ops)
+        print(f"fragbench_watermark[{kind}],{growth:.1f},{reuse:.2f}",
+              flush=True)
+        a.close()
+
+
 def bench_prodcon(pairs=(1,)):
     for kind in KINDS:
         for p in pairs:
@@ -112,6 +124,7 @@ def main() -> None:
     bench_shbench()
     bench_larson()
     bench_largebench()
+    bench_fragbench()
     bench_prodcon()
     bench_vacation()
     bench_ycsb()

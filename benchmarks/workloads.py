@@ -130,6 +130,50 @@ def largebench(alloc, n_threads=2, iters=150, small=256, large=200_000):
     return n_threads * iters * 2 / dt
 
 
+def fragbench(alloc, iters=80, sizes=(1, 2, 3, 4), pool=10, seed=0):
+    """Fragmentation churn: keep ``pool`` mixed-size multi-superblock spans
+    live; every round frees one at random and allocates a same-size
+    replacement.  Once warm, every request is satisfiable from freed
+    contiguous runs, so a placement-searching allocator (best-fit over the
+    free set) holds its watermark flat while a watermark-only allocator
+    leaks address space on every round.
+
+    Returns ``(ops_per_sec, watermark_growth_sbs, reuse_rate)``:
+    watermark growth in superblocks across the steady-state phase, and
+    the fraction of steady-state allocations served without advancing
+    the watermark.
+    """
+    from repro.core.layout import SB_SIZE, SB_WORDS
+    rng = random.Random(seed)
+
+    def span_bytes(k):                    # strictly large, ceil() = k sbs
+        return k * SB_SIZE - 512
+
+    held = []
+    for _ in range(pool):
+        k = rng.choice(sizes)
+        p = alloc.malloc(span_bytes(k))
+        assert p is not None
+        held.append((p, k))
+    wm0 = alloc.watermark_words()
+    reused = 0
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        p, k = held.pop(rng.randrange(len(held)))
+        alloc.free(p)
+        before = alloc.watermark_words()
+        q = alloc.malloc(span_bytes(k))
+        assert q is not None
+        if alloc.watermark_words() == before:
+            reused += 1
+        held.append((q, k))
+    dt = time.perf_counter() - t0
+    for p, _ in held:
+        alloc.free(p)
+    growth_sbs = (alloc.watermark_words() - wm0) / SB_WORDS
+    return iters * 2 / dt, growth_sbs, reused / iters
+
+
 def prodcon(alloc, n_pairs=1, items=4000, size=64):
     """Producer/consumer via an M&S-style queue: producer allocates,
     consumer frees (paper's Prod-con)."""

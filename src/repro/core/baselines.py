@@ -39,6 +39,13 @@ class AllocAPI:
     def free(self, ptr: int) -> None: ...
     def close(self) -> None: ...
 
+    def watermark_words(self) -> int:
+        """Persistent bump/expansion watermark in heap words — the
+        address space the allocator has consumed and can never reclaim
+        without recovery.  Fragmentation benchmarks track its growth
+        under steady-state churn."""
+        raise NotImplementedError
+
     @property
     def counters(self) -> dict:
         m = self.mem
@@ -159,6 +166,9 @@ class MakaluLite(AllocAPI):
                     self.mem.fence()
                 self._log(4, cls)
 
+    def watermark_words(self) -> int:
+        return int(self.mem.read(self._meta + self._USED)) - self.config.sb_base
+
     def close(self) -> None:
         self.heap.close()
 
@@ -256,6 +266,9 @@ class PMDKLite(AllocAPI):
         self.mem.write(scratch, ptr)
         self.free_from(scratch, cls)
 
+    def watermark_words(self) -> int:
+        return int(self.mem.read(self._meta + self._USED)) - self.config.sb_base
+
     def close(self) -> None:
         self.heap.close()
 
@@ -289,6 +302,9 @@ class _RallocAdapter(AllocAPI):
 
     def free(self, ptr: int) -> None:
         self.r.free(ptr)
+
+    def watermark_words(self) -> int:
+        return int(self.r.mem.read(layout.M_USED_SBS)) * layout.SB_WORDS
 
     def close(self) -> None:
         self.r.close()

@@ -28,11 +28,18 @@ from .layout import HeapConfig, MAGIC
 class PersistentHeap:
     """mmap-backed three-region heap with a dirty-flag recovery protocol."""
 
-    def __init__(self, path: str | None, config: HeapConfig):
+    def __init__(self, path: str | None, config: HeapConfig,
+                 backing: np.ndarray | None = None):
+        """``backing`` overrides the storage array — crash-injection tests
+        reopen a captured durable image in place of a file/fresh buffer."""
         self.path = path
         self.config = config
         self.existed = path is not None and os.path.exists(path)
-        if path is None:
+        if backing is not None:
+            assert path is None, "backing replaces file storage, not both"
+            assert backing.dtype == np.int64
+            assert backing.size >= config.total_words
+        elif path is None:
             backing = np.zeros(config.total_words, dtype=np.int64)
         else:
             mode = "r+" if self.existed else "w+"

@@ -339,33 +339,43 @@ def span_sbs(cfg: ArenaConfig, nwords):
 def alloc_large(state: AllocState, cfg: ArenaConfig, nwords):
     """Contiguous multi-superblock allocation (paper §4.4 large path).
 
-    Placement tries a contiguous run of *free* superblocks below the
-    watermark first (a vectorized windowed-popcount over ``sb_class ==
-    FREE_CLS``), then falls back to expanding the watermark like the
-    host allocator.  Without the free-run search, every span would
-    consume fresh watermark forever and alloc/free cycles of large
-    objects would deterministically exhaust the arena even when it is
-    entirely free.  Returns (state, off) where ``off`` is the word
-    offset of the span start, or -1 when neither placement fits.
-    jit-compatible; ``nwords`` may be a traced scalar.
+    Placement is a *best-fit* search over freed contiguous runs: a
+    vectorized run-length scan over ``sb_class == FREE_CLS`` finds every
+    maximal run of free superblocks below the watermark and claims the
+    smallest run ≥ the request (leftmost on ties) — the identical rule
+    the host allocator applies in ``Ralloc._claim_free_run``, so host
+    and device place spans identically given identical free sets.  Only
+    when no run fits does the span fall back to expanding the watermark.
+    Without the free-run search, every span would consume fresh
+    watermark forever and alloc/free cycles of large objects would
+    deterministically exhaust the arena even when it is entirely free.
+    Returns (state, off) where ``off`` is the word offset of the span
+    start, or -1 when neither placement fits.  jit-compatible;
+    ``nwords`` may be a traced scalar.
     """
     nwords = jnp.asarray(nwords, jnp.int32)
     nsb = span_sbs(cfg, nwords)
     ids = jnp.arange(cfg.num_sbs, dtype=jnp.int32)
 
-    # leftmost window of nsb consecutive free superblocks below the
-    # watermark (free ⟺ class FREE_CLS & in use ⟺ member of the free
-    # stack: retired and never-initialized superblocks only)
+    # best-fit over maximal runs of free superblocks below the watermark
+    # (free ⟺ class FREE_CLS & in use ⟺ member of the free stack:
+    # retired and never-initialized superblocks only).  A suffix-min
+    # scan over the indices of non-free superblocks yields the free-run
+    # length starting at every id; candidates are run *starts* whose run
+    # fits, ranked by (length, id).
     free_sb = (state.sb_class == FREE_CLS) & (ids < state.used_sbs)
-    csum = jnp.concatenate([jnp.zeros((1,), jnp.int32),
-                            jnp.cumsum(free_sb.astype(jnp.int32))])
-    win = csum[jnp.clip(ids + nsb, 0, cfg.num_sbs)] - csum[ids]
-    ok_win = (ids + nsb <= cfg.num_sbs) & (win == nsb)
-    has_run = ok_win.any()
+    nonfree_at = jnp.where(free_sb, jnp.int32(cfg.num_sbs), ids)
+    next_nonfree = lax.associative_scan(jnp.minimum, nonfree_at,
+                                        reverse=True)
+    run_len = next_nonfree - ids          # free-run length starting at id
+    prev_free = jnp.concatenate([jnp.zeros((1,), bool), free_sb[:-1]])
+    cand = free_sb & ~prev_free & (run_len >= nsb)
+    has_run = cand.any()
+    best_len = jnp.min(jnp.where(cand, run_len, jnp.int32(cfg.num_sbs + 1)))
+    best_first = jnp.argmax(cand & (run_len == best_len)).astype(jnp.int32)
     wm_ok = state.used_sbs + nsb <= cfg.num_sbs
     ok = (nwords > 0) & (has_run | wm_ok)
-    first = jnp.where(has_run, jnp.argmax(ok_win).astype(jnp.int32),
-                      state.used_sbs)
+    first = jnp.where(has_run, best_first, state.used_sbs)
     span = ok & (ids >= first) & (ids < first + nsb)
     head = span & (ids == first)
     cont = span & ~head
@@ -430,6 +440,20 @@ PERSISTENT_FIELDS = ("sb_class", "sb_block_words", "used_sbs", "roots", "dirty")
 def persistent_snapshot(state: AllocState) -> dict:
     """The only fields that must reach durable storage (paper's bold set)."""
     return {f: getattr(state, f) for f in PERSISTENT_FIELDS}
+
+
+def free_runs(state: AllocState, cfg: ArenaConfig) -> list[tuple[int, int]]:
+    """Debug/test helper: maximal contiguous runs ``(start, length)`` of
+    free superblocks below the watermark — the search space of the
+    best-fit large-object placement.  The host analogue is
+    ``core.recovery.free_superblock_runs``; differential tests compare
+    the two to pin down placement equivalence.
+    """
+    import numpy as np
+    from .layout import contiguous_runs
+    used = int(state.used_sbs)
+    ids = np.nonzero(np.asarray(state.sb_class)[:used] == FREE_CLS)[0]
+    return contiguous_runs(ids.tolist())
 
 
 def live_blocks(state: AllocState, cfg: ArenaConfig):

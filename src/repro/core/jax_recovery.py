@@ -86,7 +86,16 @@ def _compact(pred, n_plus_1: int):
 
 
 def sweep(cfg: ArenaConfig, persistent: dict, marked) -> AllocState:
-    """Rebuild every transient structure from (persistent fields, marks)."""
+    """Rebuild every transient structure from (persistent fields, marks).
+
+    Dead/orphaned large spans are swept back to ``FREE_CLS`` (and onto
+    the free stack), so they re-enter the best-fit contiguous-run search
+    of ``jax_alloc.alloc_large`` immediately.  Because that search keys
+    off ``sb_class`` alone — never off stack order — a recovered heap is
+    placement-equivalent to the pre-crash heap: the next span lands on
+    the same superblock either side of a crash (asserted by the
+    differential fuzz suite).
+    """
     n = cfg.num_sbs
     sb_ids = jnp.arange(n, dtype=jnp.int32)
     used = persistent["used_sbs"]

@@ -75,6 +75,31 @@ def blocks_per_sb(block_size: int) -> int:
     return SB_SIZE // block_size
 
 
+def contiguous_runs(sorted_ids) -> list[tuple[int, int]]:
+    """Group ascending, duplicate-free indices into maximal contiguous
+    runs ``(start, length)``.
+
+    Shared by the host best-fit placement (``ralloc._claim_free_run``),
+    the host recovery introspection (``recovery.free_superblock_runs``)
+    and the device debug helper (``jax_alloc.free_runs``) so the three
+    can never drift apart — the differential-fuzz suite asserts
+    host/device placement equivalence over exactly these runs.
+    """
+    runs: list[tuple[int, int]] = []
+    start = prev = None
+    for i in sorted_ids:
+        if start is None:
+            start = prev = i
+        elif i == prev + 1:
+            prev = i
+        else:
+            runs.append((start, prev - start + 1))
+            start = prev = i
+    if start is not None:
+        runs.append((start, prev - start + 1))
+    return runs
+
+
 # ---------------------------------------------------------------------------
 # Anchor packing (descriptor word 0) — updated with a single CAS, paper §4.2.
 #   state(2) | avail(20) | count(20) | tag(22)

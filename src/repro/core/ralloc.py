@@ -46,13 +46,18 @@ class Ralloc:
     def __init__(self, path: str | None, size: int, *, sim_nvm: bool = False,
                  seed: int = 0, tcache_cap: int = 64, persist: bool = True,
                  expand_sbs: int = 16, keep_half: bool = False,
-                 flush_ns: int = 0, fence_ns: int = 0):
-        """``persist=False`` disables flush/fence → LRMalloc-equivalent mode."""
+                 flush_ns: int = 0, fence_ns: int = 0, backing=None):
+        """``persist=False`` disables flush/fence → LRMalloc-equivalent mode.
+
+        ``backing`` hands the heap a pre-existing durable image (an int64
+        array) instead of a file — crash-injection tests use it to reopen
+        snapshots captured at persist boundaries.
+        """
         self.config = HeapConfig(size=size, sim_nvm=sim_nvm, seed=seed,
                                  tcache_cap=tcache_cap, expand_sbs=expand_sbs,
                                  flush_ns=flush_ns, fence_ns=fence_ns)
         self.keep_half = keep_half
-        self.heap = PersistentHeap(path, self.config)
+        self.heap = PersistentHeap(path, self.config, backing=backing)
         self.persist_on = persist
         self.filters = FilterRegistry()
         from .filters import register_stock_filters
@@ -61,6 +66,7 @@ class Ralloc:
         self._tls = threading.local()
         self._all_caches: list[list[list[int]]] = []
         self._caches_lock = threading.Lock()
+        self._large_lock = threading.Lock()   # serializes span placement
         self._closed = False
         self.dirty_restart = self.heap.init()
 
@@ -245,18 +251,28 @@ class Ralloc:
             # 2. free superblock (any class) — (re)initialize it for cls
             sb = self._pop_list(layout.M_FREE_HEAD, D_NEXT_FREE)
             if sb is None:
-                # 3. expand the used prefix of the superblock region
-                first = self._expand(self.config.expand_sbs)
-                if first is None:
-                    first = self._expand(1)       # partial final expansion
-                    if first is None:
-                        return False
-                    sb = first
-                else:
-                    sb = first
-                    for extra in range(first + 1, first + self.config.expand_sbs):
-                        self._init_free_sb(extra)
-                        self._push_list(layout.M_FREE_HEAD, D_NEXT_FREE, extra)
+                # 3. expand the used prefix of the superblock region.  A
+                # concurrent span placement may be holding the *entire*
+                # drained free stack (_claim_free_run), so re-check under
+                # the placement lock before consuming fresh watermark —
+                # expanding here would durably leak the address space the
+                # free-run search exists to reclaim.
+                with self._large_lock:
+                    sb = self._pop_list(layout.M_FREE_HEAD, D_NEXT_FREE)
+                    if sb is None:
+                        first = self._expand(self.config.expand_sbs)
+                        if first is None:
+                            first = self._expand(1)   # partial final expansion
+                            if first is None:
+                                return False
+                            sb = first
+                        else:
+                            sb = first
+                            for extra in range(first + 1,
+                                               first + self.config.expand_sbs):
+                                self._init_free_sb(extra)
+                                self._push_list(layout.M_FREE_HEAD,
+                                                D_NEXT_FREE, extra)
             # persist size class & block size BEFORE any block escapes —
             # recovery depends on them (paper: "has to be persisted before a
             # superblock is used for allocation")
@@ -333,11 +349,61 @@ class Ralloc:
             # PARTIAL→EMPTY: stays in the partial list; retired when fetched.
 
     # ----------------------------------------------------------------- large
+    def _claim_free_run(self, nsb: int) -> int | None:
+        """Best-fit contiguous-run search over the superblock free list.
+
+        Drains the Treiber free stack (pops are atomic, so concurrent
+        pushes are never lost — they simply land after the drain), groups
+        the drained indices into maximal contiguous runs, and claims the
+        first ``nsb`` superblocks of the *smallest* run that fits
+        (leftmost on ties).  The device allocator applies the identical
+        rule over ``sb_class == FREE_CLS``, so host and device place
+        spans identically given identical free sets — and because the
+        drained set is sorted before searching, placement depends only on
+        free-set *membership*, never on stack order, which is what makes
+        recovered heaps placement-equivalent to pre-crash ones.
+
+        Everything unclaimed is pushed back.  Returns the head superblock
+        index, or None when no run of ``nsb`` exists.  Callers must hold
+        ``_large_lock``: two concurrent drains would split one run across
+        two searchers, making both miss it (one would then expand the
+        watermark a fitting run exists for — the exact leak this search
+        removes).
+        """
+        drained: list[int] = []
+        while (sb := self._pop_list(layout.M_FREE_HEAD,
+                                    D_NEXT_FREE)) is not None:
+            drained.append(sb)
+        if not drained:
+            return None
+        drained.sort()
+        fits = [(length, start)
+                for start, length in layout.contiguous_runs(drained)
+                if length >= nsb]
+        if not fits:
+            for sb in drained:
+                self._push_list(layout.M_FREE_HEAD, D_NEXT_FREE, sb)
+            return None
+        _, first = min(fits)                 # smallest run, leftmost on ties
+        for sb in drained:
+            if not first <= sb < first + nsb:
+                self._push_list(layout.M_FREE_HEAD, D_NEXT_FREE, sb)
+        return first
+
     def _malloc_large(self, size: int) -> int | None:
         nsb = math.ceil(size / SB_SIZE)
-        first = self._expand(nsb)
-        if first is None:
-            return None
+        # placement: best-fit over freed contiguous runs first — only when
+        # no run fits does the span consume fresh watermark (the paper's
+        # watermark-only policy leaks address space under span churn).
+        # The lock serializes large-span *placement* only: the small-class
+        # fast path stays synchronization-free, and the device allocator
+        # gets the same atomicity by construction (one program step).
+        with self._large_lock:
+            first = self._claim_free_run(nsb)
+            if first is None:
+                first = self._expand(nsb)
+                if first is None:
+                    return None
         m = self.mem
         m.write(self.desc(first, D_SIZE_CLASS), LARGE_CLASS)
         m.write(self.desc(first, D_BLOCK_SIZE), size)
@@ -368,9 +434,14 @@ class Ralloc:
             to_persist += [self.desc(sb, D_SIZE_CLASS),
                            self.desc(sb, D_BLOCK_SIZE)]
         self._persist(*to_persist)
-        for sb in range(first, first + nsb):
-            self._init_free_sb(sb)
-            self._push_list(layout.M_FREE_HEAD, D_NEXT_FREE, sb)
+        # the span re-enters the free set as one atomic unit: a placement
+        # drain interleaving between the pushes would observe a torn run
+        # (a prefix of the span), claim it misaligned, and leave stranded
+        # fragments no later request can use
+        with self._large_lock:
+            for sb in range(first, first + nsb):
+                self._init_free_sb(sb)
+                self._push_list(layout.M_FREE_HEAD, D_NEXT_FREE, sb)
 
     # ------------------------------------------------------------ block I/O
     # Convenience accessors used by test data structures & benchmarks: they

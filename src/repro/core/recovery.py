@@ -191,6 +191,7 @@ def recover(r) -> dict:
     return {
         "reachable_blocks": len(visited),
         "free_superblocks": n_free_sbs,
+        "free_runs": len(free_superblock_runs(r)),
         "partial_superblocks": n_partial,
         "full_superblocks": n_full,
         "large_blocks": len(large_heads),
@@ -205,3 +206,33 @@ def _push(r, head_word: int, next_field: int, sb: int) -> None:
     idx, ctr = layout.unpack_head(r.mem.read(head_word))
     r.mem.write(r.desc(sb, next_field), idx if idx >= 0 else -1)
     r.mem.write(head_word, pack_head(sb, ctr + 1))
+
+
+def free_superblock_list(r) -> list[int]:
+    """Walk the superblock free list; raises on a cycle (a cycle would
+    double-count superblocks and hand the same span out twice)."""
+    out: list[int] = []
+    seen: set[int] = set()
+    idx, _ = layout.unpack_head(r.mem.read(layout.M_FREE_HEAD))
+    while idx >= 0:
+        if idx in seen:
+            raise AssertionError(f"free-list cycle at superblock {idx}")
+        seen.add(idx)
+        out.append(idx)
+        nxt = int(r.mem.read(r.desc(idx, D_NEXT_FREE)))
+        idx = nxt if nxt >= 0 else -1
+    return out
+
+
+def free_superblock_runs(r) -> list[tuple[int, int]]:
+    """Maximal contiguous runs ``(start, length)`` of free-listed
+    superblocks — the search space of ``Ralloc._claim_free_run``.
+
+    Recovery pushes every swept superblock back onto the free list and
+    the best-fit search sorts the drained set before scanning, so
+    large-object placement after recovery depends only on free-set
+    membership — never on stack order.  This is the placement-
+    equivalence guarantee the crash-injection and differential suites
+    assert; the device analogue is ``jax_alloc.free_runs``.
+    """
+    return layout.contiguous_runs(sorted(free_superblock_list(r)))

@@ -50,8 +50,12 @@ class ServingEngine:
         self.params = params
         self.lanes = lanes
         self.max_seq = max_seq
-        n_pages = lanes * (max_seq // cfg.page_size + 2) + pages_per_sb
-        num_sbs = -(-n_pages // pages_per_sb)
+        # arena sizing: a whole number of superblocks per lane, so that a
+        # decode-ahead span (max_seq pages rounded UP to superblocks by
+        # alloc_large) always fits for every lane at once — per-page slack
+        # alone would under-provision the superblock rounding
+        per_lane_sbs = -(-(max_seq // cfg.page_size + 2) // pages_per_sb)
+        num_sbs = lanes * per_lane_sbs + 1
         self.acfg = ja.ArenaConfig(num_sbs=num_sbs, sb_words=pages_per_sb,
                                    class_words=(1,),
                                    cache_cap=max(64, 2 * lanes))
@@ -95,15 +99,19 @@ class ServingEngine:
         self.dstate["kv_pos"] = self.dstate["kv_pos"].at[lane].set(-1)
         self.cur_tokens[lane] = prompt[0]
         # oversized prompt: its page table will not fit the per-step lazy
-        # path gracefully — reserve one contiguous multi-superblock span
-        # covering every prompt page up front (device large-object path).
-        # Clamped to the page-table width: generation stops at max_seq, so
-        # pages past it would never be touched.
+        # path gracefully — reserve one contiguous multi-superblock span up
+        # front (device large-object path) sized *decode-ahead*: the span
+        # covers every page the sequence can ever touch (max_seq, not just
+        # the prompt), so generation never needs a mid-decode lazy page or
+        # a span migration.  Clamped to the page-table width: generation
+        # stops at max_seq, so pages past it would never be touched.
+        table_width = int(self.dstate["block_table"].shape[1])
         n_prompt_pages = min(-(-len(prompt) // self.cfg.page_size),
-                             int(self.dstate["block_table"].shape[1]))
+                             table_width)
         if (self.cfg.attn_layers > 0 and not share_prefix
                 and n_prompt_pages > self.acfg.sb_words):
-            self._reserve_span(lane, n_prompt_pages)
+            n_ahead = min(-(-self.max_seq // self.cfg.page_size), table_width)
+            self._reserve_span(lane, max(n_prompt_pages, n_ahead))
         if share_prefix:
             hit = self._prefix_cache.get(tuple(prompt))
             if hit is not None:

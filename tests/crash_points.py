@@ -1,0 +1,172 @@
+"""Crash-injection harness: persist-boundary snapshots → recovery checks.
+
+NVTraverse-style persistence-ordering bugs hide in interleavings that
+ordinary unit tests never exercise: the state that is durable *between*
+two fences, not the state the program sees.  This harness makes those
+states first-class test inputs:
+
+  * ``record_persist_boundaries`` hooks an allocator's ``fence`` so that
+    every persist boundary captures the durable NVM image twice — once
+    *before* the fence (a crash here loses every scheduled-but-unfenced
+    line) and once *after* (the lines just became durable).  Random
+    cache eviction in the simulated-NVM layer varies what else happens
+    to be durable, so repeated runs explore different interleavings.
+  * ``run_crash_points`` drives a host large-span alloc/free trace under
+    the hook, then reopens **every** captured snapshot as a fresh heap,
+    runs ``recover()``, and asserts the recovered heap is consistent:
+
+      - every rooted span survives with its size record and flushed
+        contents intact (no lost spans);
+      - every ``LARGE_CONT`` marker belongs to a live span head (no
+        orphaned continuations);
+      - the free list holds each superblock at most once, never one
+        inside a live span (no double-counted blocks);
+      - a fresh span allocated post-recovery lands outside every live
+        span (the free set is really free).
+
+The trace follows the application durability protocol the paper assumes:
+span contents are flushed+fenced *before* the root is set, and the root
+is cleared *before* the span is freed — so at any boundary, a durable
+root implies a durable, recoverable span.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import layout, recovery
+from repro.core.layout import (D_BLOCK_SIZE, D_SIZE_CLASS, LARGE_CLASS,
+                               LARGE_CONT, SB_SIZE)
+from repro.core.ralloc import Ralloc
+
+MB = 1 << 20
+SENTINEL = 0xC0DE0000
+
+
+def record_persist_boundaries(r: Ralloc) -> list[np.ndarray]:
+    """Hook ``r``'s fence; returns the (growing) list of durable images."""
+    snaps: list[np.ndarray] = []
+    mem = r.mem
+    orig = mem.fence
+
+    def fence():
+        snaps.append(mem.nvm.copy())       # crash just before the fence
+        orig()
+        snaps.append(mem.nvm.copy())       # crash just after
+    mem.fence = fence
+    return snaps
+
+
+def dedup_images(snaps: list[np.ndarray]) -> list[np.ndarray]:
+    seen: set[int] = set()
+    out: list[np.ndarray] = []
+    for s in snaps:
+        h = hash(s.tobytes())
+        if h not in seen:
+            seen.add(h)
+            out.append(s)
+    return out
+
+
+def run_host_trace(r: Ralloc, ops: list[tuple[bool, int]]) -> dict:
+    """Replay a large-span alloc/free interleaving on ``r``.
+
+    ``ops`` is a list of ``(is_free, k)``: free the oldest live span, or
+    allocate a ``k``-superblock span, stamp + flush a sentinel, and root
+    it.  Returns the final ``{root_index: span_sbs}`` live map.
+    """
+    live: dict[int, tuple[int, int]] = {}       # root idx -> (ptr, k)
+    next_root = 0
+    for is_free, k in ops:
+        if is_free and live:
+            i = next(iter(live))
+            ptr, _ = live.pop(i)
+            r.set_root(i, None)                 # unroot BEFORE freeing
+            r.free(ptr)
+        else:
+            ptr = r.malloc(k * SB_SIZE - 256)
+            if ptr is None:
+                continue
+            i = next_root
+            next_root += 1
+            r.write_word(ptr, SENTINEL + i)
+            r.write_word(ptr + 1, k)
+            r.flush_range(ptr, 2)
+            r.fence()                           # contents durable BEFORE root
+            r.set_root(i, ptr)
+            live[i] = (ptr, k)
+    return {i: k for i, (_, k) in live.items()}
+
+
+def check_recovered_heap(r: Ralloc, n_roots: int) -> dict[int, int]:
+    """Assert span/free-list consistency after ``recover()``; returns the
+    recovered ``{head_sb: span_sbs}`` map."""
+    m = r.mem
+    used = int(m.read(layout.M_USED_SBS))
+    cls_of = [int(m.read(r.desc(sb, D_SIZE_CLASS))) for sb in range(used)]
+    bs_of = [int(m.read(r.desc(sb, D_BLOCK_SIZE))) for sb in range(used)]
+
+    spans: dict[int, int] = {}
+    covered: set[int] = set()
+    for sb in range(used):
+        if cls_of[sb] == LARGE_CLASS and bs_of[sb] > 0:
+            nsb = -(-bs_of[sb] // SB_SIZE)
+            assert sb + nsb <= used, f"span at {sb} exceeds the watermark"
+            assert not covered & set(range(sb, sb + nsb)), \
+                f"span at {sb} overlaps another live span"
+            for j in range(sb + 1, sb + nsb):
+                assert cls_of[j] == LARGE_CONT, \
+                    f"span at {sb} torn: sb {j} is not a continuation"
+            covered |= set(range(sb, sb + nsb))
+            spans[sb] = nsb
+    for sb in range(used):
+        if cls_of[sb] == LARGE_CONT:
+            assert sb in covered, f"orphaned LARGE_CONT at superblock {sb}"
+
+    free = recovery.free_superblock_list(r)     # raises on a cycle
+    assert len(free) == len(set(free)), "double-counted free superblock"
+    for sb in free:
+        assert 0 <= sb < used, f"free-listed sb {sb} above the watermark"
+        assert sb not in covered, f"free-listed sb {sb} inside a live span"
+
+    # every durable root must name a live, content-intact span
+    for i in range(n_roots):
+        w = r.heap.get_root(i)
+        if w is None:
+            continue
+        sb = r.heap.sb_of(w)
+        assert sb in spans, f"root {i} points at a lost span (sb {sb})"
+        assert int(r.read_word(w)) == SENTINEL + i, \
+            f"root {i}: span contents lost"
+        assert spans[sb] == int(r.read_word(w + 1)), \
+            f"root {i}: span length record corrupted"
+
+    # the free set is genuinely free: a fresh span never lands in a live one
+    p = r.malloc(2 * SB_SIZE - 256)
+    if p is not None:
+        psb = r.heap.sb_of(p)
+        assert not covered & {psb, psb + 1}, \
+            "fresh span allocated inside a live span"
+    return spans
+
+
+def run_crash_points(ops: list[tuple[bool, int]], *, size: int = 2 * MB,
+                     seed: int = 0) -> int:
+    """The harness entry point: trace → snapshot at every persist boundary
+    → recover each snapshot → consistency checks.  Returns the number of
+    distinct durable images exercised."""
+    r = Ralloc(None, size, sim_nvm=True, seed=seed)
+    snaps = record_persist_boundaries(r)
+    run_host_trace(r, ops)
+    # every op allocates at most one root — a (True, k) op with nothing
+    # live falls through to an allocation too, so bound by len(ops), not
+    # by the is_free=False count (which would leave roots unchecked)
+    n_roots = len(ops) + 1
+    images = dedup_images(snaps)
+    for img in images:
+        r2 = Ralloc(None, size, sim_nvm=True, seed=seed + 1,
+                    backing=img.copy())
+        assert r2.dirty_restart, "persist-boundary image must be dirty"
+        r2.recover()
+        check_recovered_heap(r2, n_roots)
+    return len(images)

@@ -1,0 +1,178 @@
+"""Differential fuzz: host Ralloc vs. device jax_alloc on the same trace.
+
+Both allocators implement the identical large-object placement rule
+(best-fit over maximal free runs, leftmost on ties, watermark fallback),
+so replaying one randomized alloc/free/size trace through both must keep
+them in lock-step: same span placement (in superblock units), same
+occupancy map, same free-run structure, and the same state after
+recovery.  The one *documented* divergence in the ROADMAP feature matrix
+— host ``free`` of an invalid/double large pointer raises, device
+``free_large`` is a masked no-op — is asserted explicitly so silent
+drift on either side fails the suite.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                      # container without dev deps
+    from _hypothesis_fallback import given, settings, strategies as st
+
+from repro.core import jax_alloc as ja
+from repro.core import jax_recovery as jr
+from repro.core import layout, recovery
+from repro.core.layout import SB_SIZE
+from repro.core.ralloc import Ralloc
+
+N_SBS = 24
+DEV_SB_WORDS = 64
+DEV_CFG = ja.ArenaConfig(num_sbs=N_SBS, sb_words=DEV_SB_WORDS,
+                         class_words=(8,), cache_cap=16, expand_sbs=1)
+
+_alloc_large = jax.jit(functools.partial(ja.alloc_large, cfg=DEV_CFG))
+_free_large = jax.jit(functools.partial(ja.free_large, cfg=DEV_CFG))
+
+
+def host_occupancy(r: Ralloc) -> tuple[int, list[str]]:
+    """(watermark, per-sb state): H = span head, C = continuation, F = free."""
+    used = int(r.mem.read(layout.M_USED_SBS))
+    out = []
+    for sb in range(used):
+        cls = int(r.mem.read(r.desc(sb, layout.D_SIZE_CLASS)))
+        bs = int(r.mem.read(r.desc(sb, layout.D_BLOCK_SIZE)))
+        if cls == layout.LARGE_CLASS and bs > 0:
+            out.append("H")
+        elif cls == layout.LARGE_CONT:
+            out.append("C")
+        else:
+            out.append("F")
+    return used, out
+
+
+def dev_occupancy(st_: ja.AllocState) -> tuple[int, list[str]]:
+    used = int(st_.used_sbs)
+    cls = np.asarray(st_.sb_class)[:used]
+    out = []
+    for c in cls.tolist():
+        out.append("H" if c == ja.LARGE_CLS else
+                   "C" if c == ja.LARGE_CONT else "F")
+    return used, out
+
+
+def replay(ops):
+    """Drive both allocators through one trace; assert lock-step at every
+    op.  Returns (host, device state, live list of (host ptr, dev off, k))."""
+    r = Ralloc(None, N_SBS * SB_SIZE)
+    dst = ja.init_state(DEV_CFG, max_roots=64)
+    live = []
+    for is_free, k in ops:
+        if is_free and live:
+            ptr, off, _ = live.pop(0)
+            r.free(ptr)
+            dst = _free_large(state=dst, off=jnp.int32(off))
+        else:
+            ptr = r.malloc(k * SB_SIZE - 256)
+            dst, off = _alloc_large(state=dst,
+                                    nwords=jnp.int32(k * DEV_SB_WORDS - 4))
+            off = int(off)
+            assert (ptr is None) == (off < 0), \
+                f"serveability drift on a {k}-sb request"
+            if ptr is None:
+                continue
+            assert r.heap.sb_of(ptr) == off // DEV_SB_WORDS, \
+                f"placement drift: host sb {r.heap.sb_of(ptr)} vs " \
+                f"device sb {off // DEV_SB_WORDS}"
+            live.append((ptr, off, k))
+        assert host_occupancy(r) == dev_occupancy(dst), "occupancy drift"
+    return r, dst, live
+
+
+def assert_free_runs_agree(r, dst):
+    host_runs = recovery.free_superblock_runs(r)
+    assert host_runs == ja.free_runs(dst, DEV_CFG), "free-run drift"
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.lists(st.tuples(st.booleans(), st.integers(1, 4)),
+                min_size=1, max_size=30))
+def test_differential_trace_lockstep(ops):
+    r, dst, live = replay(ops)
+    assert_free_runs_agree(r, dst)
+
+    # documented asymmetry (ROADMAP feature matrix): double-free of a
+    # large span — host raises, device is a masked no-op
+    if live:
+        ptr, off, _ = live.pop(0)
+        r.free(ptr)
+        dst = _free_large(state=dst, off=jnp.int32(off))
+        with pytest.raises(ValueError):
+            r.free(ptr)
+        before = dev_occupancy(dst)
+        dst2 = _free_large(state=dst, off=jnp.int32(off))
+        assert dev_occupancy(dst2) == before
+        assert int(dst2.free_top) == int(dst.free_top)
+        dst = dst2
+        assert host_occupancy(r) == dev_occupancy(dst)
+
+    # recovery: root every live span on both sides, recover, and demand
+    # identical occupancy AND identical placement of the next span
+    for i, (ptr, _, _) in enumerate(live):
+        r.set_root(i, ptr)
+    r.recover()
+    roots = np.full((64,), -1, np.int32)
+    for i, (_, off, _) in enumerate(live):
+        roots[i] = off
+    pers = ja.persistent_snapshot(dst)
+    pers["roots"] = jnp.asarray(roots)
+    refs = jnp.full((jr.num_slots(DEV_CFG), 1), -1, jnp.int32)
+    dst, _ = jr.recover(DEV_CFG, pers, refs)
+    assert host_occupancy(r) == dev_occupancy(dst), "post-recovery drift"
+    assert_free_runs_agree(r, dst)
+
+    ptr = r.malloc(2 * SB_SIZE - 256)
+    dst, off = _alloc_large(state=dst, nwords=jnp.int32(2 * DEV_SB_WORDS - 4))
+    assert (ptr is None) == (int(off) < 0)
+    if ptr is not None:
+        assert r.heap.sb_of(ptr) == int(off) // DEV_SB_WORDS, \
+            "post-recovery placement drift"
+
+
+def test_differential_best_fit_prefers_smallest_run():
+    """Constructed fragmentation: [2-run][live][3-run][live][2-run] free
+    pattern — a 2-sb request must take a 2-run (best fit), never split
+    the 3-run; both sides must agree on which one."""
+    ops = [(False, 2), (False, 1), (False, 3), (False, 1), (False, 2),
+           (True, 0)]                 # frees the first 2-span → run at 0
+    r, dst, live = replay(ops)
+    # free the 3-span (index 1 after the pop in replay: live holds
+    # [1-span@2, 3-span@3, 1-span@6, 2-span@7]) → runs: (0,2) and (3,3)
+    ptr, off, _ = live.pop(1)
+    r.free(ptr)
+    dst = _free_large(state=dst, off=jnp.int32(off))
+    assert recovery.free_superblock_runs(r) == [(0, 2), (3, 3)]
+    assert_free_runs_agree(r, dst)
+    # a 2-sb request: best fit takes (0, 2) exactly, leaving (3, 3) whole
+    p2 = r.malloc(2 * SB_SIZE - 256)
+    dst, o2 = _alloc_large(state=dst, nwords=jnp.int32(2 * DEV_SB_WORDS - 4))
+    assert r.heap.sb_of(p2) == int(o2) // DEV_SB_WORDS == 0
+    assert recovery.free_superblock_runs(r) == [(3, 3)]
+    # a 3-sb request then lands exactly on the preserved 3-run
+    p3 = r.malloc(3 * SB_SIZE - 256)
+    dst, o3 = _alloc_large(state=dst, nwords=jnp.int32(3 * DEV_SB_WORDS - 4))
+    assert r.heap.sb_of(p3) == int(o3) // DEV_SB_WORDS == 3
+    assert host_occupancy(r) == dev_occupancy(dst)
+
+
+@pytest.mark.slow
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.tuples(st.booleans(), st.integers(1, 5)),
+                min_size=5, max_size=60))
+def test_differential_trace_lockstep_deep(ops):
+    """Longer traces for the non-blocking slow CI job."""
+    r, dst, _ = replay(ops)
+    assert_free_runs_agree(r, dst)

@@ -1,0 +1,188 @@
+"""Fragmentation regression: steady-state span churn must not grow the
+watermark once the free set can satisfy requests.
+
+This is the tentpole property the best-fit contiguous-run search buys:
+the seed's watermark-only placement leaked address space on every
+large-object cycle, so span-heavy serving churn deterministically
+exhausted the arena even when it was almost entirely free.  Both
+allocators (host ``ralloc`` and device ``jax_alloc``) are held to the
+same bound here; the benchmark twin is ``benchmarks.workloads.fragbench``.
+"""
+
+import functools
+import random
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import jax_alloc as ja
+from repro.core import layout
+from repro.core.layout import SB_SIZE
+from repro.core.ralloc import Ralloc
+
+MB = 1 << 20
+SIZES = (1, 2, 3, 4)
+POOL = 10
+ROUNDS = 120
+
+
+def test_host_watermark_stable_under_span_churn():
+    r = Ralloc(None, 64 * MB)
+    rng = random.Random(0)
+    held = []
+    for _ in range(POOL):                      # warmup: populate the pool
+        k = rng.choice(SIZES)
+        p = r.malloc(k * SB_SIZE - 256)
+        assert p is not None
+        held.append((p, k))
+    wm0 = int(r.mem.read(layout.M_USED_SBS))
+    for i in range(ROUNDS):
+        p, k = held.pop(rng.randrange(len(held)))
+        r.free(p)                              # a k-run is now free
+        q = r.malloc(k * SB_SIZE - 256)        # ⇒ a k-request must reuse it
+        assert q is not None
+        held.append((q, k))
+        assert int(r.mem.read(layout.M_USED_SBS)) == wm0, \
+            f"round {i}: watermark grew under satisfiable churn"
+    # live spans stay disjoint through all that reuse
+    spans = sorted((r.heap.sb_of(p), k) for p, k in held)
+    for (a, ka), (b, _) in zip(spans, spans[1:]):
+        assert a + ka <= b, "span overlap after churn"
+
+
+def test_host_mixed_small_and_span_churn_watermark_stable():
+    """Small-class pressure interleaved with span churn: freed spans must
+    still be found (small allocations also consume the free list)."""
+    r = Ralloc(None, 64 * MB)
+    rng = random.Random(1)
+    held, smalls = [], []
+    for _ in range(POOL):
+        k = rng.choice(SIZES)
+        held.append((r.malloc(k * SB_SIZE - 256), k))
+    for _ in range(200):
+        smalls.append(r.malloc(4096))
+    wm0 = int(r.mem.read(layout.M_USED_SBS))
+    for i in range(60):
+        p, k = held.pop(rng.randrange(len(held)))
+        r.free(p)
+        q = r.malloc(k * SB_SIZE - 256)
+        assert q is not None
+        held.append((q, k))
+        smalls.append(r.malloc(4096))
+        r.free(smalls.pop(0))
+        assert int(r.mem.read(layout.M_USED_SBS)) == wm0, \
+            f"round {i}: watermark grew"
+
+
+def test_host_concurrent_span_churn_watermark_stable():
+    """Placement is serialized (``_large_lock``): two racing span
+    allocations must never both drain the free stack, miss the split run,
+    and expand the watermark.  Same-size churn keeps every free run usable
+    under any interleaving, so the watermark must stay exactly flat."""
+    r = Ralloc(None, 64 * MB)
+    T = 4
+    held = [r.malloc(2 * SB_SIZE - 256) for _ in range(T)]
+    assert None not in held
+    wm0 = int(r.mem.read(layout.M_USED_SBS))
+    errs = []
+
+    def worker(t):
+        try:
+            p = held[t]
+            for _ in range(60):
+                r.free(p)
+                p = r.malloc(2 * SB_SIZE - 256)
+                assert p is not None
+            held[t] = p
+        except Exception as e:             # pragma: no cover
+            errs.append(repr(e))
+
+    ts = [threading.Thread(target=worker, args=(t,)) for t in range(T)]
+    [t.start() for t in ts]
+    [t.join() for t in ts]
+    assert not errs, errs
+    assert int(r.mem.read(layout.M_USED_SBS)) == wm0, \
+        "concurrent churn grew the watermark (placement race)"
+    assert len(set(held)) == T             # no double-placed spans
+
+
+def test_small_refill_rechecks_free_list_under_placement_lock():
+    """White-box regression: while a span placement holds the drained
+    free stack (``_large_lock`` + empty list), a small-class refill must
+    wait and re-check rather than expand the watermark — otherwise every
+    such window durably leaks ``expand_sbs`` superblocks."""
+    r = Ralloc(None, 64 * MB)
+    p = r.malloc(2 * SB_SIZE - 256)
+    r.free(p)                                  # free list now holds a 2-run
+    wm0 = int(r.mem.read(layout.M_USED_SBS))
+    # simulate a mid-placement claimer: hold the lock with the stack drained
+    r._large_lock.acquire()
+    drained = []
+    while (sb := r._pop_list(layout.M_FREE_HEAD,
+                             layout.D_NEXT_FREE)) is not None:
+        drained.append(sb)
+    assert drained
+    got = []
+    th = threading.Thread(target=lambda: got.append(r.malloc(256)))
+    th.start()
+    th.join(0.3)
+    assert th.is_alive(), "refill expanded instead of waiting for placement"
+    assert int(r.mem.read(layout.M_USED_SBS)) == wm0
+    for sb in drained:                         # placement finishes: push back
+        r._push_list(layout.M_FREE_HEAD, layout.D_NEXT_FREE, sb)
+    r._large_lock.release()
+    th.join()
+    assert got and got[0] is not None
+    assert int(r.mem.read(layout.M_USED_SBS)) == wm0, \
+        "refill consumed fresh watermark despite a free superblock"
+
+
+def test_device_watermark_stable_under_span_churn():
+    cfg = ja.ArenaConfig(num_sbs=48, sb_words=64, class_words=(8,),
+                         cache_cap=16, expand_sbs=1)
+    alloc = jax.jit(functools.partial(ja.alloc_large, cfg=cfg))
+    free = jax.jit(functools.partial(ja.free_large, cfg=cfg))
+    st = ja.init_state(cfg)
+    rng = random.Random(0)
+    held = []
+    for _ in range(POOL):
+        k = rng.choice(SIZES)
+        st, off = alloc(state=st, nwords=jnp.int32(k * 64 - 4))
+        assert int(off) >= 0
+        held.append((int(off), k))
+    wm0 = int(st.used_sbs)
+    for i in range(ROUNDS):
+        off, k = held.pop(rng.randrange(len(held)))
+        st = free(state=st, off=jnp.int32(off))
+        st, off2 = alloc(state=st, nwords=jnp.int32(k * 64 - 4))
+        assert int(off2) >= 0
+        held.append((int(off2), k))
+        assert int(st.used_sbs) == wm0, \
+            f"round {i}: device watermark grew under satisfiable churn"
+    assert ja.live_blocks(st, cfg)["large"] == POOL
+    # spans disjoint
+    spans = sorted((o // 64, k) for o, k in held)
+    for (a, ka), (b, _) in zip(spans, spans[1:]):
+        assert a + ka <= b
+
+
+def test_device_best_fit_leaves_large_runs_intact():
+    """Shrinking requests into a fragmented arena: best-fit keeps the big
+    run available for the big request that arrives last (first-fit would
+    have split it and failed)."""
+    cfg = ja.ArenaConfig(num_sbs=12, sb_words=64, class_words=(8,),
+                         cache_cap=16, expand_sbs=1)
+    st = ja.init_state(cfg)
+    offs = []
+    for k in (2, 1, 4, 1, 2, 1):               # fill 11 of 12 sbs
+        st, o = ja.alloc_large(st, cfg, jnp.int32(k * 64 - 4))
+        offs.append((int(o), k))
+    st = ja.free_large(st, cfg, jnp.int32(offs[0][0]))   # free the 2-run @0
+    st = ja.free_large(st, cfg, jnp.int32(offs[2][0]))   # free the 4-run @3
+    assert ja.free_runs(st, cfg) == [(0, 2), (3, 4)]
+    st, o = ja.alloc_large(st, cfg, jnp.int32(2 * 64 - 4))
+    assert int(o) // 64 == 0                   # best fit: the 2-run, not 4
+    st, o = ja.alloc_large(st, cfg, jnp.int32(4 * 64 - 4))
+    assert int(o) // 64 == 3                   # the 4-run survived whole

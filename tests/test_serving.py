@@ -113,11 +113,11 @@ def test_engine_oversized_prompt_span(mesh):
     lane = eng.add_request(prompt)         # 25 pages > 16 per superblock
     assert lane in eng.large_spans
     off, n_span = eng.large_spans[lane]
-    assert n_span == 25
+    assert n_span == 32                    # decode-ahead: max_seq pages
     lb = ja.live_blocks(eng.astate, eng.acfg)
     assert lb["large"] == 1 and lb[0] == 0
     bt = np.asarray(eng.dstate["block_table"][lane])
-    assert bt[:25].tolist() == list(range(off, off + 25))
+    assert bt[:32].tolist() == list(range(off, off + 32))
 
     # a short request coexists: its lazily-allocated pages never overlap
     other = eng.add_request([5, 9, 3])
@@ -125,7 +125,7 @@ def test_engine_oversized_prompt_span(mesh):
         eng.step()
     pages_other = np.asarray(eng.dstate["block_table"][other])
     pages_other = pages_other[pages_other >= 0]
-    assert not set(pages_other.tolist()) & set(range(off, off + 25))
+    assert not set(pages_other.tolist()) & set(range(off, off + 32))
 
     # crash mid-prompt: the span survives the vectorized mark–sweep
     before = list(eng.sessions[lane].tokens)
@@ -141,6 +141,57 @@ def test_engine_oversized_prompt_span(mesh):
     lb = ja.live_blocks(eng.astate, eng.acfg)
     assert lb["large"] == 0 and lb[0] == 0
     assert lane not in eng.large_spans
+
+
+def test_engine_decode_ahead_no_mid_decode_alloc(mesh):
+    """Decode-ahead reservation: a span-reserved sequence is sized to
+    max_seq up front, so decoding past the prompt never allocates a page
+    mid-decode (no lazy page, no span migration)."""
+    from repro.core import jax_alloc as ja
+    cfg = dataclasses.replace(get_smoke_config("qwen2_5_32b"), page_size=8)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServingEngine(cfg, mesh, params, lanes=1, max_seq=64,
+                        pages_per_sb=4)
+    rng = np.random.default_rng(1)
+    prompt = [int(t) for t in rng.integers(1, cfg.vocab_size, size=40)]
+    lane = eng.add_request(prompt)         # 5 prompt pages > 4 per sb
+    off, n_span = eng.large_spans[lane]
+    assert n_span == 64 // 8               # max_seq pages, not the prompt's 5
+    bt = np.asarray(eng.dstate["block_table"][lane])
+    assert bt[:n_span].tolist() == list(range(off, off + n_span))
+    for _ in range(45):                    # cross the prompt→decode boundary
+        eng.step()
+    assert int(np.asarray(eng.dstate["pos"][lane])) > len(prompt)
+    # every page the decode touched was pre-backed by the span: the
+    # per-page allocator never ran
+    assert ja.live_blocks(eng.astate, eng.acfg)[0] == 0
+    eng.finish(lane)
+    lb = ja.live_blocks(eng.astate, eng.acfg)
+    assert lb["large"] == 0 and lb[0] == 0
+
+
+def test_engine_all_lanes_fit_decode_ahead_spans(mesh):
+    """Arena sizing regression: every lane can hold a decode-ahead span
+    at once — the superblock rounding of spans must be provisioned per
+    lane, not absorbed by per-page slack."""
+    from repro.core import jax_alloc as ja
+    cfg = dataclasses.replace(get_smoke_config("qwen2_5_32b"), page_size=8)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServingEngine(cfg, mesh, params, lanes=3, max_seq=128,
+                        pages_per_sb=4)
+    rng = np.random.default_rng(2)
+    lanes = []
+    for _ in range(3):                     # 5 prompt pages > 4 per sb each
+        prompt = [int(t) for t in rng.integers(1, cfg.vocab_size, size=40)]
+        lanes.append(eng.add_request(prompt))
+    assert all(l in eng.large_spans for l in lanes)
+    assert ja.live_blocks(eng.astate, eng.acfg)["large"] == 3
+    spans = sorted(eng.large_spans[l] for l in lanes)
+    for (a, na), (b, _) in zip(spans, spans[1:]):
+        assert a + na <= b                 # reserved spans are disjoint
+    for l in lanes:
+        eng.finish(l)
+    assert ja.live_blocks(eng.astate, eng.acfg)["large"] == 0
 
 
 def test_prefix_sharing_refcounts(mesh):
