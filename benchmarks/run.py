@@ -67,6 +67,18 @@ def bench_fragbench():
         a.close()
 
 
+def bench_sharedprompt():
+    """Shared-prompt span churn: the ``sharedprompt_footprint`` rows are
+    ``name,peak_watermark_sbs,spans_saved_per_hit`` (not us/ops)."""
+    for kind in KINDS:
+        a = fresh(kind)
+        ops, saved, peak = workloads.sharedprompt(a)
+        _row(f"sharedprompt[{kind}]", ops)
+        print(f"sharedprompt_footprint[{kind}],{peak:.0f},{saved:.2f}",
+              flush=True)
+        a.close()
+
+
 def bench_prodcon(pairs=(1,)):
     for kind in KINDS:
         for p in pairs:
@@ -125,6 +137,7 @@ def main() -> None:
     bench_larson()
     bench_largebench()
     bench_fragbench()
+    bench_sharedprompt()
     bench_prodcon()
     bench_vacation()
     bench_ycsb()

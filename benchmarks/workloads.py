@@ -174,6 +174,48 @@ def fragbench(alloc, iters=80, sizes=(1, 2, 3, 4), pool=10, seed=0):
     return iters * 2 / dt, growth_sbs, reused / iters
 
 
+def sharedprompt(alloc, iters=30, span_k=3, fanout=4):
+    """Serving-style shared-prompt churn (span refcounts, core.spans).
+
+    Each round one "publisher" reserves a ``span_k``-superblock prompt
+    span and ``fanout - 1`` followers request the same prompt.  An
+    allocator with span refcounts (ralloc's ``span_acquire``) serves a
+    follower by acquiring the published span — no new span, no copy;
+    allocators without refcounts reserve a fresh span per follower.  All
+    holders then release (shared releases are transient decrements; the
+    last one frees the span).
+
+    Returns ``(ops_per_sec, spans_saved_per_hit, peak_watermark_sbs)``:
+    the fraction of follower requests served without placing a new span,
+    and the high-water address-space footprint in superblocks — the two
+    quantities a shared-prefix hit saves.
+    """
+    from repro.core.layout import SB_SIZE, SB_WORDS
+    can_share = hasattr(alloc, "span_acquire")
+    size = span_k * SB_SIZE - 512
+    peak = saved = hits = 0
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        head = alloc.malloc(size)
+        assert head is not None
+        holders = [head]
+        for _ in range(fanout - 1):
+            hits += 1
+            if can_share:
+                alloc.span_acquire(head)
+                holders.append(head)
+                saved += 1
+            else:
+                p = alloc.malloc(size)
+                assert p is not None
+                holders.append(p)
+        peak = max(peak, alloc.watermark_words() // SB_WORDS)
+        for p in holders:
+            alloc.free(p)
+    dt = time.perf_counter() - t0
+    return iters * fanout / dt, saved / hits, peak
+
+
 def prodcon(alloc, n_pairs=1, items=4000, size=64):
     """Producer/consumer via an M&S-style queue: producer allocates,
     consumer frees (paper's Prod-con)."""

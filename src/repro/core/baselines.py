@@ -303,6 +303,11 @@ class _RallocAdapter(AllocAPI):
     def free(self, ptr: int) -> None:
         self.r.free(ptr)
 
+    def span_acquire(self, ptr: int) -> int:
+        """Span refcounts (core.spans) — only ralloc/lrmalloc offer this;
+        workloads feature-detect it and fall back to fresh spans."""
+        return self.r.span_acquire(ptr)
+
     def watermark_words(self) -> int:
         return int(self.r.mem.read(layout.M_USED_SBS)) * layout.SB_WORDS
 

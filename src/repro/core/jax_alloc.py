@@ -99,6 +99,10 @@ class AllocState(NamedTuple):
     cache_top: jax.Array       # T i32[num_classes]
     alloc_count: jax.Array     # T i32[]  (statistics)
     free_count: jax.Array      # T i32[]
+    span_refs: jax.Array       # T i32[num_sbs] refcount per LARGE_CLS head
+    #                            (transient — GC-reconstructed from the
+    #                            number of root-reachable references to
+    #                            the head; mirror of core.spans registry)
 
 
 def init_state(cfg: ArenaConfig, max_roots: int = 64) -> AllocState:
@@ -119,6 +123,7 @@ def init_state(cfg: ArenaConfig, max_roots: int = 64) -> AllocState:
         cache_top=jnp.zeros((c,), jnp.int32),
         alloc_count=jnp.int32(0),
         free_count=jnp.int32(0),
+        span_refs=jnp.zeros((n,), jnp.int32),
     )
 
 
@@ -398,6 +403,7 @@ def alloc_large(state: AllocState, cfg: ArenaConfig, nwords):
     state = state._replace(
         sb_class=sb_class,
         sb_block_words=sb_block_words,
+        span_refs=jnp.where(head, 1, state.span_refs),
         free_stack=new_stack,
         free_top=keep.sum(dtype=jnp.int32),
         used_sbs=jnp.where(ok & ~has_run, state.used_sbs + nsb,
@@ -406,23 +412,47 @@ def alloc_large(state: AllocState, cfg: ArenaConfig, nwords):
     return state, jnp.where(ok, first * cfg.sb_words, -1)
 
 
+def acquire_span(state: AllocState, cfg: ArenaConfig, off):
+    """Take one extra (transient) reference on the live span headed at
+    ``off``.  Returns ``(state, ok)``; an invalid / dead / non-head
+    ``off`` is a masked no-op (``ok`` false) — the device analogue of the
+    host's raising ``span_acquire``, with the same raise-vs-masked-no-op
+    asymmetry the feature matrix documents for ``free_large``.  Nothing
+    persists: after a crash the count is rebuilt from the number of
+    root-reachable references to the head (``jax_recovery``).
+    """
+    off = jnp.asarray(off, jnp.int32)
+    sb = jnp.clip(off // cfg.sb_words, 0, cfg.num_sbs - 1)
+    valid = (off >= 0) & (off % cfg.sb_words == 0) & \
+        (state.sb_class[sb] == LARGE_CLS)
+    return state._replace(
+        span_refs=state.span_refs.at[sb].add(valid.astype(jnp.int32))), valid
+
+
 def free_large(state: AllocState, cfg: ArenaConfig, off):
-    """Free a large span: reset every member's class record (head *and*
-    continuations — recovery must never see orphaned ``LARGE_CONT``
-    markers), then push the superblocks onto the free stack for reuse by
-    any class.  A non-head / already-freed ``off`` is rejected (no-op),
-    which makes double-free safe.
+    """Release one reference on a large span; the *last* release frees it.
+
+    While ``span_refs[head] > 1`` (shared span, see ``acquire_span``) the
+    release is a pure transient decrement — class records stay put, the
+    free stack is untouched.  The last release resets every member's
+    class record (head *and* continuations — recovery must never see
+    orphaned ``LARGE_CONT`` markers), then pushes the superblocks onto
+    the free stack for reuse by any class.  A non-head / already-freed
+    ``off`` is rejected (no-op), which makes double-free safe.
     """
     off = jnp.asarray(off, jnp.int32)
     sb = jnp.clip(off // cfg.sb_words, 0, cfg.num_sbs - 1)
     valid = (off >= 0) & (state.sb_class[sb] == LARGE_CLS)
+    last = valid & (state.span_refs[sb] <= 1)
     nsb = span_sbs(cfg, state.sb_block_words[sb])
     ids = jnp.arange(cfg.num_sbs, dtype=jnp.int32)
-    span = valid & (ids >= sb) & (ids < sb + nsb)
+    span = last & (ids >= sb) & (ids < sb + nsb)
     fs, ft = _push_many(state.free_stack, state.free_top, ids, span)
+    refs = state.span_refs.at[sb].add(-valid.astype(jnp.int32))
     return state._replace(
         sb_class=jnp.where(span, FREE_CLS, state.sb_class),
         sb_block_words=jnp.where(span, 0, state.sb_block_words),
+        span_refs=jnp.where(span, 0, refs),
         free_stack=fs, free_top=ft,
         free_count=state.free_count + valid.astype(jnp.int32))
 

@@ -74,6 +74,27 @@ def mark(cfg: ArenaConfig, roots, ref_table, max_iter: int = 64):
     return marked[:S]
 
 
+def span_ref_counts(cfg: ArenaConfig, roots, ref_table, marked):
+    """Count root-reachable references per slot (vectorized).
+
+    A slot's count = (# roots naming it) + (# reference-table entries of
+    *marked* source blocks naming it).  For a live large-span head this
+    is exactly its transient refcount (one per holder whose page table /
+    root references the head) — the device analogue of the reference
+    counting ``core.recovery.trace`` does on the host.  Refcounts are
+    never persisted; this is how they come back after a crash.
+    """
+    S = num_slots(cfg)
+    root_slots = jnp.where(roots >= 0, slot_of(cfg, roots), S)
+    counts = jnp.zeros((S + 1,), jnp.int32).at[root_slots].add(1)
+    counts = counts.at[S].set(0)
+    tgt = jnp.where(ref_table >= 0, slot_of(cfg, ref_table), S)
+    contrib = marked[:, None] & (tgt < S)
+    counts = counts.at[jnp.where(contrib, tgt, S)].add(
+        contrib.astype(jnp.int32))
+    return counts[:S]
+
+
 def _compact(pred, n_plus_1: int):
     """Mask compaction: ids where pred, in ascending order, padded with -1."""
     ids = jnp.arange(pred.shape[0], dtype=jnp.int32)
@@ -85,7 +106,8 @@ def _compact(pred, n_plus_1: int):
     return out.at[:pred.shape[0]].set(vals), cnt
 
 
-def sweep(cfg: ArenaConfig, persistent: dict, marked) -> AllocState:
+def sweep(cfg: ArenaConfig, persistent: dict, marked,
+          ref_counts=None) -> AllocState:
     """Rebuild every transient structure from (persistent fields, marks).
 
     Dead/orphaned large spans are swept back to ``FREE_CLS`` (and onto
@@ -95,6 +117,12 @@ def sweep(cfg: ArenaConfig, persistent: dict, marked) -> AllocState:
     placement-equivalent to the pre-crash heap: the next span lands on
     the same superblock either side of a crash (asserted by the
     differential fuzz suite).
+
+    ``ref_counts`` (per-slot, from ``span_ref_counts``) reconstructs the
+    transient span refcounts: a live head gets ``max(count, 1)`` — it is
+    marked, so at least one reference exists; the floor only guards a
+    caller sweeping with a stale count table.  Without ``ref_counts``
+    every live span conservatively recovers with a single owner.
     """
     n = cfg.num_sbs
     sb_ids = jnp.arange(n, dtype=jnp.int32)
@@ -129,6 +157,17 @@ def sweep(cfg: ArenaConfig, persistent: dict, marked) -> AllocState:
     is_large = in_use & ((sb_class == LARGE_CLS) | (sb_class == LARGE_CONT))
     live_large = is_large & in_span & head_marked
     empty = empty | (is_large & ~live_large)
+
+    # span refcounts: a live head's count = root-reachable references to it
+    live_head = is_head & live_large
+    if ref_counts is None:
+        head_counts = jnp.ones((n,), jnp.int32)
+    else:
+        rc_pad = jnp.concatenate([jnp.asarray(ref_counts, jnp.int32),
+                                  jnp.zeros((1,), jnp.int32)])
+        head_counts = rc_pad[jnp.where(live_head,
+                                       (sb_ids * cfg.sb_words) // minw, Spad)]
+    span_refs = jnp.where(live_head, jnp.maximum(head_counts, 1), 0)
 
     new_class = sb_class
     for c in range(cfg.num_classes):
@@ -173,11 +212,14 @@ def sweep(cfg: ArenaConfig, persistent: dict, marked) -> AllocState:
         free_top=free_top,
         partial_stack=jnp.stack(partial_stacks),
         partial_top=jnp.stack(partial_tops),
+        span_refs=span_refs,
     )
 
 
 def recover(cfg: ArenaConfig, persistent: dict, ref_table,
             max_iter: int = 64) -> tuple[AllocState, jax.Array]:
-    """Full vectorized recovery (mark + sweep).  jit-compatible."""
+    """Full vectorized recovery (mark + sweep + span-refcount rebuild).
+    jit-compatible."""
     marked = mark(cfg, persistent["roots"], ref_table, max_iter)
-    return sweep(cfg, persistent, marked), marked
+    ref_counts = span_ref_counts(cfg, persistent["roots"], ref_table, marked)
+    return sweep(cfg, persistent, marked, ref_counts), marked

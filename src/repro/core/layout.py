@@ -79,11 +79,12 @@ def contiguous_runs(sorted_ids) -> list[tuple[int, int]]:
     """Group ascending, duplicate-free indices into maximal contiguous
     runs ``(start, length)``.
 
-    Shared by the host best-fit placement (``ralloc._claim_free_run``),
+    Shared by the host run index (``spans.FreeRunIndex.rebuild`` — the
+    structure behind ``ralloc._claim_free_run``'s best-fit placement),
     the host recovery introspection (``recovery.free_superblock_runs``)
-    and the device debug helper (``jax_alloc.free_runs``) so the three
-    can never drift apart — the differential-fuzz suite asserts
-    host/device placement equivalence over exactly these runs.
+    and the device debug helper (``jax_alloc.free_runs``) so they can
+    never drift apart — the differential-fuzz suite asserts host/device
+    placement equivalence over exactly these runs.
     """
     runs: list[tuple[int, int]] = []
     start = prev = None

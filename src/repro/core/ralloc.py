@@ -34,6 +34,7 @@ from .layout import (ANCHOR_NIL_AVAIL, D_ANCHOR, D_BLOCK_SIZE, D_NEXT_FREE,
                      LARGE_CLASS, LARGE_CONT, PARTIAL, SB_SIZE, SB_WORDS,
                      WORD, pack_anchor, pack_head, unpack_anchor, unpack_head)
 from . import pptr as pp
+from .spans import FreeRunIndex, SpanRegistry
 
 
 class OutOfMemory(Exception):
@@ -67,6 +68,13 @@ class Ralloc:
         self._all_caches: list[list[list[int]]] = []
         self._caches_lock = threading.Lock()
         self._large_lock = threading.Lock()   # serializes span placement
+        # transient span metadata (never flushed; GC-reconstructed):
+        # refcounts per live span head + the size-bucketed free-run index
+        # that mirrors free-stack membership (always take _large_lock
+        # before _free_lock when both are needed)
+        self.spans = SpanRegistry()
+        self._run_index = FreeRunIndex()
+        self._free_lock = threading.Lock()
         self._closed = False
         self.dirty_restart = self.heap.init()
 
@@ -145,6 +153,11 @@ class Ralloc:
             if self.mem.read(self.desc(sb, D_BLOCK_SIZE)) <= 0:
                 raise ValueError(
                     f"double/invalid free of large block at superblock {sb}")
+            # refcounted span (see core.spans): while other holders remain,
+            # a free is a pure transient decrement — nothing persisted, the
+            # span stays placed.  Only the last reference tears it down.
+            if self.spans.release(sb) > 0:
+                return
             self._free_large(sb)
             return
         cache = self._tcache()[cls]
@@ -154,6 +167,34 @@ class Ralloc:
             # Makalu-style locality tweak (beyond-paper option, §6.3 discussion)
             keep = len(cache) // 2 if self.keep_half else 0
             self._flush_cache(cls, keep=keep)
+
+    # -------------------------------------------------------- span refcounts
+    def span_acquire(self, ptr: int) -> int:
+        """Take one extra (transient) reference on a live large span.
+
+        ``ptr`` must be the span head block address.  Returns the new
+        refcount.  Raises on a dead / non-head pointer — the host-side
+        strictness mirror of the device's masked no-op ``acquire_span``
+        (same asymmetry the feature matrix documents for ``free_large``).
+        Acquire persists nothing: after a crash the count is rebuilt by
+        counting root-reachable references to the head during GC.
+        """
+        sb = self.heap.sb_of(ptr)
+        cls = self.mem.read(self.desc(sb, D_SIZE_CLASS))
+        bs = self.mem.read(self.desc(sb, D_BLOCK_SIZE))
+        if cls != LARGE_CLASS or bs <= 0 or ptr != self.heap.sb_word(sb):
+            raise ValueError(
+                f"span_acquire of non-head/dead span pointer {ptr}")
+        return self.spans.acquire(sb)
+
+    def span_release(self, ptr: int) -> None:
+        """Drop one reference (frees the span when the last one drops) —
+        an alias of ``free`` named for symmetry with ``span_acquire``."""
+        self.free(ptr)
+
+    def span_refcount(self, ptr: int) -> int:
+        """Current transient refcount of the span holding ``ptr``."""
+        return self.spans.count(self.heap.sb_of(ptr))
 
     def _cache_cap(self, cls: int) -> int:
         """Cache capacity: one superblock's worth of blocks (LRMalloc)."""
@@ -198,6 +239,24 @@ class Ralloc:
             if m.cas(head_word, old, pack_head(int(nxt), ctr + 1)):
                 return idx
 
+    # ------------------------------------------------- free stack + run index
+    # All superblock free-stack traffic goes through these wrappers so the
+    # size-bucketed run index (core.spans.FreeRunIndex) stays an exact
+    # mirror of stack membership — the index is what lets the large-object
+    # placement answer best-fit queries without draining + sorting the
+    # stack on every request.
+    def _free_push(self, sb: int) -> None:
+        with self._free_lock:
+            self._push_list(layout.M_FREE_HEAD, D_NEXT_FREE, sb)
+            self._run_index.add(sb)
+
+    def _free_pop(self) -> int | None:
+        with self._free_lock:
+            sb = self._pop_list(layout.M_FREE_HEAD, D_NEXT_FREE)
+            if sb is not None:
+                self._run_index.discard(sb)
+            return sb
+
     # ------------------------------------------------------------ expansion
     def _expand(self, nsb: int) -> int | None:
         """Advance the used watermark by ``nsb`` superblocks (CAS+flush+fence).
@@ -233,7 +292,7 @@ class Ralloc:
                 status, taken = self._reserve_all(sb)
                 if status == "empty":      # became EMPTY while listed → retire
                     self._init_free_sb(sb)
-                    self._push_list(layout.M_FREE_HEAD, D_NEXT_FREE, sb)
+                    self._free_push(sb)
                     continue
                 if status == "full":       # raced empty-handed; try the next
                     continue
@@ -249,7 +308,7 @@ class Ralloc:
                 return True
 
             # 2. free superblock (any class) — (re)initialize it for cls
-            sb = self._pop_list(layout.M_FREE_HEAD, D_NEXT_FREE)
+            sb = self._free_pop()
             if sb is None:
                 # 3. expand the used prefix of the superblock region.  A
                 # concurrent span placement may be holding the *entire*
@@ -258,7 +317,7 @@ class Ralloc:
                 # expanding here would durably leak the address space the
                 # free-run search exists to reclaim.
                 with self._large_lock:
-                    sb = self._pop_list(layout.M_FREE_HEAD, D_NEXT_FREE)
+                    sb = self._free_pop()
                     if sb is None:
                         first = self._expand(self.config.expand_sbs)
                         if first is None:
@@ -271,8 +330,7 @@ class Ralloc:
                             for extra in range(first + 1,
                                                first + self.config.expand_sbs):
                                 self._init_free_sb(extra)
-                                self._push_list(layout.M_FREE_HEAD,
-                                                D_NEXT_FREE, extra)
+                                self._free_push(extra)
             # persist size class & block size BEFORE any block escapes —
             # recovery depends on them (paper: "has to be persisted before a
             # superblock is used for allocation")
@@ -343,52 +401,62 @@ class Ralloc:
                                               new_count, tag + 1)):
                     break
             if state == FULL and new_state == EMPTY:
-                self._push_list(layout.M_FREE_HEAD, D_NEXT_FREE, sb)
+                self._free_push(sb)
             elif state == FULL and new_state == PARTIAL:
                 self._push_list(layout.M_PARTIAL_HEADS + cls, D_NEXT_PARTIAL, sb)
             # PARTIAL→EMPTY: stays in the partial list; retired when fetched.
 
     # ----------------------------------------------------------------- large
     def _claim_free_run(self, nsb: int) -> int | None:
-        """Best-fit contiguous-run search over the superblock free list.
+        """Best-fit contiguous-run search, driven by the size-bucketed
+        run index (``core.spans.FreeRunIndex``).
 
-        Drains the Treiber free stack (pops are atomic, so concurrent
-        pushes are never lost — they simply land after the drain), groups
-        the drained indices into maximal contiguous runs, and claims the
-        first ``nsb`` superblocks of the *smallest* run that fits
-        (leftmost on ties).  The device allocator applies the identical
-        rule over ``sb_class == FREE_CLS``, so host and device place
-        spans identically given identical free sets — and because the
-        drained set is sorted before searching, placement depends only on
-        free-set *membership*, never on stack order, which is what makes
-        recovered heaps placement-equivalent to pre-crash ones.
+        The index mirrors free-stack *membership* (every push/pop goes
+        through ``_free_push``/``_free_pop``), so the best-fit answer —
+        smallest run >= ``nsb``, leftmost on ties — is identical to the
+        old drain-the-stack-and-sort search, and identical to the device
+        allocator's suffix-min scan over ``sb_class == FREE_CLS``: host
+        and device still place spans identically given identical free
+        sets, and placement still depends only on membership, never on
+        stack order (the placement-equivalence invariant).  What changed
+        is cost: a miss is O(log) with zero stack traffic, and a hit
+        only pops the stack until the claimed run's members are
+        collected instead of draining + sorting everything.
 
-        Everything unclaimed is pushed back.  Returns the head superblock
-        index, or None when no run of ``nsb`` exists.  Callers must hold
-        ``_large_lock``: two concurrent drains would split one run across
-        two searchers, making both miss it (one would then expand the
-        watermark a fitting run exists for — the exact leak this search
-        removes).
+        Returns the head superblock index, or None when no run of
+        ``nsb`` exists.  Callers must hold ``_large_lock``: two
+        concurrent claims would split one run across two searchers,
+        making both miss it (one would then expand the watermark a
+        fitting run exists for — the exact leak this search removes).
         """
-        drained: list[int] = []
-        while (sb := self._pop_list(layout.M_FREE_HEAD,
-                                    D_NEXT_FREE)) is not None:
-            drained.append(sb)
-        if not drained:
-            return None
-        drained.sort()
-        fits = [(length, start)
-                for start, length in layout.contiguous_runs(drained)
-                if length >= nsb]
-        if not fits:
-            for sb in drained:
-                self._push_list(layout.M_FREE_HEAD, D_NEXT_FREE, sb)
-            return None
-        _, first = min(fits)                 # smallest run, leftmost on ties
-        for sb in drained:
-            if not first <= sb < first + nsb:
-                self._push_list(layout.M_FREE_HEAD, D_NEXT_FREE, sb)
-        return first
+        with self._free_lock:
+            first = self._run_index.best_fit(nsb)
+            if first is None:
+                return None
+            want = set(range(first, first + nsb))
+            popped: list[int] = []
+            while want:
+                sb = self._pop_list(layout.M_FREE_HEAD, D_NEXT_FREE)
+                if sb is None:
+                    break
+                popped.append(sb)
+                want.discard(sb)
+            if want:
+                # the index drifted from the stack (an offline/raw stack
+                # edit): the stack is fully drained now, so resync the
+                # index to the drained membership and redo the search —
+                # this degenerate path is exactly the old algorithm
+                self._run_index.rebuild(popped)
+                first = self._run_index.best_fit(nsb)
+                if first is None:
+                    for sb in popped:
+                        self._push_list(layout.M_FREE_HEAD, D_NEXT_FREE, sb)
+                    return None
+            self._run_index.claim(first, nsb)
+            for sb in popped:
+                if not first <= sb < first + nsb:
+                    self._push_list(layout.M_FREE_HEAD, D_NEXT_FREE, sb)
+            return first
 
     def _malloc_large(self, size: int) -> int | None:
         nsb = math.ceil(size / SB_SIZE)
@@ -416,6 +484,7 @@ class Ralloc:
         _, _, _, tag = unpack_anchor(m.read(self.desc(first, D_ANCHOR)))
         m.write(self.desc(first, D_ANCHOR),
                 pack_anchor(FULL, ANCHOR_NIL_AVAIL, 0, tag + 1))
+        self.spans.register(first)           # one (transient) owner reference
         return self.heap.sb_word(first)
 
     def _free_large(self, first: int) -> None:
@@ -438,10 +507,11 @@ class Ralloc:
         # drain interleaving between the pushes would observe a torn run
         # (a prefix of the span), claim it misaligned, and leave stranded
         # fragments no later request can use
+        self.spans.forget(first)
         with self._large_lock:
             for sb in range(first, first + nsb):
                 self._init_free_sb(sb)
-                self._push_list(layout.M_FREE_HEAD, D_NEXT_FREE, sb)
+                self._free_push(sb)
 
     # ------------------------------------------------------------ block I/O
     # Convenience accessors used by test data structures & benchmarks: they

@@ -71,10 +71,19 @@ def _conservative_targets(r, block_word: int, size_bytes: int):
     return out
 
 
-def trace(r) -> dict[int, tuple[int, int]]:
+def trace(r, span_refs: dict[int, int] | None = None
+          ) -> dict[int, tuple[int, int]]:
     """Mark phase: BFS from persistent roots (paper Fig. 3 ``collect``).
 
     Returns {block_word: (size_class, size_bytes)} for every reachable block.
+
+    When ``span_refs`` is given, the trace additionally counts — at zero
+    extra passes — how many root-reachable references target each live
+    large-span *head* (``span_refs[head_sb] += 1`` per reference, roots
+    included).  That count IS the span's refcount: acquire/release never
+    persist anything, so recovery reconstructs the transient
+    ``SpanRegistry`` the same way it reconstructs free lists — from the
+    persisted minimum plus GC reachability (see ``core.spans``).
     """
     used_sbs = int(r.mem.read(layout.M_USED_SBS))
     visited: dict[int, tuple[int, int]] = {}
@@ -82,7 +91,12 @@ def trace(r) -> dict[int, tuple[int, int]]:
 
     def visit(word: int, typename: str | None) -> None:
         ok, cls, bs = _valid_block_start(r, word, used_sbs)
-        if ok and word not in visited:
+        if not ok:
+            return
+        if span_refs is not None and cls == LARGE_CLASS:
+            sb = r.heap.sb_of(word)
+            span_refs[sb] = span_refs.get(sb, 0) + 1
+        if word not in visited:
             visited[word] = (cls, bs)
             pending.append((word, typename))
 
@@ -121,8 +135,9 @@ def recover(r) -> dict:
     for c in range(layout.NUM_CLASSES):
         m.write(layout.M_PARTIAL_HEADS + c, pack_head(-1, 0))
 
-    # step 5: mark
-    visited = trace(r)
+    # step 5: mark (+ span-refcount reconstruction, same pass)
+    span_refs: dict[int, int] = {}
+    visited = trace(r, span_refs)
     t_mark = time.perf_counter()
 
     # steps 6–9: sweep & rebuild
@@ -184,6 +199,15 @@ def recover(r) -> dict:
             m.write(aw, pack_anchor(FULL, ANCHOR_NIL_AVAIL, 0, 0))
             n_full += 1
 
+    # rebuild the transient span registry and free-run index exactly like
+    # the paper rebuilds thread caches and Treiber stacks: counts come
+    # from the trace (references to live heads), the index from the swept
+    # free list.  Dead heads that the conservative scan touched are not
+    # registered — only live spans carry counts.
+    r.spans.reconstruct({sb: c for sb, c in span_refs.items()
+                         if sb in large_heads})
+    r._run_index.rebuild(free_superblock_list(r))
+
     # step 10: write back all three regions, fence
     m.drain()
     m.fence()
@@ -195,6 +219,8 @@ def recover(r) -> dict:
         "partial_superblocks": n_partial,
         "full_superblocks": n_full,
         "large_blocks": len(large_heads),
+        "shared_spans": sum(1 for sb, c in span_refs.items()
+                            if sb in large_heads and c > 1),
         "mark_seconds": t_mark - t0,
         "sweep_seconds": t_end - t_mark,
         "total_seconds": t_end - t0,

@@ -1,0 +1,200 @@
+"""Span registry: transient refcounts + size-bucketed free-run index.
+
+Ralloc's thesis is that metadata which recovery-time GC can rebuild need
+not be persisted on the hot path.  This module applies that philosophy to
+two pieces of large-span bookkeeping, both held **only in transient
+memory** — nothing here is ever flushed:
+
+  * ``SpanRegistry`` — a refcount per live ``LARGE_CLASS`` span head.
+    ``Ralloc.span_acquire`` increments it; ``free`` of a span whose count
+    is above one *decrements instead of freeing*, so several holders (the
+    serving engine's shared-prompt lanes, the prefix cache) can reference
+    one reserved span.  After a crash the counts are reconstructed by the
+    existing mark phase: the number of root-reachable references to a
+    span head *is* its refcount (``recovery.trace`` counts them while
+    marking; ``jax_recovery.span_ref_counts`` is the vectorized device
+    analogue).  No acquire/release ever writes NVM — the paper's
+    "pay almost nothing for persistence" property extends to sharing.
+
+  * ``FreeRunIndex`` — maximal contiguous runs of free superblocks,
+    bucketed by length.  ``Ralloc._claim_free_run`` previously drained
+    and sorted the whole Treiber free stack per large allocation
+    (O(num_sbs log num_sbs)); the index answers best-fit queries
+    (smallest run >= request, leftmost on ties) in O(log) and answers
+    *misses* in O(1) without touching the stack at all.  It is a mirror
+    of free-stack membership, updated at every push/pop, so placement
+    still depends only on free-set membership — the property the
+    differential-fuzz suite pins host/device lock-step to.
+
+Both structures are rebuilt from scratch by ``recovery.recover`` (the
+index from the swept free list, the counts from the GC trace), exactly
+like the paper's thread caches and Treiber stacks.
+"""
+
+from __future__ import annotations
+
+import bisect
+import threading
+
+
+class SpanRegistry:
+    """Transient per-span refcounts, keyed by head superblock index.
+
+    Counts are *advisory until reconstructed*: a span never registered
+    (e.g. a reopened heap before ``recover()`` runs) defaults to one
+    reference, which preserves the pre-registry free semantics.
+    """
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self._refs: dict[int, int] = {}
+
+    def register(self, head_sb: int) -> None:
+        """A freshly placed span starts with one reference (its owner)."""
+        with self._lock:
+            self._refs[head_sb] = 1
+
+    def acquire(self, head_sb: int) -> int:
+        """Add one reference; returns the new count."""
+        with self._lock:
+            c = self._refs.get(head_sb, 1) + 1
+            self._refs[head_sb] = c
+            return c
+
+    def release(self, head_sb: int) -> int:
+        """Drop one reference; returns the remaining count (0 = free it)."""
+        with self._lock:
+            c = self._refs.get(head_sb, 1) - 1
+            if c <= 0:
+                self._refs.pop(head_sb, None)
+                return 0
+            self._refs[head_sb] = c
+            return c
+
+    def count(self, head_sb: int) -> int:
+        with self._lock:
+            return self._refs.get(head_sb, 1)
+
+    def forget(self, head_sb: int) -> None:
+        """Drop the record entirely (the span was freed)."""
+        with self._lock:
+            self._refs.pop(head_sb, None)
+
+    def reconstruct(self, counts: dict[int, int]) -> None:
+        """Replace every count with the GC-reconstructed map (recovery)."""
+        with self._lock:
+            self._refs = {sb: max(1, int(c)) for sb, c in counts.items()}
+
+    def snapshot(self) -> dict[int, int]:
+        with self._lock:
+            return dict(self._refs)
+
+
+class FreeRunIndex:
+    """Size-bucketed maximal runs of free superblock indices.
+
+    Mirrors the membership of the superblock free stack.  Maintained
+    incrementally: ``add``/``discard`` are amortized O(run) on merges and
+    splits, ``best_fit`` is O(log #lengths), and a miss (no run of the
+    requested length) costs O(log) with no stack traffic at all.
+    """
+
+    def __init__(self) -> None:
+        self._start_len: dict[int, int] = {}     # run start -> length
+        self._end_start: dict[int, int] = {}     # run end (exclusive) -> start
+        self._of_run: dict[int, int] = {}        # member sb -> run start
+        self._by_len: dict[int, list[int]] = {}  # length -> sorted starts
+        self._lens: list[int] = []               # sorted distinct lengths
+
+    # ------------------------------------------------------------ internals
+    def _link(self, start: int, length: int) -> None:
+        self._start_len[start] = length
+        self._end_start[start + length] = start
+        bucket = self._by_len.get(length)
+        if bucket is None:
+            self._by_len[length] = [start]
+            bisect.insort(self._lens, length)
+        else:
+            bisect.insort(bucket, start)
+        for sb in range(start, start + length):
+            self._of_run[sb] = start
+
+    def _unlink(self, start: int) -> int:
+        length = self._start_len.pop(start)
+        del self._end_start[start + length]
+        bucket = self._by_len[length]
+        bucket.pop(bisect.bisect_left(bucket, start))
+        if not bucket:
+            del self._by_len[length]
+            self._lens.pop(bisect.bisect_left(self._lens, length))
+        return length
+
+    # ------------------------------------------------------------------ API
+    def __contains__(self, sb: int) -> bool:
+        return sb in self._of_run
+
+    def __len__(self) -> int:
+        return len(self._of_run)
+
+    def add(self, sb: int) -> None:
+        """A superblock entered the free set; merge with its neighbours."""
+        if sb in self._of_run:
+            return
+        start, length = sb, 1
+        left = self._end_start.get(sb)           # run ending right at sb
+        if left is not None:
+            length += self._unlink(left)
+            start = left
+        right_len = self._start_len.get(sb + 1)  # run starting right after
+        if right_len is not None:
+            self._unlink(sb + 1)
+            length += right_len
+        self._link(start, length)
+
+    def discard(self, sb: int) -> None:
+        """A superblock left the free set (popped for a small-class refill);
+        split its run.  Tolerates non-members (offline/raw stack edits)."""
+        start = self._of_run.pop(sb, None)
+        if start is None:
+            return
+        length = self._unlink(start)
+        if sb > start:
+            self._link(start, sb - start)
+        if start + length > sb + 1:
+            self._link(sb + 1, start + length - sb - 1)
+
+    def best_fit(self, nsb: int) -> int | None:
+        """Start of the smallest run >= ``nsb`` (leftmost on ties) — the
+        identical rule ``min((length, start))`` applied over drained runs
+        before this index existed, and the rule the device's suffix-min
+        scan implements."""
+        i = bisect.bisect_left(self._lens, nsb)
+        if i == len(self._lens):
+            return None
+        return self._by_len[self._lens[i]][0]
+
+    def claim(self, start: int, nsb: int) -> None:
+        """Remove the first ``nsb`` members of the run starting at
+        ``start``; the remainder re-enters the index as its own run."""
+        length = self._unlink(start)
+        assert length >= nsb, (start, length, nsb)
+        for sb in range(start, start + nsb):
+            del self._of_run[sb]
+        if length > nsb:
+            self._link(start + nsb, length - nsb)
+
+    def runs(self) -> list[tuple[int, int]]:
+        """All runs as sorted ``(start, length)`` — comparable with
+        ``recovery.free_superblock_runs`` / ``jax_alloc.free_runs``."""
+        return sorted(self._start_len.items())
+
+    def clear(self) -> None:
+        self.__init__()
+
+    def rebuild(self, ids) -> None:
+        """Reset to exactly the given free-set membership (recovery, or a
+        drift resync from a fully drained stack)."""
+        from .layout import contiguous_runs
+        self.clear()
+        for start, length in contiguous_runs(sorted(ids)):
+            self._link(start, length)

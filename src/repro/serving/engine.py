@@ -68,9 +68,15 @@ class ServingEngine:
                                                       cfg=self.acfg))
         self._free_large = jax.jit(functools.partial(ja.free_large,
                                                      cfg=self.acfg))
+        self._acquire_span = jax.jit(functools.partial(ja.acquire_span,
+                                                       cfg=self.acfg))
         # lanes holding a contiguous multi-superblock page span (oversized
         # prompts): lane -> (span head offset, n_pages), freed via free_large
         self.large_spans: dict[int, tuple[int, int]] = {}
+        # lanes that *acquired* another lane's published span (shared-prefix
+        # hits): same (off, n_pages) record; finish releases one reference
+        # (free_large decrements while other holders remain)
+        self.shared_spans: dict[int, tuple[int, int]] = {}
         pshape = jax.tree.map(
             lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), params)
         self.step_fn, _, _ = dec.make_decode_step(cfg, mesh, pshape)
@@ -105,30 +111,42 @@ class ServingEngine:
         # the prompt), so generation never needs a mid-decode lazy page or
         # a span migration.  Clamped to the page-table width: generation
         # stops at max_seq, so pages past it would never be touched.
+        # A shared-prefix *hit* on a published span skips the reservation
+        # entirely: the lane acquires the published span instead.
         table_width = int(self.dstate["block_table"].shape[1])
         n_prompt_pages = min(-(-len(prompt) // self.cfg.page_size),
                              table_width)
-        if (self.cfg.attn_layers > 0 and not share_prefix
+        hit = self._prefix_cache.get(tuple(prompt)) if share_prefix else None
+        if (self.cfg.attn_layers > 0 and hit is None
                 and n_prompt_pages > self.acfg.sb_words):
             n_ahead = min(-(-self.max_seq // self.cfg.page_size), table_width)
             self._reserve_span(lane, max(n_prompt_pages, n_ahead))
-        if share_prefix:
-            hit = self._prefix_cache.get(tuple(prompt))
-            if hit is not None:
-                pages, plen, kvp, next_tok = hit
-                bt = np.asarray(self.dstate["block_table"]).copy()
-                bt[lane, :len(pages)] = pages
-                self.dstate["block_table"] = jnp.asarray(bt)
-                kv = np.asarray(self.dstate["kv_pos"]).copy()
-                kv[lane, :len(pages)] = kvp
-                self.dstate["kv_pos"] = jnp.asarray(kv)
-                self.dstate["pos"] = self.dstate["pos"].at[lane].set(plen)
-                # the model's continuation at the prompt boundary was
-                # sampled by the publisher — it is part of the prefix
-                self.sessions[lane].tokens = list(prompt) + [next_tok]
-                self.cur_tokens[lane] = next_tok
-                for p in pages:
+        if hit is not None:
+            if hit[0] == "span":
+                # acquire the published span: the prompt's KV pages are
+                # the span's prefix, no copy and no fresh reservation —
+                # the span frees only when the last holder releases it
+                _, off, n_span, full, plen, kvp, next_tok = hit
+                self.astate, _ = self._acquire_span(state=self.astate,
+                                                    off=jnp.int32(off))
+                self.shared_spans[lane] = (off, n_span)
+                pages = off + np.arange(full, dtype=np.int32)
+            else:
+                _, pages, plen, kvp, next_tok = hit
+                pages = np.asarray(pages, np.int32)
+                for p in pages.tolist():
                     self.page_refs[p] = self.page_refs.get(p, 1) + 1
+            bt = np.asarray(self.dstate["block_table"]).copy()
+            bt[lane, :len(pages)] = pages
+            self.dstate["block_table"] = jnp.asarray(bt)
+            kv = np.asarray(self.dstate["kv_pos"]).copy()
+            kv[lane, :len(pages)] = kvp
+            self.dstate["kv_pos"] = jnp.asarray(kv)
+            self.dstate["pos"] = self.dstate["pos"].at[lane].set(plen)
+            # the model's continuation at the prompt boundary was
+            # sampled by the publisher — it is part of the prefix
+            self.sessions[lane].tokens = list(prompt) + [next_tok]
+            self.cur_tokens[lane] = next_tok
         # the allocator root for this lane points at its page table
         self.astate = ja.set_root(self.astate, lane, jnp.int32(lane))
         return lane
@@ -153,17 +171,51 @@ class ServingEngine:
         """Register this lane's fully-processed prompt as a shared prefix.
 
         Only whole pages are shared (a partially-filled page would be
-        written by the owner — violating block disjointness)."""
-        if lane in self.large_spans:
-            return          # span pages are owned whole, never refcounted
+        written by the owner — violating block disjointness).  A lane
+        holding a reserved span publishes the *span itself*: later
+        matching requests acquire the span (one refcount each, see
+        ``core.spans``) instead of copying pages into a fresh
+        reservation; the span frees when the last holder exits."""
         s = self.sessions[lane]
         pos = int(np.asarray(self.dstate["pos"][lane]))
         page = self.cfg.page_size
         full = pos // page
         if full == 0:
             return
-        bt = np.asarray(self.dstate["block_table"][lane])
         kv = np.asarray(self.dstate["kv_pos"][lane])
+        span = self.large_spans.get(lane)
+        if span is None:
+            span = self.shared_spans.get(lane)   # sharers may re-publish
+        if span is not None:
+            off, n_span = span
+            # only span-backed pages can be published under the span
+            # entry: clamp to the leading block-table slots the span
+            # actually backs (a sharer's post-prefix pages are its own
+            # lazy allocations and hold *its* KV, not the span's)
+            bt_lane = np.asarray(self.dstate["block_table"][lane])
+            cover = 0
+            while (cover < min(full, n_span, bt_lane.size)
+                   and int(bt_lane[cover]) == off + cover):
+                cover += 1
+            full = min(full, cover)
+            if full == 0:
+                return
+            key = tuple(s.tokens[:full * page])
+            prev = self._prefix_cache.get(key)
+            if prev is not None:
+                # already published (the cache holds exactly one reference
+                # per entry): acquiring again would leak a span reference
+                # when this entry is overwritten
+                return
+            # the prefix cache itself holds one span reference, so the
+            # span survives the publishing session's eviction
+            self.astate, _ = self._acquire_span(state=self.astate,
+                                                off=jnp.int32(off))
+            self._prefix_cache[key] = (
+                "span", off, n_span, full, full * page, kv[:full].copy(),
+                int(self.cur_tokens[lane]))
+            return
+        bt = np.asarray(self.dstate["block_table"][lane])
         if pos != full * page or pos != len(s.tokens) - (
                 1 if len(s.tokens) > full * page else 0):
             # share only a fully-processed, page-aligned prompt
@@ -175,12 +227,20 @@ class ServingEngine:
             # survive the publishing session's eviction
             self.page_refs[p] = self.page_refs.get(p, 1) + 1
         self._prefix_cache[tuple(s.tokens[:full * page])] = (
-            pages, full * page, kv[:full].copy(),
+            "pages", pages, full * page, kv[:full].copy(),
             int(self.cur_tokens[lane]))
 
     def drop_prefix_cache(self) -> None:
-        """Release the cache's references; fully-unreferenced pages free."""
-        for pages, _, _, _ in self._prefix_cache.values():
+        """Release the cache's references; fully-unreferenced pages (and
+        spans whose last holder was the cache) free."""
+        for entry in self._prefix_cache.values():
+            if entry[0] == "span":
+                # free_large releases one reference: a decrement while
+                # holders remain, the actual free when the cache is last
+                self.astate = self._free_large(state=self.astate,
+                                               off=jnp.int32(entry[1]))
+                continue
+            pages = entry[1]
             stale = []
             for p in pages:
                 if p in self.page_refs:
@@ -245,16 +305,22 @@ class ServingEngine:
         return out
 
     def finish(self, lane: int) -> None:
-        """Evict a session: free its pages (shared pages only at ref 0)."""
+        """Evict a session: free its pages (shared pages only at ref 0,
+        shared spans only when the last holder releases)."""
         s = self.sessions.pop(lane)
         s.done = True
         bt = np.asarray(self.dstate["block_table"][lane])
         pages = bt[bt >= 0].astype(np.int32)
-        if lane in self.large_spans:
-            # the prompt's page table is one large span (freed whole);
-            # pages decoded past the span were lazily allocated and go
-            # through the ordinary per-page free below
-            off, n_span = self.large_spans.pop(lane)
+        span = self.large_spans.pop(lane, None)
+        if span is None:
+            span = self.shared_spans.pop(lane, None)
+        if span is not None:
+            # the prompt's page table is one large span: free_large drops
+            # this lane's reference (a transient decrement while the
+            # prefix cache / other lanes still hold it, the actual free
+            # when this was the last holder); pages decoded past the span
+            # were lazily allocated and go through the per-page free below
+            off, n_span = span
             self.astate = self._free_large(state=self.astate,
                                            off=jnp.int32(off))
             pages = pages[(pages < off) | (pages >= off + n_span)]
@@ -283,24 +349,39 @@ class ServingEngine:
     # ------------------------------------------------------------- recovery
     def ref_table(self) -> np.ndarray:
         """Filter function output: each live session's root block (its
-        first page) references the session's remaining pages."""
+        first page) references the session's remaining pages.
+
+        Lanes sharing a span root at the same head page, so their
+        reference lists *accumulate* into that slot's row (the row is
+        widened as needed) — losing one lane's refs would sweep its
+        lazily-allocated decode pages out from under it."""
         S = jr.num_slots(self.acfg)
-        R = self.dstate["block_table"].shape[1]
-        refs = np.full((S, R), -1, np.int32)
+        R = int(self.dstate["block_table"].shape[1])
         bt = np.asarray(self.dstate["block_table"])
+        rows: dict[int, list[int]] = {}
         for lane, s in self.sessions.items():
             if s.done:
                 continue
             pages = bt[lane][bt[lane] >= 0]
             if pages.size == 0:
                 continue
-            root = int(pages[0])
-            refs[root, :pages.size - 1] = pages[1:]
+            rows.setdefault(int(pages[0]), []).extend(pages[1:].tolist())
+        width = max([R] + [len(v) for v in rows.values()])
+        refs = np.full((S, width), -1, np.int32)
+        for root, tgts in rows.items():
+            refs[root, :len(tgts)] = tgts
         return refs
 
     def crash_and_recover(self) -> dict:
         """Simulate losing all transient allocator state, then rebuild it
-        from (persistent fields + session page tables) via vectorized GC."""
+        from (persistent fields + session page tables) via vectorized GC.
+
+        Engine-side sharing metadata is transient too and comes back the
+        same way the allocator's span refcounts do — from what the roots
+        can see: the prefix cache (and the references it held) does not
+        survive, per-page refcounts are recounted from live block tables,
+        and span refcounts are reconstructed inside ``jr.recover`` as the
+        number of root-reachable references to each span head."""
         persistent = ja.persistent_snapshot(self.astate)
         roots = np.full((self.lanes,), -1, np.int32)
         bt = np.asarray(self.dstate["block_table"])
@@ -314,5 +395,23 @@ class ServingEngine:
         live_before = ja.live_blocks(self.astate, self.acfg)[PAGE_CLS]
         self.astate = new_state
         live_after = ja.live_blocks(new_state, self.acfg)[PAGE_CLS]
+        # drop + recount the engine's transient sharing records (recovery
+        # step 2: caches start empty in a fresh process).  Span-backed
+        # pages are excluded: their sharing is the *span's* refcount
+        # (reconstructed inside jr.recover) and finish() never routes them
+        # through the per-page free, so a per-page count would go stale
+        # and poison the offset after the span frees and is reallocated.
+        self._prefix_cache.clear()
+        spans = list(self.large_spans.values()) + \
+            list(self.shared_spans.values())
+        counts: dict[int, int] = {}
+        for lane, s in self.sessions.items():
+            if s.done:
+                continue
+            for p in bt[lane][bt[lane] >= 0].tolist():
+                if any(off <= p < off + n for off, n in spans):
+                    continue
+                counts[p] = counts.get(p, 0) + 1
+        self.page_refs = {p: c for p, c in counts.items() if c > 1}
         return {"marked": int(np.asarray(marked).sum()),
                 "live_before": live_before, "live_after": live_after}

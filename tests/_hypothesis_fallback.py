@@ -56,6 +56,11 @@ class strategies:  # noqa: N801 — mirrors ``hypothesis.strategies`` module
         return _Strategy(lambda rng: rng.random() < 0.5)
 
     @staticmethod
+    def sampled_from(elements):
+        elements = list(elements)
+        return _Strategy(lambda rng: rng.choice(elements))
+
+    @staticmethod
     def tuples(*strats):
         return _Strategy(lambda rng: tuple(s.sample(rng) for s in strats))
 

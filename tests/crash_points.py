@@ -22,7 +22,11 @@ states first-class test inputs:
       - the free list holds each superblock at most once, never one
         inside a live span (no double-counted blocks);
       - a fresh span allocated post-recovery lands outside every live
-        span (the free set is really free).
+        span (the free set is really free);
+      - GC-reconstructed span refcounts equal the durable holder count
+        (one root per holder): acquire/release persist nothing, so the
+        count must come back from reachability alone — no span freed
+        while referenced, none retained with zero reconstructed refs.
 
 The trace follows the application durability protocol the paper assumes:
 span contents are flushed+fenced *before* the root is set, and the root
@@ -68,34 +72,51 @@ def dedup_images(snaps: list[np.ndarray]) -> list[np.ndarray]:
     return out
 
 
-def run_host_trace(r: Ralloc, ops: list[tuple[bool, int]]) -> dict:
-    """Replay a large-span alloc/free interleaving on ``r``.
+def run_host_trace(r: Ralloc, ops) -> list[tuple[int, int, int]]:
+    """Replay a large-span alloc/acquire/release interleaving on ``r``.
 
-    ``ops`` is a list of ``(is_free, k)``: free the oldest live span, or
-    allocate a ``k``-superblock span, stamp + flush a sentinel, and root
-    it.  Returns the final ``{root_index: span_sbs}`` live map.
+    ``ops`` entries are ``(kind, k)`` with kind in {"alloc", "acquire",
+    "free"} — legacy ``(is_free, k)`` bool tuples are accepted and mean
+    free/alloc.  One *holder* = one (transient) span reference + one
+    durable root: ``alloc`` places a ``k``-superblock span, stamps +
+    flushes a sentinel, and roots it; ``acquire`` takes an extra
+    reference on the oldest live span (``span_acquire`` — persists
+    nothing) and then roots it at a fresh index, so at every persist
+    boundary the durable roots pointing at a head ARE its reconstructible
+    refcount; ``free`` drops the oldest holder (unroot BEFORE releasing —
+    a shared release is a pure transient decrement).  Returns the final
+    holder list ``[(root_idx, ptr, k)]``.
     """
-    live: dict[int, tuple[int, int]] = {}       # root idx -> (ptr, k)
+    holders: list[tuple[int, int, int]] = []    # (root idx, ptr, k)
     next_root = 0
-    for is_free, k in ops:
-        if is_free and live:
-            i = next(iter(live))
-            ptr, _ = live.pop(i)
-            r.set_root(i, None)                 # unroot BEFORE freeing
+    for kind, k in ops:
+        if isinstance(kind, bool):
+            kind = "free" if kind else "alloc"
+        if kind == "free" and holders:
+            i, ptr, _ = holders.pop(0)
+            r.set_root(i, None)                 # unroot BEFORE releasing
             r.free(ptr)
-        else:
+        elif kind == "acquire" and holders:
+            _, ptr, k0 = holders[0]             # oldest live span
+            r.span_acquire(ptr)                 # transient count only …
+            i = next_root
+            next_root += 1
+            r.set_root(i, ptr)                  # … the root is the durable ref
+            holders.append((i, ptr, k0))
+        elif kind != "free" or not holders:
             ptr = r.malloc(k * SB_SIZE - 256)
             if ptr is None:
                 continue
             i = next_root
             next_root += 1
-            r.write_word(ptr, SENTINEL + i)
+            # sentinel keyed by the head superblock (stable across holders)
+            r.write_word(ptr, SENTINEL + r.heap.sb_of(ptr))
             r.write_word(ptr + 1, k)
             r.flush_range(ptr, 2)
             r.fence()                           # contents durable BEFORE root
             r.set_root(i, ptr)
-            live[i] = (ptr, k)
-    return {i: k for i, (_, k) in live.items()}
+            holders.append((i, ptr, k))
+    return holders
 
 
 def check_recovered_heap(r: Ralloc, n_roots: int) -> dict[int, int]:
@@ -130,16 +151,28 @@ def check_recovered_heap(r: Ralloc, n_roots: int) -> dict[int, int]:
         assert sb not in covered, f"free-listed sb {sb} inside a live span"
 
     # every durable root must name a live, content-intact span
+    root_refs: dict[int, int] = {}
     for i in range(n_roots):
         w = r.heap.get_root(i)
         if w is None:
             continue
         sb = r.heap.sb_of(w)
+        root_refs[sb] = root_refs.get(sb, 0) + 1
         assert sb in spans, f"root {i} points at a lost span (sb {sb})"
-        assert int(r.read_word(w)) == SENTINEL + i, \
+        assert int(r.read_word(w)) == SENTINEL + sb, \
             f"root {i}: span contents lost"
         assert spans[sb] == int(r.read_word(w + 1)), \
             f"root {i}: span length record corrupted"
+
+    # GC-reconstructed refcounts == the durable holder count: acquire and
+    # release persist nothing, so at *every* boundary the count recovery
+    # rebuilds must equal the number of durable roots referencing the
+    # head — no span freed while referenced, none retained with zero refs
+    for sb in spans:
+        assert sb in root_refs, f"zero-ref span at sb {sb} survived recovery"
+        assert r.spans.count(sb) == root_refs[sb], \
+            f"span at sb {sb}: reconstructed refcount " \
+            f"{r.spans.count(sb)} != durable holder count {root_refs[sb]}"
 
     # the free set is genuinely free: a fresh span never lands in a live one
     p = r.malloc(2 * SB_SIZE - 256)

@@ -168,6 +168,137 @@ def test_differential_best_fit_prefers_smallest_run():
     assert host_occupancy(r) == dev_occupancy(dst)
 
 
+_acquire_span = jax.jit(functools.partial(ja.acquire_span, cfg=DEV_CFG))
+
+
+def replay_events(events):
+    """Drive both allocators through an alloc/acquire/release trace.
+
+    Beyond ``replay``: spans are refcounted.  ``acquire`` takes one extra
+    reference on the oldest live span on both sides; ``free`` releases
+    one reference from the oldest span — a *shared* free (refs > 1) must
+    be a pure transient decrement on both sides (occupancy unchanged),
+    only the last release actually frees.  Refcounts are asserted in
+    lock-step (host ``SpanRegistry`` vs device ``span_refs``) at every
+    event.  Returns (host, device state, live [(ptr, off, k, refs)]).
+    """
+    r = Ralloc(None, N_SBS * SB_SIZE)
+    dst = ja.init_state(DEV_CFG, max_roots=64)
+    live = []       # [ptr, off, k, refs]
+    for op, k in events:
+        if op == "acquire" and live:
+            ent = live[0]
+            r.span_acquire(ent[0])
+            dst, ok = _acquire_span(state=dst, off=jnp.int32(ent[1]))
+            assert bool(ok)
+            ent[3] += 1
+        elif op == "free" and live:
+            ent = live[0]
+            before = dev_occupancy(dst)
+            r.free(ent[0])
+            dst = _free_large(state=dst, off=jnp.int32(ent[1]))
+            ent[3] -= 1
+            if ent[3] > 0:
+                # shared free: a transient decrement, nothing moves
+                assert dev_occupancy(dst) == before, \
+                    "shared free disturbed device occupancy"
+            else:
+                live.pop(0)
+        elif op == "alloc" or (op in ("acquire", "free") and not live):
+            ptr = r.malloc(k * SB_SIZE - 256)
+            dst, off = _alloc_large(state=dst,
+                                    nwords=jnp.int32(k * DEV_SB_WORDS - 4))
+            off = int(off)
+            assert (ptr is None) == (off < 0), "serveability drift"
+            if ptr is None:
+                continue
+            assert r.heap.sb_of(ptr) == off // DEV_SB_WORDS, "placement drift"
+            live.append([ptr, off, k, 1])
+        assert host_occupancy(r) == dev_occupancy(dst), "occupancy drift"
+        for ptr, off, _, refs in live:
+            sb = off // DEV_SB_WORDS
+            assert r.spans.count(sb) == int(dst.span_refs[sb]) == refs, \
+                f"refcount drift on span at sb {sb}"
+    return r, dst, live
+
+
+EVENT = st.tuples(st.sampled_from(["alloc", "acquire", "free"]),
+                  st.integers(1, 4))
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.lists(EVENT, min_size=2, max_size=30))
+def test_differential_refcounted_trace_lockstep(events):
+    """Acquire/release/shared-free events stay in lock-step, and recovery
+    of a heap with shared spans reconstructs every refcount exactly: no
+    span freed while referenced, none retained with zero refs."""
+    r, dst, live = replay_events(events)
+    assert_free_runs_agree(r, dst)
+
+    # root every live span once per held reference — the durable image a
+    # crash would leave (each holder's root is its reference); recovery
+    # must rebuild count = root-reachable references to the head
+    roots = np.full((64,), -1, np.int32)
+    i = 0
+    for ptr, off, _, refs in live:
+        for _ in range(refs):
+            r.set_root(i, ptr)
+            roots[i] = off
+            i += 1
+    r.recover()
+    pers = ja.persistent_snapshot(dst)
+    pers["roots"] = jnp.asarray(roots)
+    refs_tab = jnp.full((jr.num_slots(DEV_CFG), 1), -1, jnp.int32)
+    dst, _ = jr.recover(DEV_CFG, pers, refs_tab)
+    assert host_occupancy(r) == dev_occupancy(dst), "post-recovery drift"
+    assert_free_runs_agree(r, dst)
+    for ptr, off, _, refs in live:
+        sb = off // DEV_SB_WORDS
+        assert r.spans.count(sb) == int(dst.span_refs[sb]) == refs, \
+            "reconstructed refcount drift"
+    # no zero-ref span survived: every live device head carries refs >= 1
+    dev_heads = np.nonzero(np.asarray(dst.sb_class) == ja.LARGE_CLS)[0]
+    assert all(int(dst.span_refs[h]) >= 1 for h in dev_heads)
+    assert len(dev_heads) == len(live)
+
+    # the released-to-zero spans really freed: both sides place the next
+    # span identically (free sets agree all the way down)
+    ptr = r.malloc(2 * SB_SIZE - 256)
+    dst, off = _alloc_large(state=dst, nwords=jnp.int32(2 * DEV_SB_WORDS - 4))
+    assert (ptr is None) == (int(off) < 0)
+    if ptr is not None:
+        assert r.heap.sb_of(ptr) == int(off) // DEV_SB_WORDS
+
+
+def test_differential_shared_free_keeps_span_placed():
+    """Deterministic: a twice-acquired span pinned between two live spans
+    survives two releases in place, then frees on the third — and the
+    freed run is found again by both placement searches."""
+    r, dst, live = replay_events([
+        ("alloc", 1), ("alloc", 2), ("alloc", 1),
+        ("free", 0),                       # span@0 released → freed
+        ("acquire", 0), ("acquire", 0),    # span@1 (now oldest): refs 3
+    ])
+    assert [e[3] for e in live] == [3, 1]
+    r2, dst2, live2 = replay_events([
+        ("alloc", 1), ("alloc", 2), ("alloc", 1),
+        ("free", 0), ("acquire", 0), ("acquire", 0),
+        ("free", 0), ("free", 0),          # two shared frees: still placed
+    ])
+    assert [e[3] for e in live2] == [1, 1]
+    assert recovery.free_superblock_runs(r2) == [(0, 1)]
+    r2.free(live2[0][0])                   # last release → the 2-run frees
+    dst2 = _free_large(state=dst2, off=jnp.int32(live2[0][1]))
+    assert recovery.free_superblock_runs(r2) == [(0, 3)]
+    assert_free_runs_agree(r2, dst2)
+    # host raise vs device masked no-op carries over to the *last* free
+    with pytest.raises(ValueError):
+        r2.free(live2[0][0])
+    before = dev_occupancy(dst2)
+    dst2 = _free_large(state=dst2, off=jnp.int32(live2[0][1]))
+    assert dev_occupancy(dst2) == before
+
+
 @pytest.mark.slow
 @settings(max_examples=40, deadline=None)
 @given(st.lists(st.tuples(st.booleans(), st.integers(1, 5)),
@@ -175,4 +306,13 @@ def test_differential_best_fit_prefers_smallest_run():
 def test_differential_trace_lockstep_deep(ops):
     """Longer traces for the non-blocking slow CI job."""
     r, dst, _ = replay(ops)
+    assert_free_runs_agree(r, dst)
+
+
+@pytest.mark.slow
+@settings(max_examples=40, deadline=None)
+@given(st.lists(EVENT, min_size=5, max_size=60))
+def test_differential_refcounted_trace_deep(events):
+    """Deep refcounted-event sweep for the non-blocking slow CI job."""
+    r, dst, _ = replay_events(events)
     assert_free_runs_agree(r, dst)

@@ -194,6 +194,50 @@ def test_large_alloc_reuses_freed_spans():
     assert int((np.asarray(offs) >= 0).sum()) == 4
 
 
+def test_span_refcounts_share_and_reconstruct():
+    """Device span refcounts: ``acquire_span`` increments, a shared
+    ``free_large`` decrements without moving anything, the last release
+    frees, invalid acquires are masked no-ops, and vectorized recovery
+    reconstructs the count from root-reachable references alone."""
+    cfg = ja.ArenaConfig(num_sbs=8, sb_words=64, class_words=(8,),
+                         cache_cap=16, expand_sbs=1)
+    st = ja.init_state(cfg)
+    st, off = ja.alloc_large(st, cfg, jnp.int32(2 * 64))
+    off = int(off)
+    assert int(st.span_refs[0]) == 1
+    st, ok = ja.acquire_span(st, cfg, jnp.int32(off))
+    assert bool(ok) and int(st.span_refs[0]) == 2
+    # masked no-ops: interior-of-head, continuation, free superblock,
+    # negative — the host raises on all of these; the device must no-op,
+    # never silently succeed (refcount drift between the two sides)
+    for bad in (off + 3, off + 64, 5 * 64, -1):
+        st, ok = ja.acquire_span(st, cfg, jnp.int32(bad))
+        assert not bool(ok)
+    assert int(st.span_refs[0]) == 2
+
+    st = ja.free_large(st, cfg, jnp.int32(off))      # shared → decrement
+    assert int(st.span_refs[0]) == 1
+    assert np.asarray(st.sb_class)[:2].tolist() == \
+        [ja.LARGE_CLS, ja.LARGE_CONT]                # still placed
+
+    # crash with two holders: two roots reference the head; the count
+    # must come back as exactly 2 (nothing about it was ever persisted)
+    st2, _ = ja.acquire_span(st, cfg, jnp.int32(off))
+    pers = ja.persistent_snapshot(st2)
+    roots = np.full((64,), -1, np.int32)
+    roots[0] = roots[1] = off
+    pers["roots"] = jnp.asarray(roots)
+    refs = jnp.full((jr.num_slots(cfg), 1), -1, jnp.int32)
+    rec, _ = jr.recover(cfg, pers, refs)
+    assert int(rec.span_refs[0]) == 2
+    rec = ja.free_large(rec, cfg, jnp.int32(off))    # holder 1 leaves
+    assert ja.live_blocks(rec, cfg)["large"] == 1
+    rec = ja.free_large(rec, cfg, jnp.int32(off))    # last holder frees
+    assert ja.live_blocks(rec, cfg)["large"] == 0
+    assert int(rec.span_refs[0]) == 0
+    assert np.asarray(rec.sb_class)[:2].tolist() == [-1, -1]
+
+
 def test_small_free_into_large_span_rejected():
     """The vector analogue of the host rule: ``free`` lanes aimed at a
     superblock not initialized for their class are masked out."""

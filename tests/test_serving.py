@@ -194,6 +194,87 @@ def test_engine_all_lanes_fit_decode_ahead_spans(mesh):
     assert ja.live_blocks(eng.astate, eng.acfg)["large"] == 0
 
 
+def test_engine_span_prefix_sharing(mesh):
+    """Cross-lane prefix span sharing: a published oversized-prompt span
+    is *acquired* by later matching requests (one refcount each — no page
+    copy, no fresh reservation), survives crash recovery with its
+    refcount GC-reconstructed from the lanes' roots, and frees only when
+    the last holder exits."""
+    from repro.core import jax_alloc as ja
+    cfg = dataclasses.replace(get_smoke_config("qwen2_5_32b"), page_size=8)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServingEngine(cfg, mesh, params, lanes=3, max_seq=64,
+                        pages_per_sb=4)
+    rng = np.random.default_rng(3)
+    prompt = [int(t) for t in rng.integers(1, cfg.vocab_size, size=40)]
+
+    a = eng.add_request(prompt, share_prefix=True)   # miss → reserves a span
+    assert a in eng.large_spans
+    off, n_span = eng.large_spans[a]
+    head_sb = off // eng.acfg.sb_words
+    for _ in range(len(prompt)):
+        eng.step()
+    eng.publish_prefix(a)
+    # owner reference + the prefix cache's reference
+    assert int(eng.astate.span_refs[head_sb]) == 2
+    # re-publishing the same prefix must not stack cache references:
+    # the entry holds exactly one
+    eng.publish_prefix(a)
+    assert int(eng.astate.span_refs[head_sb]) == 2
+
+    b = eng.add_request(prompt, share_prefix=True)   # hit → acquire, no copy
+    assert b in eng.shared_spans and b not in eng.large_spans
+    assert int(eng.astate.span_refs[head_sb]) == 3
+    assert ja.live_blocks(eng.astate, eng.acfg)["large"] == 1  # ONE span
+    assert int(np.asarray(eng.dstate["pos"][b])) == len(prompt)
+    full = len(prompt) // cfg.page_size
+    bt_b = np.asarray(eng.dstate["block_table"][b])
+    assert bt_b[:full].tolist() == list(range(off, off + full))
+
+    # both lanes decode past the prefix; the sharer's fresh pages come
+    # from the per-page allocator, never from inside the span
+    for _ in range(10):
+        eng.step()
+    own_b = np.asarray(eng.dstate["block_table"][b])
+    own_b = own_b[own_b >= 0][full:]
+    assert own_b.size and not (set(own_b.tolist())
+                               & set(range(off, off + n_span)))
+
+    # crash: transient refcounts are lost, GC reconstructs them from the
+    # two lanes' roots (the cache's reference is transient and drops)
+    eng.crash_and_recover()
+    assert int(eng.astate.span_refs[head_sb]) == 2
+    assert ja.live_blocks(eng.astate, eng.acfg)["large"] == 1
+    # recounted per-page refs never cover span-backed pages — a stale
+    # entry would pin the offset after the span frees and is reallocated
+    assert not (set(eng.page_refs)
+                & set(range(off, off + n_span)))
+    tokens_b = list(eng.sessions[b].tokens)
+    for _ in range(3):
+        eng.step()
+    assert eng.sessions[b].tokens[:len(tokens_b)] == tokens_b
+
+    # a *sharer* can re-publish after the crash dropped the cache: the
+    # new entry takes one span reference via the span path (never the
+    # per-page path — that would refcount span-interior pages)
+    eng.publish_prefix(b)
+    assert int(eng.astate.span_refs[head_sb]) == 3
+    assert not (set(eng.page_refs) & set(range(off, off + n_span)))
+    eng.drop_prefix_cache()                          # cache ref released
+    assert int(eng.astate.span_refs[head_sb]) == 2
+
+    eng.finish(a)                                    # sharer keeps the span
+    assert int(eng.astate.span_refs[head_sb]) == 1
+    assert ja.live_blocks(eng.astate, eng.acfg)["large"] == 1
+    bt_b = np.asarray(eng.dstate["block_table"][b])
+    assert bt_b[:full].tolist() == list(range(off, off + full))
+    eng.finish(b)                                    # last holder → freed
+    assert ja.live_blocks(eng.astate, eng.acfg)["large"] == 0
+    assert int(eng.astate.span_refs[head_sb]) == 0
+    lb = ja.live_blocks(eng.astate, eng.acfg)
+    assert lb[0] == 0                                # lazy pages freed too
+
+
 def test_prefix_sharing_refcounts(mesh):
     """RadixAttention-style prompt sharing over the paged allocator:
     shared pages are referenced by several block tables and return to the

@@ -1,0 +1,164 @@
+"""Span registry + free-run index unit tests (core.spans).
+
+The registry's contract: refcounts live only in transient memory, free
+of a shared span decrements, the last release frees, and recovery
+rebuilds every count by counting root-reachable references to the span
+head during the existing GC trace — nothing new is persisted.  The
+index's contract: an exact mirror of free-stack membership whose
+best-fit answer (smallest run >= request, leftmost on ties) matches the
+drain-and-sort search it replaced.
+"""
+
+import random
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                      # container without dev deps
+    from _hypothesis_fallback import given, settings, strategies as st
+
+from repro.core import layout, pptr as pp, recovery
+from repro.core.layout import SB_SIZE, contiguous_runs
+from repro.core.ralloc import Ralloc
+from repro.core.spans import FreeRunIndex, SpanRegistry
+
+MB = 1 << 20
+
+
+# ------------------------------------------------------------- SpanRegistry
+def test_acquire_release_free_semantics():
+    r = Ralloc(None, 8 * MB)
+    ptr = r.malloc(2 * SB_SIZE - 256)
+    sb = r.heap.sb_of(ptr)
+    assert r.span_refcount(ptr) == 1
+    assert r.span_acquire(ptr) == 2
+    wm = int(r.mem.read(layout.M_USED_SBS))
+    r.free(ptr)                                   # shared → decrement only
+    assert r.span_refcount(ptr) == 1
+    assert int(r.mem.read(layout.M_USED_SBS)) == wm
+    assert recovery.free_superblock_runs(r) == []   # span still placed
+    r.span_release(ptr)                           # last holder → real free
+    assert recovery.free_superblock_runs(r) == [(sb, 2)]
+    with pytest.raises(ValueError):
+        r.free(ptr)                               # double free still raises
+
+
+def test_acquire_rejects_dead_and_interior_pointers():
+    r = Ralloc(None, 8 * MB)
+    ptr = r.malloc(2 * SB_SIZE - 256)
+    with pytest.raises(ValueError):
+        r.span_acquire(ptr + layout.SB_WORDS)     # continuation, not head
+    small = r.malloc(64)
+    with pytest.raises(ValueError):
+        r.span_acquire(small)                     # not a span at all
+    r.free(ptr)
+    with pytest.raises(ValueError):
+        r.span_acquire(ptr)                       # dead span
+
+
+def test_shared_span_superblocks_never_rehanded():
+    """While any holder remains, placement must treat the span's
+    superblocks as occupied — a fresh span may never land inside it."""
+    r = Ralloc(None, 8 * MB)
+    ptr = r.malloc(3 * SB_SIZE - 256)
+    sb = r.heap.sb_of(ptr)
+    r.span_acquire(ptr)
+    r.free(ptr)                                   # refs 2 → 1
+    for _ in range(4):
+        q = r.malloc(2 * SB_SIZE - 256)
+        qsb = r.heap.sb_of(q)
+        assert not (sb <= qsb < sb + 3) and not (sb <= qsb + 1 < sb + 3)
+        r.free(q)
+
+
+def test_recovery_counts_block_references_and_roots():
+    """Reconstruction counts *references*, wherever the trace finds them:
+    a pptr stored inside a reachable block counts exactly like a root."""
+    r = Ralloc(None, 8 * MB, sim_nvm=True)
+    span = r.malloc(2 * SB_SIZE - 256)
+    holder = r.malloc(64)                         # small block holding a pptr
+    r.write_word(holder, pp.encode(holder, span))
+    r.flush_range(holder, 1)
+    r.fence()
+    r.set_root(0, holder)                         # conservative-traced holder
+    r.set_root(1, span)                           # plus one direct root
+    r.mem.drain(); r.fence()
+    img = r.mem.nvm.copy()
+
+    r2 = Ralloc(None, 8 * MB, sim_nvm=True, seed=9, backing=img)
+    stats = r2.recover()
+    sb = r2.heap.sb_of(span)
+    assert r2.spans.count(sb) == 2                # root + in-block reference
+    assert stats["shared_spans"] == 1
+    def span_free(rr):
+        return any(s <= sb < s + ln
+                   for s, ln in recovery.free_superblock_runs(rr))
+
+    r2.free(span)                                 # one holder down…
+    assert not span_free(r2)                      # …span still placed
+    r2.free(span)                                 # …last holder frees
+    assert span_free(r2)
+
+
+def test_registry_defaults_preserve_unregistered_spans():
+    reg = SpanRegistry()
+    assert reg.count(7) == 1                      # unknown span = one owner
+    assert reg.release(7) == 0                    # a single free frees it
+    reg.reconstruct({3: 2, 5: 0})
+    assert reg.count(3) == 2
+    assert reg.count(5) == 1                      # floor: live ⇒ >= 1 ref
+
+
+# ------------------------------------------------------------- FreeRunIndex
+def _reference_best_fit(members, nsb):
+    fits = [(ln, s) for s, ln in contiguous_runs(sorted(members))
+            if ln >= nsb]
+    return min(fits)[1] if fits else None
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 2), st.integers(0, 63)),
+                min_size=1, max_size=120))
+def test_index_mirrors_membership_and_best_fit(ops):
+    """Random add/discard/claim against a naive membership model: runs
+    and best-fit answers must match the drain-and-sort reference."""
+    idx, members = FreeRunIndex(), set()
+    for kind, sb in ops:
+        if kind == 0:
+            idx.add(sb)
+            members.add(sb)
+        elif kind == 1:
+            idx.discard(sb)
+            members.discard(sb)
+        else:                                     # claim a best-fit run
+            nsb = sb % 4 + 1
+            want = _reference_best_fit(members, nsb)
+            got = idx.best_fit(nsb)
+            assert got == want
+            if got is not None:
+                idx.claim(got, nsb)
+                members -= set(range(got, got + nsb))
+        assert idx.runs() == contiguous_runs(sorted(members))
+        assert len(idx) == len(members)
+        assert all((sb in idx) == (sb in members) for sb in range(64))
+
+
+def test_host_index_stays_in_sync_with_free_list():
+    """White-box: after arbitrary span + small churn the index equals the
+    Treiber free-list membership exactly (the lock-step precondition)."""
+    r = Ralloc(None, 16 * MB)
+    rng = random.Random(4)
+    held = []
+    for i in range(120):
+        if held and rng.random() < 0.45:
+            r.free(held.pop(rng.randrange(len(held))))
+        else:
+            k = rng.randint(1, 3)
+            p = r.malloc(k * SB_SIZE - 256)
+            assert p is not None
+            held.append(p)
+        if rng.random() < 0.3:
+            s = r.malloc(4096)
+            r.free(s)
+        assert r._run_index.runs() == recovery.free_superblock_runs(r)
