@@ -6,11 +6,20 @@ lrmalloc = transient ancestor, makalu_lite, pmdk_lite) with modeled
 Optane flush/fence latency.  The roofline section summarizes the
 dry-run artifacts if present (run ``python -m repro.launch.dryrun`` to
 generate them).
+
+One entry point serves both the full runs and CI's smoke pass — the
+workload list lives only here:
+
+    python -m benchmarks.run                         # everything, full
+    python -m benchmarks.run --workloads fragbench,sharedprompt --seed 3
+    python -m benchmarks.run --profile smoke         # == benchmarks.smoke
 """
 
 from __future__ import annotations
 
+import argparse
 import sys
+import time
 
 from . import apps, recovery_bench, workloads
 from .workloads import KINDS, fresh
@@ -21,7 +30,7 @@ def _row(name: str, ops_per_sec: float) -> None:
     print(f"{name},{us:.3f},{ops_per_sec:.0f}", flush=True)
 
 
-def bench_threadtest(threads=(1, 2)):
+def bench_threadtest(threads=(1, 2), seed=0):
     for kind in KINDS:
         for t in threads:
             a = fresh(kind)
@@ -30,56 +39,69 @@ def bench_threadtest(threads=(1, 2)):
             a.close()
 
 
-def bench_shbench(threads=(1, 2)):
+def bench_shbench(threads=(1, 2), seed=0):
     for kind in KINDS:
         for t in threads:
             a = fresh(kind)
-            _row(f"shbench[{kind},t={t}]", workloads.shbench(a, n_threads=t))
+            _row(f"shbench[{kind},t={t}]",
+                 workloads.shbench(a, n_threads=t, seed=seed))
             a.close()
 
 
-def bench_larson(threads=(1, 2)):
+def bench_larson(threads=(1, 2), seed=0):
     for kind in KINDS:
         for t in threads:
             a = fresh(kind)
-            _row(f"larson[{kind},t={t}]", workloads.larson(a, n_threads=t))
+            _row(f"larson[{kind},t={t}]",
+                 workloads.larson(a, n_threads=t, seed=seed))
             a.close()
 
 
-def bench_largebench(threads=(1, 2)):
+def bench_largebench(threads=(1, 2), seed=0):
     for kind in KINDS:
         for t in threads:
             a = fresh(kind)
             _row(f"largebench[{kind},t={t}]",
-                 workloads.largebench(a, n_threads=t))
+                 workloads.largebench(a, n_threads=t, seed=seed))
             a.close()
 
 
-def bench_fragbench():
+def bench_fragbench(seed=0):
     """Steady-state span churn: the extra ``fragbench_watermark`` rows are
     ``name,watermark_growth_sbs,reuse_rate`` (not us/ops)."""
     for kind in KINDS:
         a = fresh(kind)
-        ops, growth, reuse = workloads.fragbench(a)
+        ops, growth, reuse = workloads.fragbench(a, seed=seed)
         _row(f"fragbench[{kind},t=1]", ops)
         print(f"fragbench_watermark[{kind}],{growth:.1f},{reuse:.2f}",
               flush=True)
         a.close()
 
 
-def bench_sharedprompt():
+def bench_sharedprompt(seed=0):
     """Shared-prompt span churn: the ``sharedprompt_footprint`` rows are
-    ``name,peak_watermark_sbs,spans_saved_per_hit`` (not us/ops)."""
+    ``name,peak_watermark_sbs,spans_saved_per_hit`` (not us/ops), and the
+    ``sharedprompt_tailtrim`` row compares ralloc's peak footprint with
+    1-sb *prefix* leases (range-lease tail trim) against whole-span
+    leases — ``name,peak_sbs_prefix_leases,peak_sbs_whole_span``."""
     for kind in KINDS:
         a = fresh(kind)
-        ops, saved, peak = workloads.sharedprompt(a)
+        ops, saved, peak = workloads.sharedprompt(a, seed=seed)
         _row(f"sharedprompt[{kind}]", ops)
         print(f"sharedprompt_footprint[{kind}],{peak:.0f},{saved:.2f}",
               flush=True)
         a.close()
+    a = fresh("ralloc")
+    _, _, peak_trim = workloads.sharedprompt(a, prefix_k=1, seed=seed)
+    a.close()
+    a = fresh("ralloc")
+    _, _, peak_whole = workloads.sharedprompt(a, prefix_k=None, seed=seed)
+    a.close()
+    print(f"sharedprompt_tailtrim[ralloc],{peak_trim:.0f},{peak_whole:.0f}",
+          flush=True)
 
 
-def bench_prodcon(pairs=(1,)):
+def bench_prodcon(pairs=(1,), seed=0):
     for kind in KINDS:
         for p in pairs:
             a = fresh(kind)
@@ -87,14 +109,14 @@ def bench_prodcon(pairs=(1,)):
             a.close()
 
 
-def bench_vacation():
+def bench_vacation(seed=0):
     for kind in ("ralloc", "makalu_lite", "pmdk_lite"):   # persistent only
         a = fresh(kind)
         _row(f"vacation[{kind}]", apps.vacation(a))
         a.close()
 
 
-def bench_ycsb():
+def bench_ycsb(seed=0):
     for kind in ("ralloc", "makalu_lite", "pmdk_lite"):
         a = fresh(kind)
         _row(f"memcached_ycsb_a[{kind}]", apps.ycsb_a(a))
@@ -110,14 +132,14 @@ def bench_ycsb():
     a.close()
 
 
-def bench_recovery():
+def bench_recovery(seed=0):
     for row in recovery_bench.sweep():
         name = f"recovery[{row['structure']},n={row['blocks']}]"
         print(f"{name},{row['us_per_block']:.3f},"
               f"{row['blocks'] / row['seconds']:.0f}", flush=True)
 
 
-def bench_roofline():
+def bench_roofline(seed=0):
     try:
         from .roofline import load, table
         rows = load()
@@ -130,20 +152,123 @@ def bench_roofline():
         print(f"# roofline unavailable: {e}")
 
 
-def main() -> None:
+# The single source of truth for what a "workload" is.  Full runs and the
+# CI smoke pass select from the same table, so a workload added here is
+# automatically covered by both (no more duplicated lists drifting apart).
+#   full:  callable(seed) printing CSV rows
+#   smoke: [(kind, callable(alloc, seed))] — one tiny fail-fast round per
+#          allocator worth exercising (None = full-only section)
+BENCHES: dict[str, dict] = {
+    "threadtest": {
+        "full": bench_threadtest,
+        "smoke": [("ralloc", lambda a, s: workloads.threadtest(
+            a, n_threads=1, iters=2, objs=50))],
+    },
+    "shbench": {
+        "full": bench_shbench,
+        "smoke": [("ralloc", lambda a, s: workloads.shbench(
+            a, n_threads=1, iters=120, seed=s))],
+    },
+    "larson": {
+        "full": bench_larson,
+        "smoke": [("ralloc", lambda a, s: workloads.larson(
+            a, n_threads=1, rounds=1, objs=40, iters=120, seed=s))],
+    },
+    "largebench": {
+        "full": bench_largebench,
+        "smoke": [("ralloc", lambda a, s: workloads.largebench(
+            a, n_threads=1, iters=10, seed=s))],
+    },
+    "fragbench": {
+        "full": bench_fragbench,
+        "smoke": [("ralloc", lambda a, s: workloads.fragbench(
+            a, iters=8, pool=4, seed=s)[0])],
+    },
+    "sharedprompt": {
+        "full": bench_sharedprompt,
+        # ralloc leases; one non-refcounting baseline keeps the
+        # fresh-span fallback exercised; the prefix_k run keeps the
+        # range-lease tail-trim path on the smoke hot path too
+        "smoke": [("ralloc", lambda a, s: workloads.sharedprompt(
+            a, iters=4, fanout=3, seed=s)),
+            ("ralloc", lambda a, s: workloads.sharedprompt(
+                a, iters=4, fanout=3, prefix_k=1, seed=s)),
+            ("makalu_lite", lambda a, s: workloads.sharedprompt(
+                a, iters=4, fanout=3, seed=s))],
+    },
+    "prodcon": {
+        "full": bench_prodcon,
+        "smoke": [("ralloc", lambda a, s: workloads.prodcon(
+            a, n_pairs=1, items=200))],
+    },
+    "vacation": {"full": bench_vacation, "smoke": None},
+    "ycsb": {"full": bench_ycsb, "smoke": None},
+    "recovery": {"full": bench_recovery, "smoke": None},
+    "roofline": {"full": bench_roofline, "smoke": None},
+}
+
+
+def run_smoke(names: list[str], seed: int) -> int:
+    """One tiny round of every selected workload, fail-fast (CI tier-1)."""
+    failed = 0
+    for name in names:
+        for kind, fn in (BENCHES[name]["smoke"] or []):
+            a = fresh(kind, mb=64)
+            t0 = time.perf_counter()
+            try:
+                fn(a, seed)
+            except Exception as e:
+                failed += 1
+                print(f"smoke[{name},{kind}] FAILED: {e!r}", flush=True)
+            else:
+                print(f"smoke[{name},{kind}] ok "
+                      f"({time.perf_counter() - t0:.2f}s)", flush=True)
+            finally:
+                a.close()
+    if "sharedprompt" in names:
+        # sanity: ralloc's sharedprompt really shares (lease plumbing alive)
+        a = fresh("ralloc", mb=64)
+        try:
+            _, saved, _ = workloads.sharedprompt(a, iters=3, fanout=3,
+                                                 seed=seed)
+            if saved < 1.0:
+                failed += 1
+                print(f"smoke[sharedprompt,ralloc] FAILED: "
+                      f"spans_saved_per_hit {saved} < 1.0 "
+                      f"(span_acquire path dead)", flush=True)
+        finally:
+            a.close()
+    return 1 if failed else 0
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="benchmarks.run", description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--workloads", default="all",
+                    help="comma-separated subset of: "
+                         + ",".join(BENCHES) + " (default: all)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="workload RNG seed (default 0)")
+    ap.add_argument("--profile", choices=("full", "smoke"), default="full",
+                    help="'smoke' = one tiny fail-fast round per workload "
+                         "(what CI's tier-1 job runs)")
+    args = ap.parse_args(argv)
+    if args.workloads in ("all", ""):
+        names = list(BENCHES)
+    else:
+        names = [n.strip() for n in args.workloads.split(",") if n.strip()]
+        unknown = [n for n in names if n not in BENCHES]
+        if unknown:
+            ap.error(f"unknown workload(s): {', '.join(unknown)} "
+                     f"(known: {', '.join(BENCHES)})")
+    if args.profile == "smoke":
+        return run_smoke(names, args.seed)
     print("name,us_per_call,derived")
-    bench_threadtest()
-    bench_shbench()
-    bench_larson()
-    bench_largebench()
-    bench_fragbench()
-    bench_sharedprompt()
-    bench_prodcon()
-    bench_vacation()
-    bench_ycsb()
-    bench_recovery()
-    bench_roofline()
+    for name in names:
+        BENCHES[name]["full"](seed=args.seed)
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

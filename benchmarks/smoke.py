@@ -4,67 +4,21 @@ CI's tier-1 job runs this so a workload regression (crash, assertion,
 hang) fails the PR immediately instead of surfacing only in the
 non-blocking slow job.  Parameters are minimized for wall-clock — this
 measures nothing; it only proves every workload still *runs* end to end
-on the real allocators (ralloc everywhere, plus one non-refcounting
-baseline on ``sharedprompt`` to keep the fresh-span fallback exercised).
+on the real allocators.
+
+Thin shim over the shared entry point (``benchmarks.run`` owns the
+workload list for full and smoke runs alike):
 
     PYTHONPATH=src python -m benchmarks.smoke
+    # equivalent: python -m benchmarks.run --profile smoke
 """
 
 from __future__ import annotations
 
 import sys
-import time
 
-from . import workloads
-from .workloads import fresh
-
-
-def main() -> int:
-    runs = [
-        ("threadtest", "ralloc",
-         lambda a: workloads.threadtest(a, n_threads=1, iters=2, objs=50)),
-        ("shbench", "ralloc",
-         lambda a: workloads.shbench(a, n_threads=1, iters=120)),
-        ("larson", "ralloc",
-         lambda a: workloads.larson(a, n_threads=1, rounds=1, objs=40,
-                                    iters=120)),
-        ("largebench", "ralloc",
-         lambda a: workloads.largebench(a, n_threads=1, iters=10)),
-        ("fragbench", "ralloc",
-         lambda a: workloads.fragbench(a, iters=8, pool=4)[0]),
-        ("sharedprompt", "ralloc",
-         lambda a: workloads.sharedprompt(a, iters=4, fanout=3)),
-        ("sharedprompt", "makalu_lite",
-         lambda a: workloads.sharedprompt(a, iters=4, fanout=3)),
-        ("prodcon", "ralloc",
-         lambda a: workloads.prodcon(a, n_pairs=1, items=200)),
-    ]
-    failed = 0
-    for name, kind, fn in runs:
-        a = fresh(kind, mb=64)
-        t0 = time.perf_counter()
-        try:
-            fn(a)
-        except Exception as e:
-            failed += 1
-            print(f"smoke[{name},{kind}] FAILED: {e!r}", flush=True)
-        else:
-            print(f"smoke[{name},{kind}] ok "
-                  f"({time.perf_counter() - t0:.2f}s)", flush=True)
-        finally:
-            a.close()
-    # sanity: ralloc's sharedprompt really shares (refcount plumbing alive)
-    a = fresh("ralloc", mb=64)
-    try:
-        _, saved, _ = workloads.sharedprompt(a, iters=3, fanout=3)
-        if saved < 1.0:
-            failed += 1
-            print(f"smoke[sharedprompt,ralloc] FAILED: spans_saved_per_hit "
-                  f"{saved} < 1.0 (span_acquire path dead)", flush=True)
-    finally:
-        a.close()
-    return 1 if failed else 0
+from .run import main
 
 
 if __name__ == "__main__":
-    sys.exit(main())
+    sys.exit(main(["--profile", "smoke"] + sys.argv[1:]))

@@ -57,13 +57,13 @@ def threadtest(alloc, n_threads=2, iters=20, objs=1000, size=64):
     return n_threads * iters * objs * 2 / dt        # ops/sec
 
 
-def shbench(alloc, n_threads=2, iters=3000):
+def shbench(alloc, n_threads=2, iters=3000, seed=0):
     """MicroQuill shbench: mixed sizes 64–400 B, small-biased."""
     sizes = [64, 80, 96, 112, 128, 160, 224, 288, 400]
     weights = [9, 8, 7, 6, 5, 4, 3, 2, 1]
 
     def body(t):
-        rng = random.Random(t)
+        rng = random.Random(seed * 997 + t)
         held = []
         for _ in range(iters):
             held.append(alloc.malloc(rng.choices(sizes, weights)[0]))
@@ -77,13 +77,13 @@ def shbench(alloc, n_threads=2, iters=3000):
     return n_threads * iters * 2 / dt
 
 
-def larson(alloc, n_threads=2, rounds=2, objs=400, iters=2000):
+def larson(alloc, n_threads=2, rounds=2, objs=400, iters=2000, seed=0):
     """Larson bleeding: objects allocated by one round are freed by the
     next 'generation' of the same lane (cross-thread lifetime)."""
     leftovers = [[] for _ in range(n_threads)]
 
     def body(t):
-        rng = random.Random(t)
+        rng = random.Random(seed * 997 + t)
         held = leftovers[t]
         for _ in range(iters):
             i = rng.randrange(max(len(held), 1))
@@ -103,12 +103,13 @@ def larson(alloc, n_threads=2, rounds=2, objs=400, iters=2000):
     return n_threads * rounds * iters / total
 
 
-def largebench(alloc, n_threads=2, iters=150, small=256, large=200_000):
+def largebench(alloc, n_threads=2, iters=150, small=256, large=200_000,
+               seed=0):
     """Large-object path (paper §4.4 ``LARGE_CLASS``): interleave small
     allocations with multi-superblock objects so superblock (re)init,
     span expansion and span free all sit on the hot path."""
     def body(t):
-        rng = random.Random(t)
+        rng = random.Random(seed * 997 + t)
         bigs, smalls = [], []
         for _ in range(iters):
             if bigs and rng.random() < 0.4:
@@ -174,46 +175,88 @@ def fragbench(alloc, iters=80, sizes=(1, 2, 3, 4), pool=10, seed=0):
     return iters * 2 / dt, growth_sbs, reused / iters
 
 
-def sharedprompt(alloc, iters=30, span_k=3, fanout=4):
-    """Serving-style shared-prompt churn (span refcounts, core.spans).
+def sharedprompt(alloc, iters=30, span_k=3, fanout=4, prefix_k=None,
+                 hold_rounds=2, seed=0):
+    """Serving-style shared-prompt churn (span range leases, core.spans).
 
     Each round one "publisher" reserves a ``span_k``-superblock prompt
     span and ``fanout - 1`` followers request the same prompt.  An
-    allocator with span refcounts (ralloc's ``span_acquire``) serves a
-    follower by acquiring the published span — no new span, no copy;
-    allocators without refcounts reserve a fresh span per follower.  All
-    holders then release (shared releases are transient decrements; the
-    last one frees the span).
+    allocator with span leases (ralloc's ``span_acquire``) serves a
+    follower by leasing the published span — no new span, no copy;
+    allocators without leases reserve a fresh span per follower.  The
+    publisher then finishes *short* (its decode-ahead tail was never
+    read) and releases; followers keep holding for ``hold_rounds`` more
+    rounds before releasing their leases.
+
+    ``prefix_k`` switches followers from whole-span leases to
+    ``prefix_k``-superblock *prefix* leases (requires ``span_release``):
+    the publisher's exit then frees the unleased decode-ahead tail
+    immediately, so held rounds pin only the shared prefix and every
+    follower's decode pages (modeled as one-superblock spans, the pages
+    it writes past the shared prefix) slot into the freed tails instead
+    of extending the watermark — the tail-trim win the range-lease
+    refactor buys.
 
     Returns ``(ops_per_sec, spans_saved_per_hit, peak_watermark_sbs)``:
     the fraction of follower requests served without placing a new span,
-    and the high-water address-space footprint in superblocks — the two
-    quantities a shared-prefix hit saves.
+    and the high-water address-space footprint in superblocks.
     """
+    import collections
     from repro.core.layout import SB_SIZE, SB_WORDS
     can_share = hasattr(alloc, "span_acquire")
+    can_range = prefix_k is not None and hasattr(alloc, "span_release")
     size = span_k * SB_SIZE - 512
+    page_size = SB_SIZE - 512           # a follower's own decode pages
     peak = saved = hits = 0
+    pending = collections.deque()       # rounds whose followers still hold
+
+    def release_round(round_):
+        followers, decodes = round_
+        for p, n in followers:
+            if n is None:
+                alloc.free(p)           # whole-span lease / own span
+            else:
+                alloc.span_release(p, n)
+        for p in decodes:
+            alloc.free(p)
+
     t0 = time.perf_counter()
     for _ in range(iters):
         head = alloc.malloc(size)
         assert head is not None
-        holders = [head]
+        followers, decodes = [], []
         for _ in range(fanout - 1):
             hits += 1
-            if can_share:
+            if can_share and can_range:
+                n = max(1, min(prefix_k, span_k))
+                alloc.span_acquire(head, n)
+                followers.append((head, n))
+                saved += 1
+            elif can_share:
                 alloc.span_acquire(head)
-                holders.append(head)
+                followers.append((head, None))
                 saved += 1
             else:
                 p = alloc.malloc(size)
                 assert p is not None
-                holders.append(p)
+                followers.append((p, None))
+        # the publisher finishes short: nobody leases its decode-ahead
+        # tail, so with range leases the tail frees right here …
+        alloc.free(head)
+        # … and the followers' decode-past-the-prefix pages reuse it
+        # (without range leases they extend the watermark instead)
+        for _ in range(fanout - 1):
+            p = alloc.malloc(page_size)
+            assert p is not None
+            decodes.append(p)
+        pending.append((followers, decodes))
         peak = max(peak, alloc.watermark_words() // SB_WORDS)
-        for p in holders:
-            alloc.free(p)
+        if len(pending) > hold_rounds:
+            release_round(pending.popleft())
+    while pending:
+        release_round(pending.popleft())
     dt = time.perf_counter() - t0
-    return iters * fanout / dt, saved / hits, peak
+    return iters * fanout / dt, saved / max(hits, 1), peak
 
 
 def prodcon(alloc, n_pairs=1, items=4000, size=64):

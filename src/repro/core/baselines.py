@@ -303,10 +303,22 @@ class _RallocAdapter(AllocAPI):
     def free(self, ptr: int) -> None:
         self.r.free(ptr)
 
-    def span_acquire(self, ptr: int) -> int:
-        """Span refcounts (core.spans) — only ralloc/lrmalloc offer this;
-        workloads feature-detect it and fall back to fresh spans."""
-        return self.r.span_acquire(ptr)
+    def span_acquire(self, ptr: int, n_sbs: int | None = None) -> int:
+        """Span range leases (core.spans) — only ralloc/lrmalloc offer
+        this; workloads feature-detect it and fall back to fresh spans.
+        ``n_sbs`` leases just a prefix of the span (partial sharing)."""
+        return self.r.span_acquire(ptr, n_sbs)
+
+    def span_release(self, ptr: int, n_sbs: int | None = None) -> None:
+        """Release a (prefix) lease; ranges nobody leases free."""
+        self.r.span_release(ptr, n_sbs)
+
+    def span_trim(self, ptr: int, n_keep: int,
+                  n_held: int | None = None) -> int:
+        """Shrink the caller's lease to ``n_keep`` superblocks; the
+        unleased tail returns to the free set.  Re-trims must pass the
+        currently-held length via ``n_held`` (see ``Ralloc.span_trim``)."""
+        return self.r.span_trim(ptr, n_keep, n_held)
 
     def watermark_words(self) -> int:
         return int(self.r.mem.read(layout.M_USED_SBS)) * layout.SB_WORDS

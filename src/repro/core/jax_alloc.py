@@ -33,9 +33,13 @@ superblocks straight off the watermark — the head superblock is tagged
 ``LARGE_CLS`` in ``sb_class`` with the object's total word count in
 ``sb_block_words`` (both persistent, mirroring the host's
 ``D_SIZE_CLASS``/``D_BLOCK_SIZE``), and every continuation superblock is
-tagged ``LARGE_CONT``.  ``free_large`` resets the whole span's class
-records before returning the superblocks to the free stack, so recovery
-can never observe an orphaned continuation marker.
+tagged ``LARGE_CONT``.  Spans carry per-superblock *range leases*
+(``span_refs``, transient): ``free_large``/``trim_large`` decrement a
+range and reset the class records of exactly the superblocks nobody
+leases any more — the whole remaining span at the head's last release,
+or a zero-count tail suffix (with the head's size record shrunk to
+match) — before returning them to the free stack, so recovery can never
+observe an orphaned continuation marker.
 """
 
 from __future__ import annotations
@@ -99,10 +103,13 @@ class AllocState(NamedTuple):
     cache_top: jax.Array       # T i32[num_classes]
     alloc_count: jax.Array     # T i32[]  (statistics)
     free_count: jax.Array      # T i32[]
-    span_refs: jax.Array       # T i32[num_sbs] refcount per LARGE_CLS head
-    #                            (transient — GC-reconstructed from the
-    #                            number of root-reachable references to
-    #                            the head; mirror of core.spans registry)
+    span_refs: jax.Array       # T i32[num_sbs] per-superblock lease count
+    #                            over every LARGE_CLS span (transient —
+    #                            GC-reconstructed from the number of
+    #                            root-reachable references to the head,
+    #                            broadcast over the span's persisted
+    #                            extent; mirror of core.spans
+    #                            RangeLeaseTable)
 
 
 def init_state(cfg: ArenaConfig, max_roots: int = 64) -> AllocState:
@@ -403,7 +410,8 @@ def alloc_large(state: AllocState, cfg: ArenaConfig, nwords):
     state = state._replace(
         sb_class=sb_class,
         sb_block_words=sb_block_words,
-        span_refs=jnp.where(head, 1, state.span_refs),
+        # one full-extent owner lease: count 1 on every member superblock
+        span_refs=jnp.where(span, 1, state.span_refs),
         free_stack=new_stack,
         free_top=keep.sum(dtype=jnp.int32),
         used_sbs=jnp.where(ok & ~has_run, state.used_sbs + nsb,
@@ -412,49 +420,130 @@ def alloc_large(state: AllocState, cfg: ArenaConfig, nwords):
     return state, jnp.where(ok, first * cfg.sb_words, -1)
 
 
-def acquire_span(state: AllocState, cfg: ArenaConfig, off):
-    """Take one extra (transient) reference on the live span headed at
-    ``off``.  Returns ``(state, ok)``; an invalid / dead / non-head
-    ``off`` is a masked no-op (``ok`` false) — the device analogue of the
-    host's raising ``span_acquire``, with the same raise-vs-masked-no-op
-    asymmetry the feature matrix documents for ``free_large``.  Nothing
-    persists: after a crash the count is rebuilt from the number of
-    root-reachable references to the head (``jax_recovery``).
+def acquire_span(state: AllocState, cfg: ArenaConfig, off, n_sbs=-1):
+    """Lease the ``n_sbs``-superblock *prefix* of the live span headed at
+    ``off`` (``n_sbs < 0`` = the whole remaining extent).
+
+    Vectorized mirror of ``Ralloc.span_acquire``: one masked add over the
+    per-superblock lease vector.  Returns ``(state, ok)``; an invalid /
+    dead / non-head ``off`` (or an empty range) is a masked no-op (``ok``
+    false) — the device analogue of the host's raising ``span_acquire``,
+    with the same raise-vs-masked-no-op asymmetry the feature matrix
+    documents for ``free_large``.  Nothing persists: after a crash each
+    root-reachable reference to the head is rebuilt as one full-extent
+    lease (``jax_recovery``).
     """
     off = jnp.asarray(off, jnp.int32)
+    n_sbs = jnp.asarray(n_sbs, jnp.int32)
     sb = jnp.clip(off // cfg.sb_words, 0, cfg.num_sbs - 1)
     valid = (off >= 0) & (off % cfg.sb_words == 0) & \
         (state.sb_class[sb] == LARGE_CLS)
+    ext = span_sbs(cfg, state.sb_block_words[sb])
+    n = jnp.where(n_sbs < 0, ext, jnp.minimum(n_sbs, ext))
+    valid = valid & (n >= 1)
+    ids = jnp.arange(cfg.num_sbs, dtype=jnp.int32)
+    rng = valid & (ids >= sb) & (ids < sb + n)
     return state._replace(
-        span_refs=state.span_refs.at[sb].add(valid.astype(jnp.int32))), valid
+        span_refs=state.span_refs + rng.astype(jnp.int32)), valid
 
 
-def free_large(state: AllocState, cfg: ArenaConfig, off):
-    """Release one reference on a large span; the *last* release frees it.
+def _lease_release(state: AllocState, cfg: ArenaConfig, sb, a, b, valid):
+    """Drop one lease on member superblocks ``[sb+a, sb+b)`` of the span
+    headed at ``sb``; free whatever the decrement leaves unleased.
 
-    While ``span_refs[head] > 1`` (shared span, see ``acquire_span``) the
-    release is a pure transient decrement — class records stay put, the
-    free stack is untouched.  The last release resets every member's
-    class record (head *and* continuations — recovery must never see
-    orphaned ``LARGE_CONT`` markers), then pushes the superblocks onto
-    the free stack for reuse by any class.  A non-head / already-freed
-    ``off`` is rejected (no-op), which makes double-free safe.
+    The vectorized core both ``free_large`` and ``trim_large`` share:
+
+      * a range that is not fully leased (any member count already zero)
+        invalidates the whole op — the masked-no-op mirror of the host's
+        ``LeaseUnderflow`` raise;
+      * head count reaching zero frees the entire remaining span (every
+        genuine lease is a prefix and includes the head, so interior
+        counts left over from conservative reconstruction cannot keep it
+        alive);
+      * otherwise the zero-count tail *suffix* frees: class records
+        clear, the superblocks join the free stack, and the head's
+        ``sb_block_words`` shrinks to the kept prefix — the persistent
+        mirror of the host's ``_trim_tail``, so host and device stay
+        placement- and extent-equivalent.  Interior zero ranges (only
+        reachable via post-crash phantoms) stay placed until the head's
+        last release, exactly like the host.
+    """
+    ids = jnp.arange(cfg.num_sbs, dtype=jnp.int32)
+    ext = span_sbs(cfg, state.sb_block_words[sb])
+    member = (ids >= sb) & (ids < sb + ext)
+    rng = member & (ids >= sb + a) & (ids < sb + b)
+    valid = valid & (b > a)
+    valid = valid & ~(rng & (state.span_refs <= 0)).any()
+    dec = valid & rng
+    refs = state.span_refs - dec.astype(jnp.int32)
+    head_zero = valid & (refs[sb] <= 0)
+    last_live = jnp.max(jnp.where(member & (refs > 0), ids, -1))
+    new_ext = jnp.maximum(last_live + 1 - sb, 0)
+    freed = valid & member & (head_zero | (ids >= sb + new_ext))
+    fs, ft = _push_many(state.free_stack, state.free_top, ids, freed)
+    trimmed = valid & ~head_zero & (new_ext < ext)
+    sbw = jnp.where(freed, 0, state.sb_block_words)
+    sbw = sbw.at[sb].set(jnp.where(
+        trimmed, jnp.minimum(sbw[sb], new_ext * cfg.sb_words), sbw[sb]))
+    return state._replace(
+        sb_class=jnp.where(freed, FREE_CLS, state.sb_class),
+        sb_block_words=sbw,
+        span_refs=jnp.where(freed, 0, refs),
+        free_stack=fs, free_top=ft), valid
+
+
+def free_large(state: AllocState, cfg: ArenaConfig, off, n_sbs=-1):
+    """Release one lease on the ``n_sbs``-superblock prefix of a large
+    span (``n_sbs < 0`` = the whole remaining extent, the plain-free /
+    owner case); ranges nobody leases any more free.
+
+    While other leases cover a range the release is a pure transient
+    decrement — class records stay put, the free stack is untouched.  The
+    head range's last release resets every remaining member's class
+    record (head *and* continuations — recovery must never see orphaned
+    ``LARGE_CONT`` markers) and pushes the superblocks onto the free
+    stack; a zero-count tail suffix frees the same way while the shared
+    prefix stays placed (``sb_block_words`` shrinks to match the host's
+    durable trim).  A non-head / already-freed ``off`` — or a release of
+    a range not fully leased, including one past the *last* lease — is
+    rejected (masked no-op) where the host raises, which keeps
+    double-free and over-release safe.
     """
     off = jnp.asarray(off, jnp.int32)
+    n_sbs = jnp.asarray(n_sbs, jnp.int32)
     sb = jnp.clip(off // cfg.sb_words, 0, cfg.num_sbs - 1)
     valid = (off >= 0) & (state.sb_class[sb] == LARGE_CLS)
-    last = valid & (state.span_refs[sb] <= 1)
-    nsb = span_sbs(cfg, state.sb_block_words[sb])
-    ids = jnp.arange(cfg.num_sbs, dtype=jnp.int32)
-    span = last & (ids >= sb) & (ids < sb + nsb)
-    fs, ft = _push_many(state.free_stack, state.free_top, ids, span)
-    refs = state.span_refs.at[sb].add(-valid.astype(jnp.int32))
+    ext = span_sbs(cfg, state.sb_block_words[sb])
+    b = jnp.where(n_sbs < 0, ext, jnp.minimum(n_sbs, ext))
+    state, valid = _lease_release(state, cfg, sb, jnp.int32(0), b, valid)
     return state._replace(
-        sb_class=jnp.where(span, FREE_CLS, state.sb_class),
-        sb_block_words=jnp.where(span, 0, state.sb_block_words),
-        span_refs=jnp.where(span, 0, refs),
-        free_stack=fs, free_top=ft,
         free_count=state.free_count + valid.astype(jnp.int32))
+
+
+def trim_large(state: AllocState, cfg: ArenaConfig, off, n_keep, n_held=-1):
+    """Shrink the caller's lease on the span headed at ``off`` to the
+    ``n_keep``-superblock prefix — the decode-ahead reserver's "sequence
+    finished short" path.  ``n_held`` is the length of the lease being
+    shrunk (``< 0`` = the whole current extent, i.e. a full-extent
+    lease); a caller re-trimming an already-shrunk lease must pass its
+    current ``n_held`` exactly like the host ``span_trim``, or the
+    release range would eat other holders' tail leases.  The trimmed
+    range loses one lease; whatever suffix nobody else leases returns to
+    the free stack while the shared prefix stays placed.  Invalid
+    targets (non-head, dead, ``n_keep`` outside ``[1, held)``, range not
+    fully leased) are masked no-ops where the host raises or no-ops.
+    """
+    off = jnp.asarray(off, jnp.int32)
+    n_keep = jnp.asarray(n_keep, jnp.int32)
+    n_held = jnp.asarray(n_held, jnp.int32)
+    sb = jnp.clip(off // cfg.sb_words, 0, cfg.num_sbs - 1)
+    valid = (off >= 0) & (off % cfg.sb_words == 0) & \
+        (state.sb_class[sb] == LARGE_CLS)
+    ext = span_sbs(cfg, state.sb_block_words[sb])
+    b = jnp.where(n_held < 0, ext, jnp.minimum(n_held, ext))
+    valid = valid & (n_keep >= 1) & (n_keep < b)
+    state, valid = _lease_release(state, cfg, sb, n_keep, b, valid)
+    return state, valid
 
 
 def set_root(state: AllocState, i: int, off) -> AllocState:

@@ -119,10 +119,15 @@ def sweep(cfg: ArenaConfig, persistent: dict, marked,
     differential fuzz suite).
 
     ``ref_counts`` (per-slot, from ``span_ref_counts``) reconstructs the
-    transient span refcounts: a live head gets ``max(count, 1)`` — it is
-    marked, so at least one reference exists; the floor only guards a
-    caller sweeping with a stale count table.  Without ``ref_counts``
-    every live span conservatively recovers with a single owner.
+    transient span range leases: every root-reachable reference to a
+    live head is one lease, and lease *lengths* are transient and
+    unrecoverable, so each reference conservatively becomes a lease over
+    the span's whole persisted extent — the head's ``max(count, 1)`` is
+    broadcast across every member superblock (the vectorized mirror of
+    ``RangeLeaseTable.reconstruct``).  The floor only guards a caller
+    sweeping with a stale count table: a live head is marked, so at
+    least one reference exists.  Without ``ref_counts`` every live span
+    recovers with a single full-extent owner lease.
     """
     n = cfg.num_sbs
     sb_ids = jnp.arange(n, dtype=jnp.int32)
@@ -158,16 +163,16 @@ def sweep(cfg: ArenaConfig, persistent: dict, marked,
     live_large = is_large & in_span & head_marked
     empty = empty | (is_large & ~live_large)
 
-    # span refcounts: a live head's count = root-reachable references to it
-    live_head = is_head & live_large
+    # span range leases: a live head's count = root-reachable references
+    # to it, broadcast over every member superblock (each reference is a
+    # full-extent lease — lease lengths were transient)
     if ref_counts is None:
         head_counts = jnp.ones((n,), jnp.int32)
     else:
         rc_pad = jnp.concatenate([jnp.asarray(ref_counts, jnp.int32),
                                   jnp.zeros((1,), jnp.int32)])
-        head_counts = rc_pad[jnp.where(live_head,
-                                       (sb_ids * cfg.sb_words) // minw, Spad)]
-    span_refs = jnp.where(live_head, jnp.maximum(head_counts, 1), 0)
+        head_counts = rc_pad[head_slot]          # per member, its head's count
+    span_refs = jnp.where(live_large, jnp.maximum(head_counts, 1), 0)
 
     new_class = sb_class
     for c in range(cfg.num_classes):

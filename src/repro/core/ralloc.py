@@ -34,7 +34,7 @@ from .layout import (ANCHOR_NIL_AVAIL, D_ANCHOR, D_BLOCK_SIZE, D_NEXT_FREE,
                      LARGE_CLASS, LARGE_CONT, PARTIAL, SB_SIZE, SB_WORDS,
                      WORD, pack_anchor, pack_head, unpack_anchor, unpack_head)
 from . import pptr as pp
-from .spans import FreeRunIndex, SpanRegistry
+from .spans import FreeRunIndex, RangeLeaseTable
 
 
 class OutOfMemory(Exception):
@@ -67,12 +67,19 @@ class Ralloc:
         self._tls = threading.local()
         self._all_caches: list[list[list[int]]] = []
         self._caches_lock = threading.Lock()
-        self._large_lock = threading.Lock()   # serializes span placement
+        # serializes span placement AND the lease-release decision
+        # (reentrant: _release_range holds it across the decrement and
+        # the _free_large/_trim_tail it decides on, which re-acquire it
+        # around their free-stack pushes — without one lock over the
+        # whole read-extent → decrement → free sequence, two concurrent
+        # releases of a shared span could both observe a stale extent
+        # and double-push the same tail superblocks)
+        self._large_lock = threading.RLock()
         # transient span metadata (never flushed; GC-reconstructed):
-        # refcounts per live span head + the size-bucketed free-run index
-        # that mirrors free-stack membership (always take _large_lock
-        # before _free_lock when both are needed)
-        self.spans = SpanRegistry()
+        # per-superblock-range lease counts per live span + the
+        # size-bucketed free-run index that mirrors free-stack membership
+        # (always take _large_lock before _free_lock when both are needed)
+        self.leases = RangeLeaseTable()
         self._run_index = FreeRunIndex()
         self._free_lock = threading.Lock()
         self._closed = False
@@ -150,15 +157,19 @@ class Ralloc:
                     f"free of pointer {ptr} inside an orphaned large-span "
                     f"continuation (no owning head superblock)")
         if cls == LARGE_CLASS:
-            if self.mem.read(self.desc(sb, D_BLOCK_SIZE)) <= 0:
-                raise ValueError(
-                    f"double/invalid free of large block at superblock {sb}")
-            # refcounted span (see core.spans): while other holders remain,
-            # a free is a pure transient decrement — nothing persisted, the
-            # span stays placed.  Only the last reference tears it down.
-            if self.spans.release(sb) > 0:
-                return
-            self._free_large(sb)
+            # range-leased span (see core.spans): a plain free releases one
+            # full-extent lease — while other leases remain the decrement is
+            # purely transient and the leased prefix stays placed; only a
+            # superblock range nobody leases any more actually frees (the
+            # unleased tail via _trim_tail, everything when the head range's
+            # last lease drops).  Check-dead + release are one locked step:
+            # a racing last release could free and re-place this head.
+            with self._large_lock:
+                if self.mem.read(self.desc(sb, D_BLOCK_SIZE)) <= 0:
+                    raise ValueError(
+                        f"double/invalid free of large block at "
+                        f"superblock {sb}")
+                self._release_range(sb, 0, None)
             return
         cache = self._tcache()[cls]
         cache.append(ptr)
@@ -168,33 +179,140 @@ class Ralloc:
             keep = len(cache) // 2 if self.keep_half else 0
             self._flush_cache(cls, keep=keep)
 
-    # -------------------------------------------------------- span refcounts
-    def span_acquire(self, ptr: int) -> int:
-        """Take one extra (transient) reference on a live large span.
-
-        ``ptr`` must be the span head block address.  Returns the new
-        refcount.  Raises on a dead / non-head pointer — the host-side
-        strictness mirror of the device's masked no-op ``acquire_span``
-        (same asymmetry the feature matrix documents for ``free_large``).
-        Acquire persists nothing: after a crash the count is rebuilt by
-        counting root-reachable references to the head during GC.
-        """
+    # ----------------------------------------------------------- span leases
+    def _span_head(self, ptr: int) -> tuple[int, int]:
+        """Validate ``ptr`` as a live span head; returns (head_sb, extent)."""
         sb = self.heap.sb_of(ptr)
         cls = self.mem.read(self.desc(sb, D_SIZE_CLASS))
         bs = self.mem.read(self.desc(sb, D_BLOCK_SIZE))
         if cls != LARGE_CLASS or bs <= 0 or ptr != self.heap.sb_word(sb):
             raise ValueError(
-                f"span_acquire of non-head/dead span pointer {ptr}")
-        return self.spans.acquire(sb)
+                f"span lease op on non-head/dead span pointer {ptr}")
+        return sb, -(-int(bs) // SB_SIZE)
 
-    def span_release(self, ptr: int) -> None:
-        """Drop one reference (frees the span when the last one drops) —
-        an alias of ``free`` named for symmetry with ``span_acquire``."""
-        self.free(ptr)
+    def span_acquire(self, ptr: int, n_sbs: int | None = None) -> int:
+        """Lease the ``n_sbs``-superblock *prefix* of a live large span
+        (default: the whole remaining extent).
+
+        ``ptr`` must be the span head block address.  Returns the new
+        head-range lease count.  Raises on a dead / non-head pointer or a
+        non-positive range — the host-side strictness mirror of the
+        device's masked no-op ``acquire_span`` (same asymmetry the
+        feature matrix documents for ``free_large``).  Acquire persists
+        nothing: after a crash each root-reachable reference to the head
+        is rebuilt as one full-extent lease during GC.
+        """
+        with self._large_lock:      # vs a concurrent release freeing it
+            sb, ext = self._span_head(ptr)
+            n = ext if n_sbs is None else n_sbs
+            if n < 1:
+                raise ValueError(f"span_acquire of an empty range ({n} sbs)")
+            self.leases.ensure(sb, ext)
+            return self.leases.acquire(sb, min(n, ext))
+
+    def span_release(self, ptr: int, n_sbs: int | None = None) -> None:
+        """Drop one lease on the ``n_sbs``-superblock prefix (default: the
+        whole remaining extent — equivalent to ``free``).  A range whose
+        count drops to zero frees: the head range's last release tears
+        down whatever remains of the span, an unleased tail suffix
+        returns to the free set while the shared prefix stays placed.
+
+        ``n_sbs`` must match a lease the caller actually holds.  The
+        table is identity-free (counts, not holder ids), so a mismatched
+        length that other holders' counts happen to cover is not
+        detectable: it leaves an interior zero-count range that stays
+        placed — a safe leak (paper Thm 5.4 direction: leak, never
+        corrupt) reclaimed at the head range's last release — while a
+        mismatch the counts do NOT cover raises ``LeaseUnderflow``."""
+        if n_sbs is None:
+            self.free(ptr)
+            return
+        with self._large_lock:      # validation + release are one step:
+            # a concurrent last release could free the span and a new
+            # placement reuse its head between the check and the act
+            sb, _ = self._span_head(ptr)
+            if n_sbs < 1:
+                raise ValueError(
+                    f"span_release of an empty range ({n_sbs} sbs)")
+            self._release_range(sb, 0, n_sbs)
+
+    def span_trim(self, ptr: int, n_keep: int,
+                  n_held: int | None = None) -> int:
+        """Shrink the caller's lease to the ``n_keep`` prefix, freeing
+        whatever tail no other holder leases (the decode-ahead reserver's
+        "sequence finished short" path).  Returns the span's remaining
+        extent in superblocks.
+
+        ``n_held`` is the length of the lease being shrunk — default: the
+        span's whole current extent, i.e. a full-extent lease.  A caller
+        re-trimming a lease it already shrank (while other holders pin
+        the extent) MUST pass its current ``n_held``; defaulting would
+        release ``[n_keep, extent)`` and silently consume the other
+        holders' tail leases.  ``n_keep`` >= the held length is a no-op;
+        ``n_keep`` < 1 raises (the head range cannot be trimmed away —
+        that is ``free``'s job)."""
+        with self._large_lock:
+            sb, ext = self._span_head(ptr)
+            if n_keep < 1:
+                raise ValueError(f"span_trim cannot drop the head (keep="
+                                 f"{n_keep})")
+            b = ext if n_held is None else min(n_held, ext)
+            if n_keep >= b:
+                return ext
+            self._release_range(sb, n_keep, b)
+            _, ext = self._span_head(ptr)
+            return ext
 
     def span_refcount(self, ptr: int) -> int:
-        """Current transient refcount of the span holding ``ptr``."""
-        return self.spans.count(self.heap.sb_of(ptr))
+        """Current transient lease count at the span's *head* range."""
+        return self.leases.count(self.heap.sb_of(ptr))
+
+    def span_lease_counts(self, ptr: int) -> list[int]:
+        """Per-superblock lease counts over the span holding ``ptr`` —
+        comparable with the device's ``span_refs`` vector slice."""
+        return self.leases.counts(self.heap.sb_of(ptr))
+
+    def span_extent(self, ptr: int) -> int:
+        """Current persisted extent (superblocks) of the live span headed
+        at ``ptr`` — the device analogue is ``span_sbs(sb_block_words)``.
+        Raises on a dead / non-head pointer."""
+        return self._span_head(ptr)[1]
+
+    def _release_range(self, head: int, a_sbs: int, b_sbs: int | None
+                       ) -> None:
+        """Drop one lease on superblocks ``[head+a, head+b)`` and free
+        whatever the decrement leaves unleased (tentpole mechanics):
+
+          * head-range count hits zero → ``_free_large`` on the whole
+            remaining extent (stray interior counts from conservative
+            reconstruction cannot outlive the head — every genuine lease
+            is a prefix and includes it);
+          * a zero-count tail suffix → ``_trim_tail`` returns exactly
+            those superblocks to the free set and durably shrinks the
+            head's size record so recovery can never resurrect them.
+
+        Raises ``LeaseUnderflow`` (a ``ValueError``) if the range is not
+        fully leased — the host strictness the device mirrors as a
+        masked no-op.  ``_large_lock`` (reentrant) covers the whole
+        read-extent → decrement → free/trim sequence: concurrent
+        releases of a shared span must not both act on a stale extent
+        (double-pushing the same tail superblocks to the free set).
+        """
+        with self._large_lock:
+            size = int(self.mem.read(self.desc(head, D_BLOCK_SIZE)))
+            ext = -(-size // SB_SIZE)
+            if ext < 1:      # lost a release race: the span already died
+                raise ValueError(
+                    f"double/invalid release of the dead span at "
+                    f"superblock {head}")
+            self.leases.ensure(head, ext)
+            b = ext if b_sbs is None else min(b_sbs, ext)
+            head_count, new_ext = self.leases.release(head, head + a_sbs,
+                                                      head + b)
+            if head_count == 0:
+                self._free_large(head)
+            elif new_ext < ext:
+                self._trim_tail(head, new_ext, ext)
 
     def _cache_cap(self, cls: int) -> int:
         """Cache capacity: one superblock's worth of blocks (LRMalloc)."""
@@ -484,7 +602,8 @@ class Ralloc:
         _, _, _, tag = unpack_anchor(m.read(self.desc(first, D_ANCHOR)))
         m.write(self.desc(first, D_ANCHOR),
                 pack_anchor(FULL, ANCHOR_NIL_AVAIL, 0, tag + 1))
-        self.spans.register(first)           # one (transient) owner reference
+        # one (transient) full-extent owner lease
+        self.leases.register(first, nsb)
         return self.heap.sb_word(first)
 
     def _free_large(self, first: int) -> None:
@@ -507,9 +626,42 @@ class Ralloc:
         # drain interleaving between the pushes would observe a torn run
         # (a prefix of the span), claim it misaligned, and leave stranded
         # fragments no later request can use
-        self.spans.forget(first)
+        self.leases.forget(first)
         with self._large_lock:
             for sb in range(first, first + nsb):
+                self._init_free_sb(sb)
+                self._free_push(sb)
+
+    def _trim_tail(self, head: int, new_ext: int, old_ext: int) -> None:
+        """Return the unleased tail ``[head+new_ext, head+old_ext)`` of a
+        still-live span to the free set.
+
+        The persistent records change exactly like a free of the tail
+        alone: the head's size record shrinks to the kept prefix and the
+        tail's continuation markers clear, all durable *before* the
+        superblocks become reachable from the free list.  Either side of
+        a crash mid-trim is safe: head-shrink durable without some tail
+        clears leaves orphaned ``LARGE_CONT`` markers recovery sweeps to
+        the free set; tail clears durable without the head shrink leaves
+        the span looking whole and recovery re-installs the continuation
+        markers (a safe leak of the tail back into the span — the same
+        conservative direction every GC false positive takes).
+        """
+        m = self.mem
+        size = int(m.read(self.desc(head, D_BLOCK_SIZE)))
+        m.write(self.desc(head, D_BLOCK_SIZE),
+                min(size, new_ext * SB_SIZE))
+        to_persist = [self.desc(head, D_BLOCK_SIZE)]
+        for sb in range(head + new_ext, head + old_ext):
+            m.write(self.desc(sb, D_SIZE_CLASS), 0)
+            m.write(self.desc(sb, D_BLOCK_SIZE), 0)
+            to_persist += [self.desc(sb, D_SIZE_CLASS),
+                           self.desc(sb, D_BLOCK_SIZE)]
+        self._persist(*to_persist)
+        # the tail re-enters the free set atomically (same torn-run
+        # argument as _free_large)
+        with self._large_lock:
+            for sb in range(head + new_ext, head + old_ext):
                 self._init_free_sb(sb)
                 self._free_push(sb)
 

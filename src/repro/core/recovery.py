@@ -80,10 +80,13 @@ def trace(r, span_refs: dict[int, int] | None = None
     When ``span_refs`` is given, the trace additionally counts — at zero
     extra passes — how many root-reachable references target each live
     large-span *head* (``span_refs[head_sb] += 1`` per reference, roots
-    included).  That count IS the span's refcount: acquire/release never
-    persist anything, so recovery reconstructs the transient
-    ``SpanRegistry`` the same way it reconstructs free lists — from the
-    persisted minimum plus GC reachability (see ``core.spans``).
+    included).  Each such reference IS one range lease: lease lengths are
+    transient and unrecoverable, so recovery rebuilds every reference as
+    a lease over the span's remaining *persisted* extent (trims shrink
+    that extent durably, so a trimmed tail never comes back).  The
+    transient ``RangeLeaseTable`` is reconstructed the same way the free
+    lists are — from the persisted minimum plus GC reachability (see
+    ``core.spans``).
     """
     used_sbs = int(r.mem.read(layout.M_USED_SBS))
     visited: dict[int, tuple[int, int]] = {}
@@ -199,13 +202,15 @@ def recover(r) -> dict:
             m.write(aw, pack_anchor(FULL, ANCHOR_NIL_AVAIL, 0, 0))
             n_full += 1
 
-    # rebuild the transient span registry and free-run index exactly like
-    # the paper rebuilds thread caches and Treiber stacks: counts come
-    # from the trace (references to live heads), the index from the swept
-    # free list.  Dead heads that the conservative scan touched are not
-    # registered — only live spans carry counts.
-    r.spans.reconstruct({sb: c for sb, c in span_refs.items()
-                         if sb in large_heads})
+    # rebuild the transient range-lease table and free-run index exactly
+    # like the paper rebuilds thread caches and Treiber stacks: each
+    # root-reachable reference to a live head becomes one lease over the
+    # span's persisted extent, the index comes from the swept free list.
+    # Dead heads that the conservative scan touched are not registered —
+    # only live spans carry leases.
+    r.leases.reconstruct({sb: (large_heads[sb], c)
+                          for sb, c in span_refs.items()
+                          if sb in large_heads})
     r._run_index.rebuild(free_superblock_list(r))
 
     # step 10: write back all three regions, fence

@@ -71,12 +71,15 @@ class ServingEngine:
         self._acquire_span = jax.jit(functools.partial(ja.acquire_span,
                                                        cfg=self.acfg))
         # lanes holding a contiguous multi-superblock page span (oversized
-        # prompts): lane -> (span head offset, n_pages), freed via free_large
+        # prompts): lane -> (span head offset, n_pages); the owner holds a
+        # full-extent lease released via free_large — unleased tail
+        # superblocks (the decode-ahead slack nobody's prefix lease
+        # covers) free right then, not at the last holder's exit
         self.large_spans: dict[int, tuple[int, int]] = {}
-        # lanes that *acquired* another lane's published span (shared-prefix
-        # hits): same (off, n_pages) record; finish releases one reference
-        # (free_large decrements while other holders remain)
-        self.shared_spans: dict[int, tuple[int, int]] = {}
+        # lanes that *acquired* a prefix lease on another lane's published
+        # span (shared-prefix hits): lane -> (off, n_backed_pages,
+        # lease_sbs); finish releases exactly that prefix range
+        self.shared_spans: dict[int, tuple[int, int, int]] = {}
         pshape = jax.tree.map(
             lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), params)
         self.step_fn, _, _ = dec.make_decode_step(cfg, mesh, pshape)
@@ -123,13 +126,16 @@ class ServingEngine:
             self._reserve_span(lane, max(n_prompt_pages, n_ahead))
         if hit is not None:
             if hit[0] == "span":
-                # acquire the published span: the prompt's KV pages are
-                # the span's prefix, no copy and no fresh reservation —
-                # the span frees only when the last holder releases it
-                _, off, n_span, full, plen, kvp, next_tok = hit
-                self.astate, _ = self._acquire_span(state=self.astate,
-                                                    off=jnp.int32(off))
-                self.shared_spans[lane] = (off, n_span)
+                # lease the published span's *prefix*: the prompt's KV
+                # pages are exactly the prefix superblocks this lane will
+                # read — no copy, no fresh reservation, and no claim on
+                # the publisher's decode-ahead tail (which frees for
+                # reuse the moment its own leases drop)
+                _, off, n_span, full, plen, kvp, next_tok, lease_sbs = hit
+                self.astate, _ = self._acquire_span(
+                    state=self.astate, off=jnp.int32(off),
+                    n_sbs=jnp.int32(lease_sbs))
+                self.shared_spans[lane] = (off, full, lease_sbs)
                 pages = off + np.arange(full, dtype=np.int32)
             else:
                 _, pages, plen, kvp, next_tok = hit
@@ -185,7 +191,9 @@ class ServingEngine:
         kv = np.asarray(self.dstate["kv_pos"][lane])
         span = self.large_spans.get(lane)
         if span is None:
-            span = self.shared_spans.get(lane)   # sharers may re-publish
+            shared = self.shared_spans.get(lane)  # sharers may re-publish
+            if shared is not None:
+                span = shared[:2]                 # (off, backed prefix pages)
         if span is not None:
             off, n_span = span
             # only span-backed pages can be published under the span
@@ -207,13 +215,17 @@ class ServingEngine:
                 # per entry): acquiring again would leak a span reference
                 # when this entry is overwritten
                 return
-            # the prefix cache itself holds one span reference, so the
-            # span survives the publishing session's eviction
-            self.astate, _ = self._acquire_span(state=self.astate,
-                                                off=jnp.int32(off))
+            # the prefix cache itself holds one *prefix* lease — just the
+            # superblocks the shared prompt pages occupy — so the prefix
+            # survives the publishing session's eviction while the
+            # decode-ahead tail stays free to be reclaimed
+            lease_sbs = -(-full // self.acfg.sb_words)
+            self.astate, _ = self._acquire_span(
+                state=self.astate, off=jnp.int32(off),
+                n_sbs=jnp.int32(lease_sbs))
             self._prefix_cache[key] = (
                 "span", off, n_span, full, full * page, kv[:full].copy(),
-                int(self.cur_tokens[lane]))
+                int(self.cur_tokens[lane]), lease_sbs)
             return
         bt = np.asarray(self.dstate["block_table"][lane])
         if pos != full * page or pos != len(s.tokens) - (
@@ -235,10 +247,12 @@ class ServingEngine:
         spans whose last holder was the cache) free."""
         for entry in self._prefix_cache.values():
             if entry[0] == "span":
-                # free_large releases one reference: a decrement while
-                # holders remain, the actual free when the cache is last
+                # free_large releases the cache's prefix lease: a
+                # transient decrement while holders remain, the actual
+                # free of whatever range the cache was last to lease
                 self.astate = self._free_large(state=self.astate,
-                                               off=jnp.int32(entry[1]))
+                                               off=jnp.int32(entry[1]),
+                                               n_sbs=jnp.int32(entry[7]))
                 continue
             pages = entry[1]
             stale = []
@@ -306,24 +320,40 @@ class ServingEngine:
 
     def finish(self, lane: int) -> None:
         """Evict a session: free its pages (shared pages only at ref 0,
-        shared spans only when the last holder releases)."""
+        leased span ranges only when their last lease releases).
+
+        The lane's span records are *poisoned* here — popped before any
+        release — so a dead lane can never free a span reallocated at
+        the same offset: a second ``finish`` of the lane raises
+        (``KeyError``), it cannot silently release someone else's span.
+        """
         s = self.sessions.pop(lane)
         s.done = True
         bt = np.asarray(self.dstate["block_table"][lane])
         pages = bt[bt >= 0].astype(np.int32)
         span = self.large_spans.pop(lane, None)
-        if span is None:
-            span = self.shared_spans.pop(lane, None)
+        shared = self.shared_spans.pop(lane, None)
         if span is not None:
             # the prompt's page table is one large span: free_large drops
-            # this lane's reference (a transient decrement while the
-            # prefix cache / other lanes still hold it, the actual free
-            # when this was the last holder); pages decoded past the span
-            # were lazily allocated and go through the per-page free below
+            # the owner's full-extent lease — superblocks nobody else
+            # leases free *now* (in particular the decode-ahead tail past
+            # the published prefix, which only prefix leases cover);
+            # pages decoded past the span were lazily allocated and go
+            # through the per-page free below
             off, n_span = span
             self.astate = self._free_large(state=self.astate,
-                                           off=jnp.int32(off))
+                                           off=jnp.int32(off),
+                                           n_sbs=jnp.int32(-1))
             pages = pages[(pages < off) | (pages >= off + n_span)]
+        elif shared is not None:
+            # a sharer releases exactly the prefix range it leased; its
+            # own decode pages (which may legitimately reuse freed tail
+            # superblocks of this very span) free per-page below
+            off, n_backed, lease_sbs = shared
+            self.astate = self._free_large(state=self.astate,
+                                           off=jnp.int32(off),
+                                           n_sbs=jnp.int32(lease_sbs))
+            pages = pages[(pages < off) | (pages >= off + n_backed)]
         keep = []
         for p in pages.tolist():
             if p in self.page_refs:
@@ -403,7 +433,8 @@ class ServingEngine:
         # and poison the offset after the span frees and is reallocated.
         self._prefix_cache.clear()
         spans = list(self.large_spans.values()) + \
-            list(self.shared_spans.values())
+            [(off, n_backed) for off, n_backed, _ in
+             self.shared_spans.values()]
         counts: dict[int, int] = {}
         for lane, s in self.sessions.items():
             if s.done:

@@ -23,10 +23,12 @@ states first-class test inputs:
         inside a live span (no double-counted blocks);
       - a fresh span allocated post-recovery lands outside every live
         span (the free set is really free);
-      - GC-reconstructed span refcounts equal the durable holder count
-        (one root per holder): acquire/release persist nothing, so the
-        count must come back from reachability alone — no span freed
-        while referenced, none retained with zero reconstructed refs.
+      - GC-reconstructed range-lease counts equal the durable holder
+        count on every superblock of each span (one root per holder):
+        acquire/trim/release persist nothing beyond the records a real
+        free writes, so the counts must come back from reachability
+        alone — no range freed while referenced, none retained with
+        zero reconstructed leases.
 
 The trace follows the application durability protocol the paper assumes:
 span contents are flushed+fenced *before* the root is set, and the root
@@ -72,38 +74,71 @@ def dedup_images(snaps: list[np.ndarray]) -> list[np.ndarray]:
     return out
 
 
-def run_host_trace(r: Ralloc, ops) -> list[tuple[int, int, int]]:
-    """Replay a large-span alloc/acquire/release interleaving on ``r``.
+def run_host_trace(r: Ralloc, ops) -> list[tuple[int, int, int, int]]:
+    """Replay a span alloc/acquire/trim/release interleaving on ``r``.
 
     ``ops`` entries are ``(kind, k)`` with kind in {"alloc", "acquire",
-    "free"} — legacy ``(is_free, k)`` bool tuples are accepted and mean
-    free/alloc.  One *holder* = one (transient) span reference + one
-    durable root: ``alloc`` places a ``k``-superblock span, stamps +
-    flushes a sentinel, and roots it; ``acquire`` takes an extra
-    reference on the oldest live span (``span_acquire`` — persists
-    nothing) and then roots it at a fresh index, so at every persist
-    boundary the durable roots pointing at a head ARE its reconstructible
-    refcount; ``free`` drops the oldest holder (unroot BEFORE releasing —
-    a shared release is a pure transient decrement).  Returns the final
-    holder list ``[(root_idx, ptr, k)]``.
+    "acquire_prefix", "trim", "free"} — legacy ``(is_free, k)`` bool
+    tuples are accepted and mean free/alloc.  One *holder* = one
+    (transient) range lease + one durable root:
+
+      * ``alloc`` places a ``k``-superblock span, stamps + flushes a
+        sentinel, and roots it (the owner's full-extent lease);
+      * ``acquire`` / ``acquire_prefix`` lease the oldest live span
+        (full extent / a ``k``-clamped prefix — ``span_acquire`` persists
+        nothing) and then root it at a fresh index, so at every persist
+        boundary the durable roots pointing at a head ARE its
+        reconstructible lease count;
+      * ``trim`` shrinks the oldest span to a ``k``-clamped prefix
+        (``span_trim`` — the unleased tail durably leaves the span), then
+        re-stamps the recorded length *after* the trim completes;
+      * ``free`` drops the oldest holder's lease (unroot BEFORE
+        releasing — a shared release is a pure transient decrement).
+
+    Returns the final holder list ``[(root_idx, ptr, k, lease_sbs)]``.
     """
-    holders: list[tuple[int, int, int]] = []    # (root idx, ptr, k)
+    holders: list[tuple[int, int, int, int]] = []  # (root, ptr, k, lease)
     next_root = 0
     for kind, k in ops:
         if isinstance(kind, bool):
             kind = "free" if kind else "alloc"
         if kind == "free" and holders:
-            i, ptr, _ = holders.pop(0)
+            i, ptr, _, lease = holders.pop(0)
             r.set_root(i, None)                 # unroot BEFORE releasing
-            r.free(ptr)
-        elif kind == "acquire" and holders:
-            _, ptr, k0 = holders[0]             # oldest live span
-            r.span_acquire(ptr)                 # transient count only …
+            r.span_release(ptr, lease)
+        elif kind in ("acquire", "acquire_prefix") and holders:
+            _, ptr, k0, _ = holders[0]          # oldest live span
+            ext = _span_ext(r, ptr)
+            n = ext if kind == "acquire" else max(1, min(k, ext))
+            r.span_acquire(ptr, n)              # transient lease only …
             i = next_root
             next_root += 1
             r.set_root(i, ptr)                  # … the root is the durable ref
-            holders.append((i, ptr, k0))
-        elif kind != "free" or not holders:
+            holders.append((i, ptr, k0, n))
+        elif kind == "trim" and holders:
+            _, ptr, _, _ = holders[0]
+            ext = _span_ext(r, ptr)
+            if ext > 1:
+                n_keep = max(1, min(k, ext - 1))
+                new_ext = r.span_trim(ptr, n_keep)
+                # exactly one full-extent lease shrank to n_keep (trim's
+                # contract); a zero-count suffix may have freed, clamping
+                # every other lease to the surviving extent
+                shrunk, upd = False, []
+                for i, p, kk, l in holders:
+                    if p == ptr:
+                        if not shrunk and min(l, ext) == ext:
+                            l, shrunk = n_keep, True
+                        l = min(l, new_ext)
+                    upd.append((i, p, kk, l))
+                holders = upd
+                # re-stamp the recorded length once the trim is durable —
+                # a crash in between leaves the old (larger) record, so
+                # recovery checks only require extent <= recorded length
+                r.write_word(ptr + 1, new_ext)
+                r.flush_range(ptr + 1, 1)
+                r.fence()
+        elif kind not in ("free", "trim") or not holders:
             ptr = r.malloc(k * SB_SIZE - 256)
             if ptr is None:
                 continue
@@ -115,8 +150,13 @@ def run_host_trace(r: Ralloc, ops) -> list[tuple[int, int, int]]:
             r.flush_range(ptr, 2)
             r.fence()                           # contents durable BEFORE root
             r.set_root(i, ptr)
-            holders.append((i, ptr, k))
+            holders.append((i, ptr, k, k))
     return holders
+
+
+def _span_ext(r: Ralloc, ptr: int) -> int:
+    """Current persisted extent (superblocks) of the span at ``ptr``."""
+    return r.span_extent(ptr)
 
 
 def check_recovered_heap(r: Ralloc, n_roots: int) -> dict[int, int]:
@@ -161,18 +201,25 @@ def check_recovered_heap(r: Ralloc, n_roots: int) -> dict[int, int]:
         assert sb in spans, f"root {i} points at a lost span (sb {sb})"
         assert int(r.read_word(w)) == SENTINEL + sb, \
             f"root {i}: span contents lost"
-        assert spans[sb] == int(r.read_word(w + 1)), \
-            f"root {i}: span length record corrupted"
+        # a trim durably shrinks the extent before the harness re-stamps
+        # the length word, so a crash in the window leaves record >=
+        # extent; an extent *above* the record would be a resurrected tail
+        assert 1 <= spans[sb] <= int(r.read_word(w + 1)), \
+            f"root {i}: span length record corrupted / tail resurrected"
 
-    # GC-reconstructed refcounts == the durable holder count: acquire and
-    # release persist nothing, so at *every* boundary the count recovery
-    # rebuilds must equal the number of durable roots referencing the
-    # head — no span freed while referenced, none retained with zero refs
-    for sb in spans:
+    # GC-reconstructed lease counts == the durable holder count, on EVERY
+    # superblock of the span: acquire/trim/release persist nothing beyond
+    # the records a real free writes, so at every boundary the per-range
+    # counts recovery rebuilds must equal the number of durable roots
+    # referencing the head (each one a full-extent lease — lengths are
+    # transient) — no range freed while referenced, none retained with
+    # zero reconstructed leases
+    for sb, nsb in spans.items():
         assert sb in root_refs, f"zero-ref span at sb {sb} survived recovery"
-        assert r.spans.count(sb) == root_refs[sb], \
-            f"span at sb {sb}: reconstructed refcount " \
-            f"{r.spans.count(sb)} != durable holder count {root_refs[sb]}"
+        assert r.leases.counts(sb) == [root_refs[sb]] * nsb, \
+            f"span at sb {sb}: reconstructed lease counts " \
+            f"{r.leases.counts(sb)} != durable holder count " \
+            f"{root_refs[sb]} over {nsb} sbs"
 
     # the free set is genuinely free: a fresh span never lands in a live one
     p = r.malloc(2 * SB_SIZE - 256)

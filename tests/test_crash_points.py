@@ -85,12 +85,52 @@ def test_crash_between_acquire_and_publish_is_safe():
     r2 = Ralloc(None, 2 * (1 << 20), sim_nvm=True, seed=2, backing=img)
     r2.recover()
     sb = r2.heap.sb_of(ptr)
-    assert r2.spans.count(sb) == 1            # one durable holder ⇒ one ref
+    assert r2.leases.count(sb) == 1           # one durable holder ⇒ one ref
     r2.free(ptr)                              # …so one free tears it down
     assert (sb, 2) in rec.free_superblock_runs(r2) or \
         any(s <= sb < s + ln for s, ln in rec.free_superblock_runs(r2))
     with pytest.raises(ValueError):
         r2.free(ptr)                          # and a second free is caught
+
+
+def test_crash_injection_trimmed_tail_stays_freed():
+    """A trim durably shrinks the span: at every boundary after the trim
+    the tail superblocks must either still belong to the span (crash
+    before the shrink was durable — a safe leak) or be genuinely free,
+    and the surviving prefix keeps its contents and lease counts."""
+    ops = [("alloc", 3), ("acquire_prefix", 1),   # owner + 1-sb prefix lease
+           ("trim", 1),                           # owner keeps 1 sb → tail
+           ("alloc", 2),                          # reuses the freed tail
+           ("free", 0), ("free", 0)]              # owner, then prefix holder
+    n = run_crash_points(ops, seed=17)
+    assert n >= 8
+
+
+def test_crash_injection_partial_release_frees_tail():
+    """The owner's full-extent release while a prefix lease remains must
+    free exactly the unleased tail — every boundary in that window
+    recovers with the prefix alive (its holder's root) and the tail
+    reusable."""
+    ops = [("alloc", 3), ("acquire_prefix", 2),
+           ("free", 0),                           # owner exits → tail frees
+           ("alloc", 1),                          # lands in the freed tail
+           ("free", 0)]                           # prefix holder exits
+    n = run_crash_points(ops, seed=19)
+    assert n >= 6
+
+
+@settings(max_examples=5, deadline=None)
+@given(st.lists(st.tuples(st.sampled_from(["alloc", "acquire",
+                                           "acquire_prefix", "trim",
+                                           "free"]),
+                          st.integers(1, 3)),
+                min_size=2, max_size=9))
+def test_property_range_leases_reconstructed_at_any_boundary(ops):
+    """Tentpole property: traces mixing prefix acquires, trims, and
+    partial releases recover per-range lease counts equal to the durable
+    holder count at every persist boundary (checked inside
+    ``check_recovered_heap``)."""
+    run_crash_points(ops, seed=29)
 
 
 @pytest.mark.slow
@@ -101,3 +141,15 @@ def test_property_crash_points_deep(ops):
     """Deeper sweep for the non-blocking slow CI job: longer traces,
     bigger spans, more examples."""
     run_crash_points(ops, size=4 * (1 << 20), seed=23)
+
+
+@pytest.mark.slow
+@settings(max_examples=15, deadline=None)
+@given(st.lists(st.tuples(st.sampled_from(["alloc", "acquire",
+                                           "acquire_prefix", "trim",
+                                           "free"]),
+                          st.integers(1, 4)),
+                min_size=4, max_size=14))
+def test_property_range_lease_crash_points_deep(ops):
+    """Deep range-lease sweep for the non-blocking slow CI job."""
+    run_crash_points(ops, size=4 * (1 << 20), seed=31)

@@ -169,42 +169,97 @@ def test_differential_best_fit_prefers_smallest_run():
 
 
 _acquire_span = jax.jit(functools.partial(ja.acquire_span, cfg=DEV_CFG))
+_trim_large = jax.jit(functools.partial(ja.trim_large, cfg=DEV_CFG))
+
+
+def _host_ext(r, ptr):
+    """Current persisted extent (sbs) of the host span at ``ptr``."""
+    return r.span_extent(ptr)
+
+
+def assert_lease_lockstep(r, dst, live):
+    """Per-superblock lease counts must agree three ways: host interval
+    table == device ``span_refs`` vector == the naive count model implied
+    by the outstanding leases (``sum(lease > i)``), and the device vector
+    must be zero outside live spans."""
+    expect = np.zeros((N_SBS,), np.int32)
+    for ptr, off, _, leases in live:
+        sb = off // DEV_SB_WORDS
+        hext = _host_ext(r, ptr)
+        dext = int(ja.span_sbs(DEV_CFG, int(dst.sb_block_words[sb])))
+        assert hext == dext, f"extent drift on span at sb {sb}"
+        model = [sum(1 for l in leases if min(l, hext) > i)
+                 for i in range(hext)]
+        assert r.span_lease_counts(ptr) == model, \
+            f"host lease drift at sb {sb}"
+        expect[sb:sb + hext] = model
+    assert np.asarray(dst.span_refs)[:N_SBS].tolist() == expect.tolist(), \
+        "device lease-vector drift"
 
 
 def replay_events(events):
-    """Drive both allocators through an alloc/acquire/release trace.
+    """Drive both allocators through an acquire/trim/partial-release
+    trace in lock-step.
 
-    Beyond ``replay``: spans are refcounted.  ``acquire`` takes one extra
-    reference on the oldest live span on both sides; ``free`` releases
-    one reference from the oldest span — a *shared* free (refs > 1) must
-    be a pure transient decrement on both sides (occupancy unchanged),
-    only the last release actually frees.  Refcounts are asserted in
-    lock-step (host ``SpanRegistry`` vs device ``span_refs``) at every
-    event.  Returns (host, device state, live [(ptr, off, k, refs)]).
+    Beyond ``replay``: spans carry range leases.  ``acquire`` leases the
+    oldest live span's full extent on both sides; ``acquire_prefix``
+    leases only a ``k``-clamped prefix; ``trim`` shrinks one full-extent
+    lease of the oldest span to a ``k``-clamped prefix (the unleased
+    tail frees on both sides); ``free`` releases the oldest span's
+    oldest outstanding lease — a release that leaves every range leased
+    must be a pure transient decrement on both sides (occupancy
+    unchanged), while an unleased tail (or the head range's last
+    release) must free identically.  Per-superblock lease counts are
+    asserted in lock-step against a naive count model at every event.
+    Returns (host, device state, live [[ptr, off, k, leases]]).
     """
     r = Ralloc(None, N_SBS * SB_SIZE)
     dst = ja.init_state(DEV_CFG, max_roots=64)
-    live = []       # [ptr, off, k, refs]
+    live = []       # [ptr, off, k, [lease_sbs, ...]]
     for op, k in events:
-        if op == "acquire" and live:
+        if op in ("acquire", "acquire_prefix") and live:
             ent = live[0]
-            r.span_acquire(ent[0])
-            dst, ok = _acquire_span(state=dst, off=jnp.int32(ent[1]))
+            ext = _host_ext(r, ent[0])
+            n = ext if op == "acquire" else max(1, min(k, ext))
+            r.span_acquire(ent[0], n)
+            dst, ok = _acquire_span(state=dst, off=jnp.int32(ent[1]),
+                                    n_sbs=jnp.int32(n))
             assert bool(ok)
-            ent[3] += 1
+            ent[3].append(n)
+        elif op == "trim" and live:
+            ent = live[0]
+            ext = _host_ext(r, ent[0])
+            if ext <= 1:
+                continue
+            n_keep = max(1, min(k, ext - 1))
+            before = dev_occupancy(dst)
+            r.span_trim(ent[0], n_keep)
+            dst, ok = _trim_large(state=dst, off=jnp.int32(ent[1]),
+                                  n_keep=jnp.int32(n_keep))
+            assert bool(ok)
+            # exactly one full-extent lease shrank (trim's contract)…
+            full = [i for i, l in enumerate(ent[3]) if min(l, ext) == ext]
+            ent[3][full[0]] = n_keep
+            # …so with another full lease outstanding nothing may move
+            if len(full) > 1:
+                assert dev_occupancy(dst) == before, \
+                    "covered trim disturbed device occupancy"
         elif op == "free" and live:
             ent = live[0]
+            ext = _host_ext(r, ent[0])
+            lease = min(ent[3].pop(0), ext)
             before = dev_occupancy(dst)
-            r.free(ent[0])
-            dst = _free_large(state=dst, off=jnp.int32(ent[1]))
-            ent[3] -= 1
-            if ent[3] > 0:
-                # shared free: a transient decrement, nothing moves
+            r.span_release(ent[0], lease)
+            dst = _free_large(state=dst, off=jnp.int32(ent[1]),
+                              n_sbs=jnp.int32(lease))
+            still = [min(l, ext) for l in ent[3]]
+            if still and max(still) == ext:
+                # every range still leased: pure transient decrement
                 assert dev_occupancy(dst) == before, \
-                    "shared free disturbed device occupancy"
-            else:
+                    "covered release disturbed device occupancy"
+            if not ent[3]:
                 live.pop(0)
-        elif op == "alloc" or (op in ("acquire", "free") and not live):
+        elif op == "alloc" or not live:
             ptr = r.malloc(k * SB_SIZE - 256)
             dst, off = _alloc_large(state=dst,
                                     nwords=jnp.int32(k * DEV_SB_WORDS - 4))
@@ -213,35 +268,36 @@ def replay_events(events):
             if ptr is None:
                 continue
             assert r.heap.sb_of(ptr) == off // DEV_SB_WORDS, "placement drift"
-            live.append([ptr, off, k, 1])
+            live.append([ptr, off, k, [k]])
         assert host_occupancy(r) == dev_occupancy(dst), "occupancy drift"
-        for ptr, off, _, refs in live:
-            sb = off // DEV_SB_WORDS
-            assert r.spans.count(sb) == int(dst.span_refs[sb]) == refs, \
-                f"refcount drift on span at sb {sb}"
+        assert_lease_lockstep(r, dst, live)
     return r, dst, live
 
 
-EVENT = st.tuples(st.sampled_from(["alloc", "acquire", "free"]),
+EVENT = st.tuples(st.sampled_from(["alloc", "acquire", "acquire_prefix",
+                                   "trim", "free"]),
                   st.integers(1, 4))
 
 
 @settings(max_examples=12, deadline=None)
 @given(st.lists(EVENT, min_size=2, max_size=30))
 def test_differential_refcounted_trace_lockstep(events):
-    """Acquire/release/shared-free events stay in lock-step, and recovery
-    of a heap with shared spans reconstructs every refcount exactly: no
-    span freed while referenced, none retained with zero refs."""
+    """Acquire/prefix-acquire/trim/partial-release events stay in
+    lock-step, and recovery of a heap with range-leased spans
+    reconstructs every per-range count exactly: no range freed while
+    leased, none retained with zero leases."""
     r, dst, live = replay_events(events)
     assert_free_runs_agree(r, dst)
 
-    # root every live span once per held reference — the durable image a
-    # crash would leave (each holder's root is its reference); recovery
-    # must rebuild count = root-reachable references to the head
+    # root every live span once per outstanding lease — the durable image
+    # a crash would leave (each holder's root is its reference); recovery
+    # must rebuild, on EVERY member superblock, count = root-reachable
+    # references to the head (lease lengths are transient, so each
+    # reference conservatively becomes a full-extent lease)
     roots = np.full((64,), -1, np.int32)
     i = 0
-    for ptr, off, _, refs in live:
-        for _ in range(refs):
+    for ptr, off, _, leases in live:
+        for _ in leases:
             r.set_root(i, ptr)
             roots[i] = off
             i += 1
@@ -252,11 +308,15 @@ def test_differential_refcounted_trace_lockstep(events):
     dst, _ = jr.recover(DEV_CFG, pers, refs_tab)
     assert host_occupancy(r) == dev_occupancy(dst), "post-recovery drift"
     assert_free_runs_agree(r, dst)
-    for ptr, off, _, refs in live:
+    for ptr, off, _, leases in live:
         sb = off // DEV_SB_WORDS
-        assert r.spans.count(sb) == int(dst.span_refs[sb]) == refs, \
-            "reconstructed refcount drift"
-    # no zero-ref span survived: every live device head carries refs >= 1
+        ext = _host_ext(r, ptr)
+        want = [len(leases)] * ext
+        assert r.span_lease_counts(ptr) == want, \
+            "host reconstructed per-range lease drift"
+        assert np.asarray(dst.span_refs)[sb:sb + ext].tolist() == want, \
+            "device reconstructed per-range lease drift"
+    # no zero-lease span survived: every live device member carries >= 1
     dev_heads = np.nonzero(np.asarray(dst.sb_class) == ja.LARGE_CLS)[0]
     assert all(int(dst.span_refs[h]) >= 1 for h in dev_heads)
     assert len(dev_heads) == len(live)
@@ -277,15 +337,15 @@ def test_differential_shared_free_keeps_span_placed():
     r, dst, live = replay_events([
         ("alloc", 1), ("alloc", 2), ("alloc", 1),
         ("free", 0),                       # span@0 released → freed
-        ("acquire", 0), ("acquire", 0),    # span@1 (now oldest): refs 3
+        ("acquire", 0), ("acquire", 0),    # span@1 (now oldest): 3 leases
     ])
-    assert [e[3] for e in live] == [3, 1]
+    assert [len(e[3]) for e in live] == [3, 1]
     r2, dst2, live2 = replay_events([
         ("alloc", 1), ("alloc", 2), ("alloc", 1),
         ("free", 0), ("acquire", 0), ("acquire", 0),
         ("free", 0), ("free", 0),          # two shared frees: still placed
     ])
-    assert [e[3] for e in live2] == [1, 1]
+    assert [len(e[3]) for e in live2] == [1, 1]
     assert recovery.free_superblock_runs(r2) == [(0, 1)]
     r2.free(live2[0][0])                   # last release → the 2-run frees
     dst2 = _free_large(state=dst2, off=jnp.int32(live2[0][1]))
@@ -297,6 +357,51 @@ def test_differential_shared_free_keeps_span_placed():
     before = dev_occupancy(dst2)
     dst2 = _free_large(state=dst2, off=jnp.int32(live2[0][1]))
     assert dev_occupancy(dst2) == before
+
+
+def test_differential_prefix_lease_tail_trim():
+    """Deterministic tentpole scenario: a follower leases only the 1-sb
+    prefix of a 3-sb span; the owner's release frees exactly the 2-sb
+    decode-ahead tail on BOTH sides, the freed tail is re-placed
+    identically, and the prefix frees only at the follower's release."""
+    r, dst, live = replay_events([
+        ("alloc", 3),
+        ("acquire_prefix", 1),             # follower: [head] only
+        ("free", 0),                       # owner (lease 3) exits
+    ])
+    assert [len(e[3]) for e in live] == [1]
+    assert recovery.free_superblock_runs(r) == [(1, 2)]
+    assert_free_runs_agree(r, dst)
+    # both sides re-place a 2-sb span into the freed tail
+    p = r.malloc(2 * SB_SIZE - 256)
+    dst, o = _alloc_large(state=dst, nwords=jnp.int32(2 * DEV_SB_WORDS - 4))
+    assert r.heap.sb_of(p) == int(o) // DEV_SB_WORDS == 1
+    # follower exits → the prefix frees; over-release past the last
+    # lease keeps the documented asymmetry (host raises, device no-ops)
+    r.span_release(live[0][0], 1)
+    dst = _free_large(state=dst, off=jnp.int32(live[0][1]),
+                      n_sbs=jnp.int32(1))
+    assert recovery.free_superblock_runs(r) == [(0, 1)]
+    assert_free_runs_agree(r, dst)
+    with pytest.raises(ValueError):
+        r.span_release(live[0][0], 1)
+    before = dev_occupancy(dst)
+    dst = _free_large(state=dst, off=jnp.int32(live[0][1]),
+                      n_sbs=jnp.int32(1))
+    assert dev_occupancy(dst) == before
+
+
+def test_differential_trim_lockstep():
+    """Deterministic: trims free the same tail superblocks on both sides
+    mid-trace, and the trimmed extent survives recovery identically."""
+    r, dst, live = replay_events([
+        ("alloc", 4), ("alloc", 1),
+        ("trim", 2),                       # span@0 keeps [0, 2)
+        ("alloc", 2),                      # best-fit lands on the tail
+    ])
+    assert recovery.free_superblock_runs(r) == []
+    assert live[2][1] // DEV_SB_WORDS == 2   # re-placed into trimmed tail
+    assert_free_runs_agree(r, dst)
 
 
 @pytest.mark.slow

@@ -238,6 +238,104 @@ def test_span_refcounts_share_and_reconstruct():
     assert np.asarray(rec.sb_class)[:2].tolist() == [-1, -1]
 
 
+def test_free_large_over_release_asymmetry_at_last_lease():
+    """Satellite: the documented ``free_large`` raise-vs-masked-no-op
+    asymmetry at the *last* lease, pinned directly (not via the fuzz
+    trace): releasing past the holder count raises on the host but is a
+    state-preserving no-op on the device — for a plain double free, for
+    an over-release after a shared holder left, and for a range release
+    on the already-freed span."""
+    from repro.core.layout import SB_SIZE
+    from repro.core.ralloc import Ralloc
+
+    cfg = ja.ArenaConfig(num_sbs=8, sb_words=64, class_words=(8,),
+                         cache_cap=16, expand_sbs=1)
+    st = ja.init_state(cfg)
+    r = Ralloc(None, 8 * SB_SIZE)
+    ptr = r.malloc(2 * SB_SIZE - 256)
+    st, off = ja.alloc_large(st, cfg, jnp.int32(2 * 64))
+    # one shared holder joins and leaves again: the *last* lease is the
+    # owner's, so the very next release frees — and one more past it is
+    # the over-release both sides must handle per the feature matrix
+    r.span_acquire(ptr)
+    st, _ = ja.acquire_span(st, cfg, off)
+    r.free(ptr)
+    st = ja.free_large(st, cfg, off)
+    r.free(ptr)                                      # last lease → frees
+    st = ja.free_large(st, cfg, off)
+    assert np.asarray(st.sb_class)[:2].tolist() == [-1, -1]
+    import pytest
+    with pytest.raises(ValueError):
+        r.free(ptr)                                  # host: raises
+    before = jax.tree.map(lambda a: np.asarray(a).copy(), st)
+    st = ja.free_large(st, cfg, off)                 # device: masked no-op
+    for a, b in zip(jax.tree.leaves(before), jax.tree.leaves(st)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    # a *range* over-release on the dead span: same asymmetry
+    with pytest.raises(ValueError):
+        r.span_release(ptr, n_sbs=1)
+    st = ja.free_large(st, cfg, off, jnp.int32(1))
+    for a, b in zip(jax.tree.leaves(before), jax.tree.leaves(st)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_device_prefix_lease_and_trim():
+    """Per-superblock lease vector semantics: a prefix ``acquire_span``
+    bumps only its range, the owner's release frees the unleased tail
+    (shrinking the head's size record like the host's durable trim), and
+    ``trim_large`` invalid targets are masked no-ops."""
+    cfg = ja.ArenaConfig(num_sbs=10, sb_words=64, class_words=(8,),
+                         cache_cap=16, expand_sbs=1)
+    st = ja.init_state(cfg)
+    st, off = ja.alloc_large(st, cfg, jnp.int32(4 * 64))
+    assert np.asarray(st.span_refs)[:4].tolist() == [1, 1, 1, 1]
+    st, ok = ja.acquire_span(st, cfg, off, jnp.int32(2))
+    assert bool(ok)
+    assert np.asarray(st.span_refs)[:4].tolist() == [2, 2, 1, 1]
+    st = ja.free_large(st, cfg, off)                 # owner: full release
+    assert np.asarray(st.span_refs)[:4].tolist() == [1, 1, 0, 0]
+    assert np.asarray(st.sb_class)[:4].tolist() == \
+        [ja.LARGE_CLS, ja.LARGE_CONT, ja.FREE_CLS, ja.FREE_CLS]
+    assert int(st.sb_block_words[0]) == 2 * 64       # extent shrank
+    assert ja.free_runs(st, cfg) == [(2, 2)]
+    st = ja.free_large(st, cfg, off, jnp.int32(2))   # follower leaves
+    assert np.asarray(st.sb_class)[:4].tolist() == [-1] * 4
+
+    # trim: keep 1 of 3, tail returns; invalid trims are masked no-ops
+    st, off = ja.alloc_large(st, cfg, jnp.int32(3 * 64))
+    st, ok = ja.trim_large(st, cfg, off, jnp.int32(1))
+    assert bool(ok)
+    assert int(st.sb_block_words[int(off) // 64]) == 64
+    for bad_off, bad_keep in ((off, 0), (off, 9), (off + 3, 1),
+                              (9 * 64, 1)):
+        st2, ok = ja.trim_large(st, cfg, jnp.int32(bad_off),
+                                jnp.int32(bad_keep))
+        assert not bool(ok)
+        for a, b in zip(jax.tree.leaves(st), jax.tree.leaves(st2)):
+            assert np.array_equal(np.asarray(a), np.asarray(b))
+    st = ja.free_large(st, cfg, off, jnp.int32(1))
+
+    # a re-trim while another holder pins the extent passes n_held: only
+    # the caller's own [n_keep, n_held) range releases (host mirror of
+    # Ralloc.span_trim(n_held=…))
+    st, off = ja.alloc_large(st, cfg, jnp.int32(4 * 64))
+    sb0 = int(off) // 64
+    st, _ = ja.acquire_span(st, cfg, off)            # follower: full extent
+    st, ok = ja.trim_large(st, cfg, off, jnp.int32(3))
+    assert bool(ok)
+    assert np.asarray(st.span_refs)[sb0:sb0 + 4].tolist() == [2, 2, 2, 1]
+    st, ok = ja.trim_large(st, cfg, off, jnp.int32(1), jnp.int32(3))
+    assert bool(ok)
+    assert np.asarray(st.span_refs)[sb0:sb0 + 4].tolist() == [2, 1, 1, 1]
+    st, ok = ja.trim_large(st, cfg, off, jnp.int32(1), jnp.int32(1))
+    assert not bool(ok)                              # nothing held past 1
+    st = ja.free_large(st, cfg, off)                 # follower's release
+    assert np.asarray(st.span_refs)[sb0:sb0 + 4].tolist() == [1, 0, 0, 0]
+    assert int(st.sb_block_words[sb0]) == 64         # tail freed, 1 sb kept
+    st = ja.free_large(st, cfg, off, jnp.int32(1))
+    assert np.asarray(st.sb_class)[sb0:sb0 + 4].tolist() == [-1] * 4
+
+
 def test_small_free_into_large_span_rejected():
     """The vector analogue of the host rule: ``free`` lanes aimed at a
     superblock not initialized for their class are masked out."""

@@ -275,6 +275,110 @@ def test_engine_span_prefix_sharing(mesh):
     assert lb[0] == 0                                # lazy pages freed too
 
 
+def test_engine_owner_exit_frees_decode_ahead_tail(mesh):
+    """Tentpole at the engine level: publish/acquire hold only *prefix*
+    leases, so when the reserving lane finishes short, the decode-ahead
+    tail of its span frees immediately — reusable by the next
+    reservation — while the shared prefix stays placed for the sharer."""
+    from repro.core import jax_alloc as ja
+    cfg = dataclasses.replace(get_smoke_config("qwen2_5_32b"), page_size=8)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServingEngine(cfg, mesh, params, lanes=3, max_seq=64,
+                        pages_per_sb=2)
+    rng = np.random.default_rng(5)
+    prompt = [int(t) for t in rng.integers(1, cfg.vocab_size, size=24)]
+
+    a = eng.add_request(prompt, share_prefix=True)
+    off, n_span = eng.large_spans[a]
+    head_sb = off // eng.acfg.sb_words
+    ext = ja.span_sbs(eng.acfg, n_span)
+    for _ in range(len(prompt)):
+        eng.step()
+    eng.publish_prefix(a)
+    full = len(prompt) // cfg.page_size
+    lease_sbs = -(-full // eng.acfg.sb_words)
+    assert lease_sbs < ext                 # there IS a decode-ahead tail
+    # prefix leases: head range carries owner+cache, the tail only the owner
+    refs = np.asarray(eng.astate.span_refs)
+    assert refs[head_sb] == 2
+    assert refs[head_sb + ext - 1] == 1
+
+    b = eng.add_request(prompt, share_prefix=True)   # prefix lease, no copy
+    assert eng.shared_spans[b] == (off, full, lease_sbs)
+    free_before = int(np.asarray(
+        eng.astate.sb_class == ja.FREE_CLS)[:int(eng.astate.used_sbs)].sum())
+
+    eng.finish(a)                          # owner exits: tail must free NOW
+    cls = np.asarray(eng.astate.sb_class)
+    tail = list(range(head_sb + lease_sbs, head_sb + ext))
+    assert all(cls[s] == ja.FREE_CLS for s in tail), \
+        "decode-ahead tail still pinned after the owner's release"
+    assert cls[head_sb] == ja.LARGE_CLS    # shared prefix stays placed
+    assert int(ja.span_sbs(eng.acfg, int(
+        eng.astate.sb_block_words[head_sb]))) == lease_sbs
+    free_after = int(np.asarray(
+        eng.astate.sb_class == ja.FREE_CLS)[:int(eng.astate.used_sbs)].sum())
+    assert free_after - free_before >= ext - lease_sbs
+    # the sharer still decodes correctly off the shared prefix
+    for _ in range(5):
+        eng.step()
+    bt_b = np.asarray(eng.dstate["block_table"][b])
+    assert bt_b[:full].tolist() == list(range(off, off + full))
+    # last holders out: cache, then the sharer — everything frees
+    eng.drop_prefix_cache()
+    eng.finish(b)
+    assert ja.live_blocks(eng.astate, eng.acfg)["large"] == 0
+    assert int(np.asarray(eng.astate.span_refs).sum()) == 0
+
+
+def test_engine_finished_lane_offset_poisoned(mesh):
+    """Satellite regression (stale-offset hazard): once a lane finishes,
+    its span records are poisoned — a span reallocated at the same
+    offset can never be released through the dead lane, and a double
+    ``finish`` raises instead of silently freeing someone else's span."""
+    from repro.core import jax_alloc as ja
+    cfg = dataclasses.replace(get_smoke_config("qwen2_5_32b"), page_size=8)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServingEngine(cfg, mesh, params, lanes=2, max_seq=64,
+                        pages_per_sb=4)
+    rng = np.random.default_rng(7)
+    prompt = [int(t) for t in rng.integers(1, cfg.vocab_size, size=40)]
+
+    a = eng.add_request(prompt, share_prefix=True)
+    off_a, n_a = eng.large_spans[a]
+    for _ in range(len(prompt)):
+        eng.step()
+    eng.publish_prefix(a)                            # cache: prefix lease
+    eng.finish(a)                                    # owner's lease drops
+    # the dead lane's span records are gone the moment it finishes …
+    assert a not in eng.large_spans and a not in eng.shared_spans
+    refs_before = np.asarray(eng.astate.span_refs).copy()
+    with pytest.raises(KeyError):
+        eng.finish(a)                                # … and a second finish
+    # raises without releasing anything through the dead lane
+    assert np.array_equal(np.asarray(eng.astate.span_refs), refs_before)
+
+    eng.drop_prefix_cache()                          # last lease → span dies
+    assert ja.live_blocks(eng.astate, eng.acfg)["large"] == 0
+    b = eng.add_request(prompt)                      # best-fit: same offset
+    off_b, n_b = eng.large_spans[b]
+    assert off_b == off_a                            # the hazard setup
+    head_sb = off_b // eng.acfg.sb_words
+    # no transient record of the dead lane pins or can free the offset:
+    # per-page refs never cover span pages, and the fresh span is owned
+    # solely by b's new lease
+    assert not (set(eng.page_refs) & set(range(off_b, off_b + n_b)))
+    ext = ja.span_sbs(eng.acfg, n_b)
+    assert np.asarray(eng.astate.span_refs)[
+        head_sb:head_sb + ext].tolist() == [1] * ext
+    # recovery recounts from live roots only — still nothing stale
+    eng.crash_and_recover()
+    assert not (set(eng.page_refs) & set(range(off_b, off_b + n_b)))
+    assert int(eng.astate.sb_class[head_sb]) == ja.LARGE_CLS
+    eng.finish(b)
+    assert ja.live_blocks(eng.astate, eng.acfg)["large"] == 0
+
+
 def test_prefix_sharing_refcounts(mesh):
     """RadixAttention-style prompt sharing over the paged allocator:
     shared pages are referenced by several block tables and return to the

@@ -1,12 +1,14 @@
-"""Span registry + free-run index unit tests (core.spans).
+"""Range-lease table + free-run index unit tests (core.spans).
 
-The registry's contract: refcounts live only in transient memory, free
-of a shared span decrements, the last release frees, and recovery
-rebuilds every count by counting root-reachable references to the span
-head during the existing GC trace — nothing new is persisted.  The
-index's contract: an exact mirror of free-stack membership whose
-best-fit answer (smallest run >= request, leftmost on ties) matches the
-drain-and-sort search it replaced.
+The lease table's contract: per-superblock-range lease counts live only
+in transient memory; a release decrements a range; an unleased tail
+suffix returns to the free set while the shared prefix stays placed; the
+head range's last release frees whatever remains; and recovery rebuilds
+every count by counting root-reachable references to the span head
+during the existing GC trace (each one a full-extent lease) — nothing
+new is persisted.  The index's contract: an exact mirror of free-stack
+membership whose best-fit answer (smallest run >= request, leftmost on
+ties) matches the drain-and-sort search it replaced.
 """
 
 import random
@@ -21,12 +23,12 @@ except ImportError:                      # container without dev deps
 from repro.core import layout, pptr as pp, recovery
 from repro.core.layout import SB_SIZE, contiguous_runs
 from repro.core.ralloc import Ralloc
-from repro.core.spans import FreeRunIndex, SpanRegistry
+from repro.core.spans import FreeRunIndex, LeaseUnderflow, RangeLeaseTable
 
 MB = 1 << 20
 
 
-# ------------------------------------------------------------- SpanRegistry
+# ---------------------------------------------------------- RangeLeaseTable
 def test_acquire_release_free_semantics():
     r = Ralloc(None, 8 * MB)
     ptr = r.malloc(2 * SB_SIZE - 256)
@@ -44,11 +46,144 @@ def test_acquire_release_free_semantics():
         r.free(ptr)                               # double free still raises
 
 
+def test_prefix_lease_frees_unleased_tail():
+    """Tentpole behavior: a follower leasing only the prefix leaves the
+    owner's decode-ahead tail unleased — the owner's release returns
+    exactly the tail to the free set while the prefix stays placed, and
+    the follower's release frees the rest."""
+    r = Ralloc(None, 8 * MB)
+    ptr = r.malloc(4 * SB_SIZE - 256)
+    sb = r.heap.sb_of(ptr)
+    assert r.span_acquire(ptr, n_sbs=2) == 2      # prefix lease
+    assert r.span_lease_counts(ptr) == [2, 2, 1, 1]
+    r.free(ptr)                                   # owner's full release
+    # the tail [sb+2, sb+4) was only the owner's — it freed; the prefix
+    # (and its durable size record) survives
+    assert recovery.free_superblock_runs(r) == [(sb + 2, 2)]
+    assert r.span_lease_counts(ptr) == [1, 1]
+    bs = int(r.mem.read(r.desc(sb, layout.D_BLOCK_SIZE)))
+    assert -(-bs // SB_SIZE) == 2                 # extent durably shrunk
+    # the freed tail is genuinely reusable
+    q = r.malloc(2 * SB_SIZE - 256)
+    assert r.heap.sb_of(q) == sb + 2
+    r.free(q)
+    r.span_release(ptr, n_sbs=2)                  # follower leaves → frees
+    assert recovery.free_superblock_runs(r) == [(sb, 4)]
+
+
+def test_span_trim_returns_tail_to_free_set():
+    """``span_trim`` shrinks the owner's lease in place: the tail frees
+    (and is reused) while the kept prefix stays live and strict."""
+    r = Ralloc(None, 8 * MB)
+    ptr = r.malloc(4 * SB_SIZE - 256)
+    sb = r.heap.sb_of(ptr)
+    assert r.span_trim(ptr, 3) == 3
+    assert recovery.free_superblock_runs(r) == [(sb + 3, 1)]
+    assert r.span_trim(ptr, 1) == 1               # trim again, further
+    assert recovery.free_superblock_runs(r) == [(sb + 1, 3)]
+    assert r.span_trim(ptr, 5) == 1               # >= extent: no-op
+    with pytest.raises(ValueError):
+        r.span_trim(ptr, 0)                       # head is free's job
+    r.free(ptr)
+    assert recovery.free_superblock_runs(r) == [(sb, 4)]
+    with pytest.raises(ValueError):
+        r.span_trim(ptr, 1)                       # dead span raises
+
+
+def test_trim_respects_other_holders_leases():
+    """A trim can only free what nobody else leases: with a 3-sb prefix
+    lease outstanding, trimming the owner to 1 sb keeps 3 sbs placed."""
+    r = Ralloc(None, 8 * MB)
+    ptr = r.malloc(4 * SB_SIZE - 256)
+    sb = r.heap.sb_of(ptr)
+    r.span_acquire(ptr, n_sbs=3)
+    assert r.span_trim(ptr, 1) == 3               # follower pins 3 sbs
+    assert recovery.free_superblock_runs(r) == [(sb + 3, 1)]
+    assert r.span_lease_counts(ptr) == [2, 1, 1]
+    r.span_release(ptr, n_sbs=3)                  # follower leaves
+    assert recovery.free_superblock_runs(r) == [(sb + 1, 3)]
+    r.free(ptr)
+    assert recovery.free_superblock_runs(r) == [(sb, 4)]
+
+
+def test_repeat_trim_passes_held_length():
+    """Regression: a second trim while another holder pins the extent
+    must pass the caller's current held length — it releases only the
+    caller's own [n_keep, n_held) range, never the other holder's tail
+    lease (which previously got silently consumed and freed)."""
+    r = Ralloc(None, 8 * MB)
+    ptr = r.malloc(4 * SB_SIZE - 256)
+    sb = r.heap.sb_of(ptr)
+    r.span_acquire(ptr)                           # follower: full extent
+    assert r.span_trim(ptr, 3) == 4               # owner 4 → 3; span pinned
+    assert r.span_lease_counts(ptr) == [2, 2, 2, 1]
+    assert r.span_trim(ptr, 1, n_held=3) == 4     # owner 3 → 1
+    assert r.span_lease_counts(ptr) == [2, 1, 1, 1]
+    assert recovery.free_superblock_runs(r) == []  # follower pins it all
+    assert r.span_trim(ptr, 1, n_held=1) == 4     # no-op: nothing held past 1
+    r.free(ptr)                                   # follower's full release
+    assert r.span_lease_counts(ptr) == [1]        # owner's 1-sb lease left
+    assert recovery.free_superblock_runs(r) == [(sb + 1, 3)]
+    r.span_release(ptr, n_sbs=1)
+    assert recovery.free_superblock_runs(r) == [(sb, 4)]
+
+
+def test_concurrent_shared_releases_no_double_free():
+    """Regression (release race): concurrent releases of one shared span
+    must serialize the extent-read → decrement → free decision — a stale
+    extent would double-push tail superblocks onto the free list."""
+    import threading
+    r = Ralloc(None, 16 * MB)
+    for trial in range(8):
+        ptr = r.malloc(4 * SB_SIZE - 256)
+        sb = r.heap.sb_of(ptr)
+        leases = [4 if i % 2 == 0 else 1 + (i % 4) for i in range(8)]
+        for n in leases:
+            r.span_acquire(ptr, n_sbs=n)
+        errs = []
+
+        def rel(n):
+            try:
+                r.span_release(ptr, n_sbs=n)
+            except Exception as e:          # pragma: no cover
+                errs.append(repr(e))
+
+        ts = [threading.Thread(target=rel, args=(n,))
+              for n in leases + [4]]       # holders + the owner
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join()
+        assert not errs, errs
+        free = recovery.free_superblock_list(r)
+        assert len(free) == len(set(free)), "double-pushed superblock"
+        assert any(s <= sb < s + ln
+                   for s, ln in recovery.free_superblock_runs(r))
+        assert r._run_index.runs() == recovery.free_superblock_runs(r)
+
+
+def test_release_of_unleased_range_raises():
+    """Host strictness: releasing a range nobody leases raises (the
+    device mirrors this as a masked no-op)."""
+    r = Ralloc(None, 8 * MB)
+    ptr = r.malloc(3 * SB_SIZE - 256)
+    r.span_acquire(ptr, n_sbs=1)
+    r.free(ptr)                                   # owner out; tail freed
+    assert r.span_lease_counts(ptr) == [1]
+    with pytest.raises(ValueError):
+        r.span_release(ptr, n_sbs=0)              # empty range
+    r.span_release(ptr, n_sbs=3)                  # clamped to extent → frees
+    with pytest.raises(ValueError):
+        r.span_release(ptr, n_sbs=1)              # dead span raises
+
+
 def test_acquire_rejects_dead_and_interior_pointers():
     r = Ralloc(None, 8 * MB)
     ptr = r.malloc(2 * SB_SIZE - 256)
     with pytest.raises(ValueError):
         r.span_acquire(ptr + layout.SB_WORDS)     # continuation, not head
+    with pytest.raises(ValueError):
+        r.span_acquire(ptr, n_sbs=0)              # empty lease
     small = r.malloc(64)
     with pytest.raises(ValueError):
         r.span_acquire(small)                     # not a span at all
@@ -58,13 +193,13 @@ def test_acquire_rejects_dead_and_interior_pointers():
 
 
 def test_shared_span_superblocks_never_rehanded():
-    """While any holder remains, placement must treat the span's
-    superblocks as occupied — a fresh span may never land inside it."""
+    """While any holder remains, placement must treat the leased prefix
+    as occupied — a fresh span may never land inside it."""
     r = Ralloc(None, 8 * MB)
     ptr = r.malloc(3 * SB_SIZE - 256)
     sb = r.heap.sb_of(ptr)
     r.span_acquire(ptr)
-    r.free(ptr)                                   # refs 2 → 1
+    r.free(ptr)                                   # full lease remains
     for _ in range(4):
         q = r.malloc(2 * SB_SIZE - 256)
         qsb = r.heap.sb_of(q)
@@ -74,7 +209,8 @@ def test_shared_span_superblocks_never_rehanded():
 
 def test_recovery_counts_block_references_and_roots():
     """Reconstruction counts *references*, wherever the trace finds them:
-    a pptr stored inside a reachable block counts exactly like a root."""
+    a pptr stored inside a reachable block counts exactly like a root,
+    and each becomes a full-extent lease."""
     r = Ralloc(None, 8 * MB, sim_nvm=True)
     span = r.malloc(2 * SB_SIZE - 256)
     holder = r.malloc(64)                         # small block holding a pptr
@@ -89,7 +225,7 @@ def test_recovery_counts_block_references_and_roots():
     r2 = Ralloc(None, 8 * MB, sim_nvm=True, seed=9, backing=img)
     stats = r2.recover()
     sb = r2.heap.sb_of(span)
-    assert r2.spans.count(sb) == 2                # root + in-block reference
+    assert r2.leases.counts(sb) == [2, 2]         # root + in-block reference
     assert stats["shared_spans"] == 1
     def span_free(rr):
         return any(s <= sb < s + ln
@@ -101,13 +237,77 @@ def test_recovery_counts_block_references_and_roots():
     assert span_free(r2)
 
 
-def test_registry_defaults_preserve_unregistered_spans():
-    reg = SpanRegistry()
-    assert reg.count(7) == 1                      # unknown span = one owner
-    assert reg.release(7) == 0                    # a single free frees it
-    reg.reconstruct({3: 2, 5: 0})
-    assert reg.count(3) == 2
-    assert reg.count(5) == 1                      # floor: live ⇒ >= 1 ref
+def test_table_defaults_preserve_unregistered_spans():
+    tab = RangeLeaseTable()
+    assert tab.count(7) == 1                      # unknown span = one owner
+    tab.ensure(7, 2)                              # as Ralloc.free would
+    assert tab.release(7, 7, 9) == (0, 0)         # a single free frees it
+    tab.reconstruct({3: (2, 2), 5: (1, 0)})
+    assert tab.counts(3) == [2, 2]
+    assert tab.count(5) == 1                      # floor: live ⇒ >= 1 lease
+
+
+def test_table_interval_merge_split():
+    """White-box: prefix leases split intervals, equal-count neighbours
+    re-merge, zero suffixes truncate, head zero drops the span."""
+    tab = RangeLeaseTable()
+    tab.register(10, 4)
+    assert tab.intervals(10) == [(10, 14, 1)]
+    tab.acquire(10, 2)
+    assert tab.intervals(10) == [(10, 12, 2), (12, 14, 1)]
+    tab.acquire(10, 4)                            # full: counts equalize…
+    tab.release(10, 12, 14)                       # …then the tail releases
+    assert tab.intervals(10) == [(10, 12, 3), (12, 14, 1)]
+    # a full-range release zeroes the count-1 tail → suffix truncates
+    assert tab.release(10, 10, 14) == (2, 2)
+    assert tab.intervals(10) == [(10, 12, 2)]
+    with pytest.raises(LeaseUnderflow):
+        tab.release(10, 12, 14)                   # nothing there any more
+    assert tab.release(10, 10, 12) == (1, 2)
+    assert tab.release(10, 10, 12) == (0, 0)      # head zero → span gone
+    assert tab.extent(10) is None
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(1, 6),
+       st.lists(st.tuples(st.integers(0, 2), st.integers(1, 6)),
+                min_size=1, max_size=40))
+def test_table_matches_naive_count_model(ext, ops):
+    """Property: the interval table behaves exactly like a naive per-sb
+    count vector under random prefix acquires / range releases."""
+    tab = RangeLeaseTable()
+    tab.register(0, ext)
+    model = [1] * ext
+    for kind, k in ops:
+        if not model:
+            break
+        cur = len(model)
+        if kind == 0:                             # prefix acquire
+            n = min(k, cur)
+            for i in range(n):
+                model[i] += 1
+            tab.acquire(0, n)
+        else:                                     # range release [a, b)
+            a = (k - 1) % cur
+            b = min(a + kind, cur)
+            if a >= b or any(model[i] < 1 for i in range(a, b)):
+                with pytest.raises(LeaseUnderflow):
+                    tab.release(0, a, b)
+                continue
+            for i in range(a, b):
+                model[i] -= 1
+            if model[0] == 0:
+                model = []                        # head zero → span freed
+            else:
+                while model and model[-1] == 0:
+                    model.pop()                   # zero suffix truncates
+            head, new_ext = tab.release(0, a, b)
+            assert new_ext == len(model)
+            assert head == (model[0] if model else 0)
+        assert tab.counts(0) == model
+        # intervals are coalesced: no adjacent equal counts
+        iv = tab.intervals(0)
+        assert all(x[2] != y[2] for x, y in zip(iv, iv[1:]))
 
 
 # ------------------------------------------------------------- FreeRunIndex
