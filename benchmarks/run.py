@@ -101,6 +101,22 @@ def bench_sharedprompt(seed=0):
           flush=True)
 
 
+def bench_sharedprompt_recover(seed=0):
+    """Crash-and-recover over published prompts: the extra
+    ``sharedprompt_recover`` rows are ``name,sbs_reprefilled,peak_sbs``
+    (not us/ops) — with the durable prefix index (``+index``) recovery
+    re-publishes every prompt (zero re-prefill) and re-trims its lease;
+    without it every prompt re-prefills into a fresh span."""
+    for label, durable in (("ralloc+index", True), ("ralloc", False)):
+        a = fresh("ralloc")
+        ops, reprefill, peak = workloads.sharedprompt_recover(
+            a, seed=seed, durable_index=durable)
+        _row(f"sharedprompt_recover[{label}]", ops)
+        print(f"sharedprompt_recover_footprint[{label}],"
+              f"{reprefill:.0f},{peak:.0f}", flush=True)
+        a.close()
+
+
 def bench_prodcon(pairs=(1,), seed=0):
     for kind in KINDS:
         for p in pairs:
@@ -189,12 +205,27 @@ BENCHES: dict[str, dict] = {
         # ralloc leases; one non-refcounting baseline keeps the
         # fresh-span fallback exercised; the prefix_k run keeps the
         # range-lease tail-trim path on the smoke hot path too
+        # (a "+variant" suffix labels the row; the allocator is the
+        # part before the "+")
         "smoke": [("ralloc", lambda a, s: workloads.sharedprompt(
             a, iters=4, fanout=3, seed=s)),
-            ("ralloc", lambda a, s: workloads.sharedprompt(
+            ("ralloc+tailtrim", lambda a, s: workloads.sharedprompt(
                 a, iters=4, fanout=3, prefix_k=1, seed=s)),
             ("makalu_lite", lambda a, s: workloads.sharedprompt(
                 a, iters=4, fanout=3, seed=s))],
+    },
+    "sharedprompt_recover": {
+        "full": bench_sharedprompt_recover,
+        # both variants on the smoke path: the index round exercises
+        # publish→crash→re-publish→re-trim end to end, the no-index
+        # round keeps the re-prefill fallback alive
+        "smoke": [("ralloc+index",
+                   lambda a, s: workloads.sharedprompt_recover(
+                       a, iters=2, fanout=3, seed=s)),
+                  ("ralloc",
+                   lambda a, s: workloads.sharedprompt_recover(
+                       a, iters=2, fanout=3, seed=s,
+                       durable_index=False))],
     },
     "prodcon": {
         "full": bench_prodcon,
@@ -208,19 +239,38 @@ BENCHES: dict[str, dict] = {
 }
 
 
-def run_smoke(names: list[str], seed: int) -> int:
-    """One tiny round of every selected workload, fail-fast (CI tier-1)."""
+def run_smoke(names: list[str], seed: int,
+              json_path: str | None = None) -> int:
+    """One tiny round of every selected workload, fail-fast (CI tier-1).
+
+    ``json_path`` additionally writes the per-round results as JSON —
+    CI uploads it as a workflow artifact so the perf trajectory is
+    inspectable per-run without scraping logs."""
     failed = 0
+    results: list[dict] = []
+
+    def record(name, kind, ok, seconds, error=None, **extra):
+        nonlocal failed
+        if not ok:
+            failed += 1
+        results.append({"workload": name, "kind": kind, "ok": ok,
+                        "seconds": round(seconds, 3), "error": error,
+                        **extra})
+
     for name in names:
         for kind, fn in (BENCHES[name]["smoke"] or []):
-            a = fresh(kind, mb=64)
+            # "alloc+variant" labels distinct rounds of one allocator so
+            # the JSON rows stay distinguishable in the artifact
+            a = fresh(kind.split("+", 1)[0], mb=64)
             t0 = time.perf_counter()
             try:
                 fn(a, seed)
             except Exception as e:
-                failed += 1
+                record(name, kind, False, time.perf_counter() - t0,
+                       error=repr(e))
                 print(f"smoke[{name},{kind}] FAILED: {e!r}", flush=True)
             else:
+                record(name, kind, True, time.perf_counter() - t0)
                 print(f"smoke[{name},{kind}] ok "
                       f"({time.perf_counter() - t0:.2f}s)", flush=True)
             finally:
@@ -228,16 +278,43 @@ def run_smoke(names: list[str], seed: int) -> int:
     if "sharedprompt" in names:
         # sanity: ralloc's sharedprompt really shares (lease plumbing alive)
         a = fresh("ralloc", mb=64)
+        t0 = time.perf_counter()
         try:
             _, saved, _ = workloads.sharedprompt(a, iters=3, fanout=3,
                                                  seed=seed)
-            if saved < 1.0:
-                failed += 1
+            ok = saved >= 1.0
+            record("sharedprompt_sanity", "ralloc", ok,
+                   time.perf_counter() - t0, spans_saved_per_hit=saved)
+            if not ok:
                 print(f"smoke[sharedprompt,ralloc] FAILED: "
                       f"spans_saved_per_hit {saved} < 1.0 "
                       f"(span_acquire path dead)", flush=True)
         finally:
             a.close()
+    if "sharedprompt_recover" in names:
+        # sanity: the durable index really eliminates re-prefill — a
+        # regression to transient-only publishing fails the PR here
+        a = fresh("ralloc", mb=64)
+        t0 = time.perf_counter()
+        try:
+            _, reprefill, _ = workloads.sharedprompt_recover(
+                a, iters=2, fanout=3, seed=seed)
+            ok = reprefill == 0
+            record("sharedprompt_recover_sanity", "ralloc", ok,
+                   time.perf_counter() - t0, sbs_reprefilled=reprefill)
+            if not ok:
+                print(f"smoke[sharedprompt_recover,ralloc] FAILED: "
+                      f"{reprefill} sbs re-prefilled with the durable "
+                      f"index (publish→recover→re-publish path dead)",
+                      flush=True)
+        finally:
+            a.close()
+    if json_path:
+        import json
+        with open(json_path, "w") as f:
+            json.dump({"profile": "smoke", "seed": seed,
+                       "failed": failed, "results": results}, f, indent=2)
+        print(f"# smoke results written to {json_path}", flush=True)
     return 1 if failed else 0
 
 
@@ -253,6 +330,9 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--profile", choices=("full", "smoke"), default="full",
                     help="'smoke' = one tiny fail-fast round per workload "
                          "(what CI's tier-1 job runs)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="smoke only: also write per-round results as "
+                         "JSON (CI uploads it as a workflow artifact)")
     args = ap.parse_args(argv)
     if args.workloads in ("all", ""):
         names = list(BENCHES)
@@ -263,7 +343,7 @@ def main(argv: list[str] | None = None) -> int:
             ap.error(f"unknown workload(s): {', '.join(unknown)} "
                      f"(known: {', '.join(BENCHES)})")
     if args.profile == "smoke":
-        return run_smoke(names, args.seed)
+        return run_smoke(names, args.seed, json_path=args.json)
     print("name,us_per_call,derived")
     for name in names:
         BENCHES[name]["full"](seed=args.seed)

@@ -259,6 +259,111 @@ def sharedprompt(alloc, iters=30, span_k=3, fanout=4, prefix_k=None,
     return iters * fanout / dt, saved / max(hits, 1), peak
 
 
+def sharedprompt_recover(alloc, iters=4, span_k=3, fanout=3, prefix_k=1,
+                         seed=0, durable_index=True):
+    """Crash-and-recover over published prompts (durable prefix index,
+    ``core.prefix_index`` — ralloc only).
+
+    Three phases:
+
+      1. *serve* — each round a publisher reserves a ``span_k``-sb
+         prompt span, prefills it (one stamped+flushed word per
+         superblock models the prefill work), publishes its
+         ``prefix_k``-sb prefix — a durable index record when
+         ``durable_index``, a transient dict entry (plus the same
+         transient lease) otherwise — and roots itself (its page table);
+         the crash hits with every publisher still mid-decode.
+      2. *crash* — all transient state is lost; ``recover()`` rebuilds
+         the allocator from the durable image (with the index, recovery
+         re-trims each record's lease to the published prefix).
+      3. *re-serve* — ``fanout - 1`` requests arrive per prompt.  A
+         prompt whose key survives in the index is served by leasing the
+         published span: **zero re-prefill**.  A forgotten prompt
+         re-reserves and re-prefills a fresh span.  Publishers then
+         finish short (with the index the decode-ahead tail frees at
+         that instant; without it the whole span frees — and the work
+         was already re-done).
+
+    Returns ``(ops_per_sec, sbs_reprefilled, peak_watermark_sbs)``:
+    superblocks of prompt state recomputed after the crash, and the
+    high-water address-space footprint.
+    """
+    from repro.core.layout import SB_SIZE, SB_WORDS
+    from repro.core.prefix_index import (REC_BYTES, PrefixIndex,
+                                         hash_tokens)
+    r = alloc.r                         # ralloc-only (needs recover/roots)
+    idx = PrefixIndex(r) if durable_index else None
+    # symmetric warm-up: the record size class claims its superblock (and
+    # expansion batch) in BOTH variants, so the peak metric compares
+    # span traffic, not one-off class initialization
+    r.malloc(REC_BYTES)
+    size = span_k * SB_SIZE - 512
+    n = max(1, min(prefix_k, span_k))
+
+    def prefill(head, k):
+        for j in range(k):
+            r.write_word(head + j * SB_WORDS, 0x5EED + j)
+            alloc_flush(head + j * SB_WORDS)
+        r.fence()
+        return k
+
+    def alloc_flush(w):
+        if hasattr(r, "flush_range"):
+            r.flush_range(w, 1)
+
+    cache: dict[int, tuple[int, int]] = {}       # transient (dies at crash)
+    owners: list[tuple[int, int]] = []           # (root_idx, head)
+    peak = reprefilled = 0
+    t0 = time.perf_counter()
+    for it in range(iters):                      # ---- phase 1: serve
+        head = alloc.malloc(size)
+        assert head is not None
+        prefill(head, span_k)
+        key = hash_tokens([seed, it])
+        if idx is not None:
+            idx.publish(key, head, n_pages=n, lease_sbs=n)
+        else:
+            alloc.span_acquire(head, n)          # transient cache lease
+        cache[key] = (head, n)
+        r.set_root(it, head)                     # the publisher's page table
+        owners.append((it, head))
+        peak = max(peak, alloc.watermark_words() // SB_WORDS)
+
+    # ---- phase 2: crash (all transient state lost) + recovery
+    cache = {}
+    r.recover()                                  # re-trims index records
+    if idx is not None:
+        cache = {rec.key: (rec.span, rec.lease_sbs)
+                 for rec in idx.records()}
+
+    for it in range(iters):                      # ---- phase 3: re-serve
+        key = hash_tokens([seed, it])
+        hit = cache.get(key)
+        held = []
+        for _ in range(fanout - 1):
+            if hit is not None:
+                head, ls = hit
+                alloc.span_acquire(head, ls)     # cache hit: no re-prefill
+                held.append((head, ls))
+            else:
+                p = alloc.malloc(size)
+                assert p is not None
+                reprefilled += prefill(p, span_k)
+                held.append((p, None))
+        peak = max(peak, alloc.watermark_words() // SB_WORDS)
+        for p, ls in held:
+            if ls is None:
+                alloc.free(p)
+            else:
+                alloc.span_release(p, ls)
+    for root_i, head in owners:                  # publishers finish short
+        r.set_root(root_i, None)
+        alloc.free(head)
+    peak = max(peak, alloc.watermark_words() // SB_WORDS)
+    dt = time.perf_counter() - t0
+    return iters * fanout / dt, reprefilled, peak
+
+
 def prodcon(alloc, n_pairs=1, items=4000, size=64):
     """Producer/consumer via an M&S-style queue: producer allocates,
     consumer frees (paper's Prod-con)."""

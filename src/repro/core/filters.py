@@ -71,6 +71,26 @@ def tree_node_filter(reader, block_word, size_bytes):
             yield child, "tree_node"
 
 
+def prefix_index_filter(reader, block_word, size_bytes):
+    """Durable prefix-index record (core.prefix_index):
+    [next: pptr][span: pptr][key48][n_pages][lease_sbs].
+
+    Word 0 chains to the next record (typed recursion); word 1 is the
+    record's reference to the published span head — the mark pass counts
+    it exactly like a root, which is how the prefix cache's lease
+    survives a crash.  Words 2–4 are plain integers (the key is masked
+    to 48 bits so it can never carry the pptr tag), so the typed filter
+    and a conservative scan mark the identical live set.
+    """
+    nxt = pp.decode(block_word, reader.read_word(block_word))
+    if nxt is not None:
+        yield nxt, "prefix_index"
+    span = pp.decode(block_word + 1, reader.read_word(block_word + 1))
+    if span is not None:
+        yield span, None          # span head: traced conservatively
+
+
 def register_stock_filters(reg: FilterRegistry) -> None:
     reg.register("stack_node", stack_node_filter)
     reg.register("tree_node", tree_node_filter)
+    reg.register("prefix_index", prefix_index_filter)

@@ -221,6 +221,24 @@ def sweep(cfg: ArenaConfig, persistent: dict, marked,
     )
 
 
+def live_record_mask(cfg: ArenaConfig, marked, offs):
+    """Which block offsets survived the sweep (their slots are marked).
+
+    The serving prefix store (``serving.prefix_store``) filters its
+    durable record chain through this after recovery: an index record
+    whose root swing never became durable is unreachable, stays unmarked,
+    and is dropped here — the vectorized mirror of the host GC freeing an
+    unreachable ``core.prefix_index`` record.  ``offs`` may contain -1
+    (null) entries; they come back False.
+    """
+    offs = jnp.asarray(offs, jnp.int32)
+    S = num_slots(cfg)
+    slots = jnp.where(offs >= 0, slot_of(cfg, offs), S)
+    padded = jnp.concatenate([jnp.asarray(marked, bool),
+                              jnp.zeros((1,), bool)])
+    return (offs >= 0) & padded[slots]
+
+
 def recover(cfg: ArenaConfig, persistent: dict, ref_table,
             max_iter: int = 64) -> tuple[AllocState, jax.Array]:
     """Full vectorized recovery (mark + sweep + span-refcount rebuild).

@@ -1,0 +1,238 @@
+"""Durable prefix index: crash-surviving prompt-cache keys (host side).
+
+The prefix cache (serving engine / sharedprompt workloads) is the
+footprint lever of this codebase, yet before this module it was entirely
+transient: a crash forgot every published prompt, and recovery
+conservatively rebuilt each surviving reference as a *full-extent* span
+lease, resurrecting decode-ahead slack until the lanes re-finished.
+
+This module applies the paper's thesis (§4.5: persist just enough for
+offline GC to reconstruct the rest) to the cache itself.  Each published
+prompt gets one small **index record** — an ordinary allocator block —
+holding:
+
+    word 0   next record        (self-relative pptr, PPTR_NULL ends)
+    word 1   span head          (self-relative pptr to the published span)
+    word 2   key                (48-bit prompt hash — see ``hash_tokens``)
+    word 3   page count         (full prompt pages published)
+    word 4   lease length       (page-derived superblock count of the
+                                 cache's prefix lease)
+
+Records are linked from a dedicated root (Makalu-style roots, §4.5) and
+traced precisely by a registered filter function
+(``filters.prefix_index_filter``, §4.5.1) instead of conservatively.
+The record's span pptr *is* the cache's durable reference: the existing
+mark pass counts it like any other reference, so a published span
+survives a crash even when no lane roots it, and the cache's lease comes
+back from reachability alone.
+
+Persist-boundary discipline (the only new durable writes, identical in
+spirit to ``Ralloc._trim_tail``):
+
+  * ``publish``: transient ``span_acquire`` first, then a fence (prior
+    application flushes of the published contents become durable before
+    the index can claim the prefix exists), then the record words are
+    written + flushed + fenced, and only then does the root swing (its
+    own flush + fence).  A crash anywhere in that window recovers to one
+    of two consistent states: *unpublished-but-leased* (the record never
+    became reachable — GC frees the block and the lease count falls back
+    to the durable roots) or *published* (the record re-surfaces and the
+    prefix is re-published).  A dangling or torn record is unreachable
+    by construction.
+  * ``remove``: the record is durably unlinked *before* its transient
+    lease is released and its block freed — a linked record always
+    implies a live span.
+
+Recovery-time **re-trim**: references rebuild as full-extent leases
+(lease lengths are transient), but an index record knows its page-derived
+lease length — ``retrim_after_recovery`` shrinks each record's
+reconstructed lease back to the recorded superblock count, freeing the
+decode-ahead tail immediately after recovery instead of waiting for the
+reserver to re-finish.  ``recovery.recover`` invokes this automatically
+for every root registered with the ``"prefix_index"`` type.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator
+
+from . import pptr as pp
+from .layout import MAX_ROOTS, WORD
+
+TYPENAME = "prefix_index"
+REC_WORDS = 5
+REC_BYTES = REC_WORDS * WORD
+#: default root slot — the top of the root table, far from the low slots
+#: tests and the crash harness hand out sequentially.
+PREFIX_INDEX_ROOT = MAX_ROOTS - 1
+
+_KEY_MASK = (1 << 48) - 1
+
+
+def hash_tokens(tokens) -> int:
+    """Deterministic 48-bit FNV-1a over a token sequence.
+
+    48 bits on purpose: the stored key word can never carry the pptr tag
+    pattern in its top 16 bits, so a conservative scan of a record marks
+    exactly the same targets as the typed filter (pinned by test).
+    Python's builtin ``hash`` is salted per process and useless across a
+    crash; this one is stable.
+    """
+    h = 0xCBF29CE484222325
+    for t in tokens:
+        h ^= int(t) & 0xFFFFFFFFFFFFFFFF
+        h = (h * 0x100000001B3) & 0xFFFFFFFFFFFFFFFF
+    return h & _KEY_MASK
+
+
+@dataclasses.dataclass(frozen=True)
+class PrefixRecord:
+    """One decoded index record."""
+    ptr: int                 # record block word address
+    key: int                 # 48-bit prompt hash
+    span: int | None         # span head block address (None = torn/corrupt)
+    n_pages: int             # published whole pages
+    lease_sbs: int           # the cache lease's superblock count
+
+
+def iter_records(r, slot: int = PREFIX_INDEX_ROOT) -> Iterator[PrefixRecord]:
+    """Walk the record chain from root ``slot`` (cycle-safe)."""
+    rec = r.heap.get_root(slot)
+    seen: set[int] = set()
+    while rec is not None and rec not in seen:
+        seen.add(rec)
+        yield PrefixRecord(
+            ptr=rec,
+            key=int(r.read_word(rec + 2)) & _KEY_MASK,
+            span=pp.decode(rec + 1, r.read_word(rec + 1)),
+            n_pages=int(r.read_word(rec + 3)),
+            lease_sbs=int(r.read_word(rec + 4)),
+        )
+        rec = pp.decode(rec, r.read_word(rec))
+
+
+def retrim_after_recovery(r, slot: int = PREFIX_INDEX_ROOT
+                          ) -> tuple[int, int]:
+    """Shrink each surviving record's reconstructed full-extent lease to
+    its recorded superblock count; returns ``(records, spans_trimmed)``.
+
+    Runs after ``RangeLeaseTable.reconstruct``: every durable reference
+    (roots and index records alike) came back as a full-extent lease, so
+    per record exactly one full-extent lease exists to re-trim.  Tail
+    superblocks nobody else leases free right here — the post-crash
+    mirror of the owner's finish-short trim.
+    """
+    n = trimmed = 0
+    for rec in iter_records(r, slot):
+        n += 1
+        if rec.span is None or rec.lease_sbs < 1:
+            continue
+        try:
+            ext = r.span_extent(rec.span)
+        except ValueError:          # defensive: never reachable by design
+            continue
+        if rec.lease_sbs < ext:
+            r.span_trim(rec.span, rec.lease_sbs)
+            trimmed += 1
+    return n, trimmed
+
+
+class PrefixIndex:
+    """Host-side durable prefix index over one ``Ralloc`` heap."""
+
+    def __init__(self, r, slot: int = PREFIX_INDEX_ROOT):
+        self.r = r
+        self.slot = slot
+        # (re)register the typed root: filter functions are re-registered
+        # every execution, never persisted (paper §4.5.1)
+        r.get_root(slot, TYPENAME)
+
+    # ----------------------------------------------------------------- reads
+    def records(self) -> list[PrefixRecord]:
+        return list(iter_records(self.r, self.slot))
+
+    def lookup(self, key: int) -> PrefixRecord | None:
+        key &= _KEY_MASK
+        for rec in iter_records(self.r, self.slot):
+            if rec.key == key:
+                return rec
+        return None
+
+    # ---------------------------------------------------------------- writes
+    def publish(self, key: int, span_ptr: int, n_pages: int,
+                lease_sbs: int) -> int | None:
+        """Durably publish ``span_ptr``'s prefix under ``key``.
+
+        Acquires the cache's transient prefix lease first (the durable
+        record must never outnumber the transient counts it shadows),
+        fences, then appends the record with the ordering documented in
+        the module docstring.  Returns the record address, or None when
+        the heap cannot place a record block (the publish then stays
+        transient-only — a safe degradation, the span is simply forgotten
+        at the next crash).
+        """
+        r = self.r
+        if lease_sbs < 1:
+            raise ValueError(f"publish with an empty lease ({lease_sbs} sbs)")
+        r.span_acquire(span_ptr, lease_sbs)
+        # persist boundary: published contents (the application flushed
+        # them) become durable before the index can claim they exist
+        r.fence()
+        rec = r.malloc(REC_BYTES)
+        if rec is None:
+            r.span_release(span_ptr, lease_sbs)
+            return None
+        head = r.heap.get_root(self.slot)
+        r.write_word(rec, pp.PPTR_NULL if head is None
+                     else pp.encode(rec, head))
+        r.write_word(rec + 1, pp.encode(rec + 1, span_ptr))
+        r.write_word(rec + 2, int(key) & _KEY_MASK)
+        r.write_word(rec + 3, int(n_pages))
+        r.write_word(rec + 4, int(lease_sbs))
+        r.flush_range(rec, REC_WORDS)
+        r.fence()                    # record durable BEFORE it is reachable
+        r.set_root(self.slot, rec, TYPENAME)     # atomic swing (flush+fence)
+        return rec
+
+    def remove(self, key: int) -> bool:
+        """Durably unlink the record for ``key``, release the cache's
+        transient lease, and free the record block.  Returns False when
+        no record carries the key."""
+        r = self.r
+        key &= _KEY_MASK
+        prev = None
+        rec = r.heap.get_root(self.slot)
+        seen: set[int] = set()
+        while rec is not None and rec not in seen:
+            seen.add(rec)
+            nxt = pp.decode(rec, r.read_word(rec))
+            if (int(r.read_word(rec + 2)) & _KEY_MASK) == key:
+                # unlink durable BEFORE the lease drops: a linked record
+                # must always imply a live span
+                if prev is None:
+                    r.set_root(self.slot, nxt, TYPENAME)
+                else:
+                    r.write_word(prev, pp.PPTR_NULL if nxt is None
+                                 else pp.encode(prev, nxt))
+                    r.flush_range(prev, 1)
+                    r.fence()
+                span = pp.decode(rec + 1, r.read_word(rec + 1))
+                lease = int(r.read_word(rec + 4))
+                if span is not None and lease >= 1:
+                    r.span_release(span, lease)
+                r.free(rec)
+                return True
+            prev, rec = rec, nxt
+        return False
+
+    def clear(self) -> int:
+        """Remove every record (reverse of all publishes); returns the
+        number removed."""
+        n = 0
+        while True:
+            recs = self.records()
+            if not recs:
+                return n
+            self.remove(recs[0].key)
+            n += 1

@@ -213,6 +213,23 @@ def recover(r) -> dict:
                           if sb in large_heads})
     r._run_index.rebuild(free_superblock_list(r))
 
+    # precise lease re-trim (core.prefix_index): every reference above
+    # came back as a conservative full-extent lease, but a durable
+    # prefix-index record knows the page-derived length of the lease it
+    # shadows — shrink each record's lease back to it, freeing the
+    # decode-ahead tail *now* instead of when the reserver re-finishes.
+    # The trims write persistent records (_trim_tail) before the final
+    # drain below, so the recovered image is already re-trimmed.
+    index_records = index_retrims = 0
+    index_slots = sorted(i for i, t in r._root_filters.items()
+                         if t == "prefix_index")
+    if index_slots:
+        from .prefix_index import retrim_after_recovery
+        for slot in index_slots:
+            n, k = retrim_after_recovery(r, slot)
+            index_records += n
+            index_retrims += k
+
     # step 10: write back all three regions, fence
     m.drain()
     m.fence()
@@ -221,6 +238,8 @@ def recover(r) -> dict:
         "reachable_blocks": len(visited),
         "free_superblocks": n_free_sbs,
         "free_runs": len(free_superblock_runs(r)),
+        "index_records": index_records,
+        "index_retrims": index_retrims,
         "partial_superblocks": n_partial,
         "full_superblocks": n_full,
         "large_blocks": len(large_heads),

@@ -29,8 +29,10 @@ import numpy as np
 
 from ..core import jax_alloc as ja
 from ..core import jax_recovery as jr
+from ..core.prefix_index import hash_tokens
 from ..models.config import ModelConfig
 from . import decode as dec
+from .prefix_store import PrefixStore
 
 PAGE_CLS = 0
 
@@ -59,7 +61,10 @@ class ServingEngine:
         self.acfg = ja.ArenaConfig(num_sbs=num_sbs, sb_words=pages_per_sb,
                                    class_words=(1,),
                                    cache_cap=max(64, 2 * lanes))
-        self.astate = ja.init_state(self.acfg, max_roots=lanes)
+        # root slots: one per lane (page tables) + one for the durable
+        # prefix index's record chain (serving.prefix_store)
+        self._index_root = lanes
+        self.astate = ja.init_state(self.acfg, max_roots=lanes + 1)
         self._alloc = jax.jit(functools.partial(ja.alloc, cfg=self.acfg,
                                                 cls=PAGE_CLS))
         self._free = jax.jit(functools.partial(ja.free, cfg=self.acfg,
@@ -70,6 +75,8 @@ class ServingEngine:
                                                      cfg=self.acfg))
         self._acquire_span = jax.jit(functools.partial(ja.acquire_span,
                                                        cfg=self.acfg))
+        self._trim_large = jax.jit(functools.partial(ja.trim_large,
+                                                     cfg=self.acfg))
         # lanes holding a contiguous multi-superblock page span (oversized
         # prompts): lane -> (span head offset, n_pages); the owner holds a
         # full-extent lease released via free_large — unleased tail
@@ -94,7 +101,20 @@ class ServingEngine:
         # enforce the paper's "no block used for two purposes" discipline —
         # a shared page returns to the allocator only at refcount zero
         self.page_refs: dict[int, int] = {}
-        self._prefix_cache: dict[tuple, tuple] = {}   # prompt -> (pages, len)
+        # the prefix cache itself is transient (rebuilt after a crash);
+        # keys are 48-bit prompt hashes (core.prefix_index.hash_tokens) so
+        # a durable index record can name its entry across a crash
+        self._prefix_cache: dict[int, tuple] = {}    # hash -> cache entry
+        # exact published token sequences (transient): a hit must never
+        # serve another prompt's KV on a 48-bit hash collision, so hits
+        # on entries published THIS process verify token equality.  The
+        # durable record stores only the hash, so entries re-published by
+        # recovery match by hash alone — the documented residual.
+        self._prefix_tokens: dict[int, tuple] = {}   # hash -> exact tokens
+        # durable prefix index: span-path entries additionally own one
+        # record block reachable from roots[_index_root], which is what
+        # lets crash_and_recover re-publish them instead of re-prefilling
+        self.prefix_store = PrefixStore(jr.num_slots(self.acfg))
 
     # ------------------------------------------------------------- requests
     def add_request(self, prompt: list[int],
@@ -119,7 +139,12 @@ class ServingEngine:
         table_width = int(self.dstate["block_table"].shape[1])
         n_prompt_pages = min(-(-len(prompt) // self.cfg.page_size),
                              table_width)
-        hit = self._prefix_cache.get(tuple(prompt)) if share_prefix else None
+        khash = hash_tokens(prompt)
+        hit = self._prefix_cache.get(khash) if share_prefix else None
+        if hit is not None:
+            known = self._prefix_tokens.get(khash)
+            if known is not None and known != tuple(prompt):
+                hit = None               # hash collision: treat as a miss
         if (self.cfg.attn_layers > 0 and hit is None
                 and n_prompt_pages > self.acfg.sb_words):
             n_ahead = min(-(-self.max_seq // self.cfg.page_size), table_width)
@@ -173,6 +198,14 @@ class ServingEngine:
         bt[lane, :n_pages] = off + np.arange(n_pages, dtype=np.int32)
         self.dstate["block_table"] = jnp.asarray(bt)
 
+    def _alloc_block(self) -> int:
+        """One arena block (a prefix-index record slot); -1 when full."""
+        need = np.zeros((self.lanes,), bool)
+        need[0] = True
+        self.astate, offs = self._alloc(state=self.astate,
+                                        need=jnp.asarray(need))
+        return int(np.asarray(offs)[0])
+
     def publish_prefix(self, lane: int) -> None:
         """Register this lane's fully-processed prompt as a shared prefix.
 
@@ -208,7 +241,7 @@ class ServingEngine:
             full = min(full, cover)
             if full == 0:
                 return
-            key = tuple(s.tokens[:full * page])
+            key = hash_tokens(s.tokens[:full * page])
             prev = self._prefix_cache.get(key)
             if prev is not None:
                 # already published (the cache holds exactly one reference
@@ -223,9 +256,24 @@ class ServingEngine:
             self.astate, _ = self._acquire_span(
                 state=self.astate, off=jnp.int32(off),
                 n_sbs=jnp.int32(lease_sbs))
+            next_tok = int(self.cur_tokens[lane])
             self._prefix_cache[key] = (
                 "span", off, n_span, full, full * page, kv[:full].copy(),
-                int(self.cur_tokens[lane]), lease_sbs)
+                next_tok, lease_sbs)
+            self._prefix_tokens[key] = tuple(s.tokens[:full * page])
+            # durable index record (serving.prefix_store): one ordinary
+            # arena block, fields before the root swing — after a crash
+            # the record re-publishes this entry and re-trims the lease,
+            # so the prefix is hittable without re-prefill.  A full arena
+            # degrades safely: the publish stays transient-only.
+            rec = self._alloc_block()
+            if rec >= 0:
+                self.prefix_store.append(
+                    rec, key=key, span=off, n_pages=full,
+                    span_pages=n_span, next_tok=next_tok,
+                    lease_sbs=lease_sbs)
+                self.astate = ja.set_root(self.astate, self._index_root,
+                                          jnp.int32(rec))
             return
         bt = np.asarray(self.dstate["block_table"][lane])
         if pos != full * page or pos != len(s.tokens) - (
@@ -238,21 +286,39 @@ class ServingEngine:
             # +1: the prefix cache itself holds a reference, so the pages
             # survive the publishing session's eviction
             self.page_refs[p] = self.page_refs.get(p, 1) + 1
-        self._prefix_cache[tuple(s.tokens[:full * page])] = (
+        # page-path entries stay transient-only: their sharing is per-page
+        # refcounts, not a span lease, and the durable index records only
+        # span-backed prefixes (a crash forgets these — they re-prefill)
+        pkey = hash_tokens(s.tokens[:full * page])
+        self._prefix_cache[pkey] = (
             "pages", pages, full * page, kv[:full].copy(),
             int(self.cur_tokens[lane]))
+        self._prefix_tokens[pkey] = tuple(s.tokens[:full * page])
 
     def drop_prefix_cache(self) -> None:
         """Release the cache's references; fully-unreferenced pages (and
         spans whose last holder was the cache) free."""
-        for entry in self._prefix_cache.values():
+        for key, entry in list(self._prefix_cache.items()):
             if entry[0] == "span":
+                # durable unlink FIRST (a linked record must always imply
+                # a live span — core.prefix_index ordering), then the
+                # lease release, then the record block frees
+                rec = self.prefix_store.remove(key)
+                if rec is not None:
+                    self.astate = ja.set_root(self.astate, self._index_root,
+                                              jnp.int32(self.prefix_store.head))
                 # free_large releases the cache's prefix lease: a
                 # transient decrement while holders remain, the actual
                 # free of whatever range the cache was last to lease
                 self.astate = self._free_large(state=self.astate,
                                                off=jnp.int32(entry[1]),
                                                n_sbs=jnp.int32(entry[7]))
+                if rec is not None:
+                    offs = np.full((self.acfg.cache_cap,), -1, np.int32)
+                    offs[0] = rec.off
+                    self.astate = self._free(state=self.astate,
+                                             offs=jnp.asarray(offs),
+                                             mask=jnp.asarray(offs >= 0))
                 continue
             pages = entry[1]
             stale = []
@@ -269,6 +335,7 @@ class ServingEngine:
                                          offs=jnp.asarray(offs),
                                          mask=jnp.asarray(offs >= 0))
         self._prefix_cache.clear()
+        self._prefix_tokens.clear()
 
     # ------------------------------------------------------------------ step
     def step(self) -> dict[int, int]:
@@ -384,7 +451,13 @@ class ServingEngine:
         Lanes sharing a span root at the same head page, so their
         reference lists *accumulate* into that slot's row (the row is
         widened as needed) — losing one lane's refs would sweep its
-        lazily-allocated decode pages out from under it."""
+        lazily-allocated decode pages out from under it.
+
+        Prefix-index records contribute their own rows (the record
+        type's filter function): ``[next record, span head]`` — the mark
+        pass traces the chain precisely and counts the record→span
+        reference like a lane root, which is what keeps a published span
+        alive across a crash with no lane rooted on it."""
         S = jr.num_slots(self.acfg)
         R = int(self.dstate["block_table"].shape[1])
         bt = np.asarray(self.dstate["block_table"])
@@ -396,6 +469,8 @@ class ServingEngine:
             if pages.size == 0:
                 continue
             rows.setdefault(int(pages[0]), []).extend(pages[1:].tolist())
+        for rec_off, tgts in self.prefix_store.ref_rows().items():
+            rows.setdefault(rec_off, []).extend(tgts)
         width = max([R] + [len(v) for v in rows.values()])
         refs = np.full((S, width), -1, np.int32)
         for root, tgts in rows.items():
@@ -404,21 +479,30 @@ class ServingEngine:
 
     def crash_and_recover(self) -> dict:
         """Simulate losing all transient allocator state, then rebuild it
-        from (persistent fields + session page tables) via vectorized GC.
+        from (persistent fields + session page tables + the durable
+        prefix index) via vectorized GC.
 
-        Engine-side sharing metadata is transient too and comes back the
-        same way the allocator's span refcounts do — from what the roots
-        can see: the prefix cache (and the references it held) does not
-        survive, per-page refcounts are recounted from live block tables,
-        and span refcounts are reconstructed inside ``jr.recover`` as the
-        number of root-reachable references to each span head."""
+        Engine-side sharing metadata is transient and comes back from
+        what the roots can see: per-page refcounts are recounted from
+        live block tables and span leases are reconstructed inside
+        ``jr.recover`` as the number of root-reachable references to each
+        span head — conservatively *full-extent*, because lease lengths
+        are transient.  The durable prefix index is the exception the
+        tentpole adds: surviving records re-publish their entries into
+        the rebuilt cache (hittable without re-prefill) and every lease
+        whose true length IS recorded — the cache's record lease and each
+        live sharer's prefix lease — is re-trimmed to its page-derived
+        superblock count, so the decode-ahead tail frees immediately
+        after recovery instead of waiting for the reserver to
+        re-finish."""
         persistent = ja.persistent_snapshot(self.astate)
-        roots = np.full((self.lanes,), -1, np.int32)
+        roots = np.full((self.lanes + 1,), -1, np.int32)
         bt = np.asarray(self.dstate["block_table"])
         for lane, s in self.sessions.items():
             pages = bt[lane][bt[lane] >= 0]
             if pages.size:
                 roots[lane] = int(pages[0])
+        roots[self._index_root] = self.prefix_store.head
         persistent["roots"] = jnp.asarray(roots)
         new_state, marked = jr.recover(self.acfg, persistent,
                                        jnp.asarray(self.ref_table()))
@@ -431,7 +515,10 @@ class ServingEngine:
         # (reconstructed inside jr.recover) and finish() never routes them
         # through the per-page free, so a per-page count would go stale
         # and poison the offset after the span frees and is reallocated.
+        # (Exact token sequences die with the cache: re-published entries
+        # are named by the record's hash alone.)
         self._prefix_cache.clear()
+        self._prefix_tokens.clear()
         spans = list(self.large_spans.values()) + \
             [(off, n_backed) for off, n_backed, _ in
              self.shared_spans.values()]
@@ -444,5 +531,38 @@ class ServingEngine:
                     continue
                 counts[p] = counts.get(p, 0) + 1
         self.page_refs = {p: c for p, c in counts.items() if c > 1}
+        # re-publish surviving index records into the rebuilt cache and
+        # re-trim each record's reconstructed full-extent lease to its
+        # recorded superblock count (a record whose root swing never
+        # became durable is unmarked — pruned, exactly like the host GC
+        # frees an unreachable core.prefix_index record)
+        recs = self.prefix_store.walk()
+        live = jr.live_record_mask(self.acfg, marked,
+                                   np.asarray([r.off for r in recs]
+                                              + [-1], np.int32))
+        survivors = self.prefix_store.prune(np.asarray(live)[:len(recs)])
+        page = self.cfg.page_size
+        for rec in survivors:
+            # a fully-processed prompt page p holds positions
+            # p*page .. p*page+page-1 — kv_pos rebuilds deterministically
+            kvp = np.arange(rec.n_pages * page,
+                            dtype=np.int32).reshape(rec.n_pages, page)
+            self._prefix_cache[rec.key] = (
+                "span", rec.span, rec.span_pages, rec.n_pages,
+                rec.n_pages * page, kvp, rec.next_tok, rec.lease_sbs)
+            self.astate, _ = self._trim_large(
+                state=self.astate, off=jnp.int32(rec.span),
+                n_keep=jnp.int32(rec.lease_sbs), n_held=jnp.int32(-1))
+        self.astate = ja.set_root(self.astate, self._index_root,
+                                  jnp.int32(self.prefix_store.head))
+        # live sharers' prefix leases were also rebuilt full-extent;
+        # their true lengths survive in shared_spans — re-trim them too,
+        # so the post-recovery lease vector equals the pre-crash one
+        for lane, (off, _n_backed, lease_sbs) in self.shared_spans.items():
+            if lane in self.sessions and not self.sessions[lane].done:
+                self.astate, _ = self._trim_large(
+                    state=self.astate, off=jnp.int32(off),
+                    n_keep=jnp.int32(lease_sbs), n_held=jnp.int32(-1))
         return {"marked": int(np.asarray(marked).sum()),
-                "live_before": live_before, "live_after": live_after}
+                "live_before": live_before, "live_after": live_after,
+                "index_records": len(survivors)}

@@ -1,0 +1,161 @@
+"""Durable prefix store: the serving engine's device-side prefix index.
+
+Device mirror of ``core.prefix_index``.  The engine's prefix cache keyed
+transient host objects by prompt tuple; everything in it died with a
+crash, so recovery could only rebuild conservative full-extent span
+leases and every published prompt had to be re-prefilled.  The store
+persists the minimum that lets ``crash_and_recover`` rebuild the rest:
+
+  * each published prompt owns one **record block** — an ordinary arena
+    block (``PAGE_CLS``), so the record is reachable/traceable/sweepable
+    exactly like a KV page;
+  * the record *fields* live in a durable sidecar array (device
+    consumers own typed arrays rather than a raw byte heap — see
+    ``core.jax_recovery``'s module docstring), indexed by the record's
+    block offset:
+
+        F_NEXT        next record block offset (-1 ends the chain)
+        F_SPAN        published span head offset
+        F_KEY         48-bit prompt hash (``core.prefix_index.hash_tokens``)
+        F_PAGES       full prompt pages published
+        F_SPAN_PAGES  pages the span backed at publish time
+        F_TOK         the sampled continuation token at the prompt
+                      boundary (part of the published prefix)
+        F_LEASE       the cache lease's superblock count
+
+  * the chain head lives in a dedicated allocator root
+    (``ServingEngine._index_root``), and the engine's ``ref_table`` adds
+    one row per record — ``[next record, span head]`` — which is the
+    record type's *filter function* in the vectorized recovery model:
+    the mark pass traces records precisely, and ``span_ref_counts``
+    counts the record→span reference exactly like a lane root, so a
+    published span survives a crash even when no lane roots it.
+
+Durability ordering mirrors the host (``core.prefix_index``): fields are
+written before the chain head swings, and removal unlinks before the
+lease is released — a linked record always implies a live span.  After
+recovery the engine walks the chain (filtered through
+``jax_recovery.live_record_mask``), re-publishes each record into the
+rebuilt cache, and re-trims the record's reconstructed full-extent lease
+to ``F_LEASE`` superblocks (``trim_large``), freeing the decode-ahead
+tail immediately.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+F_NEXT, F_SPAN, F_KEY, F_PAGES, F_SPAN_PAGES, F_TOK, F_LEASE = range(7)
+REC_FIELDS = 7
+
+
+@dataclasses.dataclass(frozen=True)
+class StoreRecord:
+    """One decoded store record."""
+    off: int                 # record block offset (the record id)
+    key: int                 # 48-bit prompt hash
+    span: int                # span head offset
+    n_pages: int             # published whole pages
+    span_pages: int          # pages the span backed at publish time
+    next_tok: int            # sampled continuation at the prompt boundary
+    lease_sbs: int           # the cache lease's superblock count
+
+
+class PrefixStore:
+    """Durable record table + chain head for one device arena.
+
+    ``words`` and ``head`` are the durable state (they survive a crash
+    like the decode state's block tables do); the engine mirrors
+    ``head`` into its dedicated allocator root so the mark pass starts
+    from it.
+    """
+
+    def __init__(self, num_slots: int):
+        self.words = np.full((num_slots, REC_FIELDS), -1, np.int64)
+        self.head = -1
+
+    # ---------------------------------------------------------------- reads
+    def walk(self) -> list[StoreRecord]:
+        """Decode the chain from ``head`` (cycle-safe)."""
+        out: list[StoreRecord] = []
+        rec, seen = self.head, set()
+        while rec >= 0 and rec not in seen:
+            seen.add(rec)
+            w = self.words[rec]
+            out.append(StoreRecord(
+                off=rec, key=int(w[F_KEY]), span=int(w[F_SPAN]),
+                n_pages=int(w[F_PAGES]), span_pages=int(w[F_SPAN_PAGES]),
+                next_tok=int(w[F_TOK]), lease_sbs=int(w[F_LEASE])))
+            rec = int(w[F_NEXT])
+        return out
+
+    def ref_rows(self) -> dict[int, list[int]]:
+        """Per-record reference lists for the engine's ``ref_table`` —
+        the record type's filter-function output: next record + span."""
+        rows: dict[int, list[int]] = {}
+        for rec in self.walk():
+            tgts = [t for t in (int(self.words[rec.off][F_NEXT]), rec.span)
+                    if t >= 0]
+            rows[rec.off] = tgts
+        return rows
+
+    # --------------------------------------------------------------- writes
+    def append(self, rec_off: int, *, key: int, span: int, n_pages: int,
+               span_pages: int, next_tok: int, lease_sbs: int) -> None:
+        """Link a freshly allocated record block at the chain head.
+
+        Fields first, head swing last — the durability ordering the host
+        index fences around; a crash between the two leaves the record
+        unreachable and the sweep frees its block.
+        """
+        self.words[rec_off] = (self.head, span, int(key), int(n_pages),
+                               int(span_pages), int(next_tok),
+                               int(lease_sbs))
+        self.head = rec_off
+
+    def remove(self, key: int) -> StoreRecord | None:
+        """Unlink the record for ``key``; returns it (the caller releases
+        the span lease and frees the record block *after* the unlink)."""
+        prev, rec, seen = -1, self.head, set()
+        while rec >= 0 and rec not in seen:
+            seen.add(rec)
+            w = self.words[rec]
+            nxt = int(w[F_NEXT])
+            if int(w[F_KEY]) == int(key):
+                out = StoreRecord(
+                    off=rec, key=int(w[F_KEY]), span=int(w[F_SPAN]),
+                    n_pages=int(w[F_PAGES]),
+                    span_pages=int(w[F_SPAN_PAGES]),
+                    next_tok=int(w[F_TOK]), lease_sbs=int(w[F_LEASE]))
+                if prev < 0:
+                    self.head = nxt
+                else:
+                    self.words[prev][F_NEXT] = nxt
+                self.words[rec] = -1
+                return out
+            prev, rec = rec, nxt
+        return None
+
+    def prune(self, live_mask) -> list[StoreRecord]:
+        """Drop records whose blocks the sweep did not mark (their root
+        swing never became durable); returns the surviving records.
+
+        ``live_mask`` is ``jax_recovery.live_record_mask(cfg, marked,
+        [r.off for r in walk()])`` — by construction an unreachable
+        record can only sit at the chain head, but pruning the whole walk
+        keeps a corrupt image from resurrecting stale entries.
+        """
+        recs = self.walk()
+        live = np.asarray(live_mask, bool)
+        keep = [r for r, ok in zip(recs, live) if ok]
+        for r, ok in zip(recs, live):
+            if not ok:
+                self.words[r.off] = -1
+        self.head = keep[0].off if keep else -1
+        for a, b in zip(keep, keep[1:]):
+            self.words[a.off][F_NEXT] = b.off
+        if keep:
+            self.words[keep[-1].off][F_NEXT] = -1
+        return keep

@@ -43,10 +43,12 @@ import numpy as np
 from repro.core import layout, recovery
 from repro.core.layout import (D_BLOCK_SIZE, D_SIZE_CLASS, LARGE_CLASS,
                                LARGE_CONT, SB_SIZE)
+from repro.core.prefix_index import PrefixIndex
 from repro.core.ralloc import Ralloc
 
 MB = 1 << 20
 SENTINEL = 0xC0DE0000
+KEY0 = 0x51A5E0000
 
 
 def record_persist_boundaries(r: Ralloc) -> list[np.ndarray]:
@@ -74,13 +76,14 @@ def dedup_images(snaps: list[np.ndarray]) -> list[np.ndarray]:
     return out
 
 
-def run_host_trace(r: Ralloc, ops) -> list[tuple[int, int, int, int]]:
-    """Replay a span alloc/acquire/trim/release interleaving on ``r``.
+def run_host_trace(r: Ralloc, ops, idx: PrefixIndex | None = None
+                   ) -> list[tuple[int, int, int, int]]:
+    """Replay a span alloc/acquire/trim/release/publish interleaving.
 
     ``ops`` entries are ``(kind, k)`` with kind in {"alloc", "acquire",
-    "acquire_prefix", "trim", "free"} — legacy ``(is_free, k)`` bool
-    tuples are accepted and mean free/alloc.  One *holder* = one
-    (transient) range lease + one durable root:
+    "acquire_prefix", "trim", "free", "publish", "unpublish"} — legacy
+    ``(is_free, k)`` bool tuples are accepted and mean free/alloc.  One
+    *holder* = one (transient) range lease + one durable root:
 
       * ``alloc`` places a ``k``-superblock span, stamps + flushes a
         sentinel, and roots it (the owner's full-extent lease);
@@ -93,12 +96,21 @@ def run_host_trace(r: Ralloc, ops) -> list[tuple[int, int, int, int]]:
         (``span_trim`` — the unleased tail durably leaves the span), then
         re-stamps the recorded length *after* the trim completes;
       * ``free`` drops the oldest holder's lease (unroot BEFORE
-        releasing — a shared release is a pure transient decrement).
+        releasing — a shared release is a pure transient decrement);
+      * ``publish`` durably publishes a ``k``-clamped prefix of the
+        oldest span into the prefix index (``PrefixIndex.publish``:
+        transient acquire → fence → record append → root swing — the
+        fence IS the satellite's ``publish_durable`` boundary, so every
+        run snapshots the acquired-but-unpublished window);
+      * ``unpublish`` durably removes the oldest published record
+        (unlink before the lease drops).
 
     Returns the final holder list ``[(root_idx, ptr, k, lease_sbs)]``.
     """
     holders: list[tuple[int, int, int, int]] = []  # (root, ptr, k, lease)
+    published: list[int] = []                      # keys, oldest first
     next_root = 0
+    next_key = KEY0
     for kind, k in ops:
         if isinstance(kind, bool):
             kind = "free" if kind else "alloc"
@@ -115,6 +127,16 @@ def run_host_trace(r: Ralloc, ops) -> list[tuple[int, int, int, int]]:
             next_root += 1
             r.set_root(i, ptr)                  # … the root is the durable ref
             holders.append((i, ptr, k0, n))
+        elif kind == "publish" and holders and idx is not None:
+            _, ptr, _, _ = holders[0]
+            ext = _span_ext(r, ptr)
+            n = max(1, min(k, ext))
+            key = next_key
+            next_key += 1
+            if idx.publish(key, ptr, n_pages=n, lease_sbs=n) is not None:
+                published.append(key)
+        elif kind == "unpublish" and published:
+            idx.remove(published.pop(0))
         elif kind == "trim" and holders:
             _, ptr, _, _ = holders[0]
             ext = _span_ext(r, ptr)
@@ -138,7 +160,7 @@ def run_host_trace(r: Ralloc, ops) -> list[tuple[int, int, int, int]]:
                 r.write_word(ptr + 1, new_ext)
                 r.flush_range(ptr + 1, 1)
                 r.fence()
-        elif kind not in ("free", "trim") or not holders:
+        elif kind not in ("free", "trim", "unpublish") or not holders:
             ptr = r.malloc(k * SB_SIZE - 256)
             if ptr is None:
                 continue
@@ -159,9 +181,18 @@ def _span_ext(r: Ralloc, ptr: int) -> int:
     return r.span_extent(ptr)
 
 
-def check_recovered_heap(r: Ralloc, n_roots: int) -> dict[int, int]:
+def check_recovered_heap(r: Ralloc, n_roots: int,
+                         index: PrefixIndex | None = None
+                         ) -> dict[int, int]:
     """Assert span/free-list consistency after ``recover()``; returns the
-    recovered ``{head_sb: span_sbs}`` map."""
+    recovered ``{head_sb: span_sbs}`` map.
+
+    With ``index``, the recovered prefix-index records join the expected
+    lease model: each durable root is one full-extent lease, each record
+    one lease *re-trimmed* to its recorded superblock count (recovery
+    runs ``retrim_after_recovery`` for typed index roots) — and a record
+    may be a span's only reference.  A record naming a dead span — the
+    "dangling index record" the publish ordering forbids — fails here."""
     m = r.mem
     used = int(m.read(layout.M_USED_SBS))
     cls_of = [int(m.read(r.desc(sb, D_SIZE_CLASS))) for sb in range(used)]
@@ -207,19 +238,38 @@ def check_recovered_heap(r: Ralloc, n_roots: int) -> dict[int, int]:
         assert 1 <= spans[sb] <= int(r.read_word(w + 1)), \
             f"root {i}: span length record corrupted / tail resurrected"
 
-    # GC-reconstructed lease counts == the durable holder count, on EVERY
-    # superblock of the span: acquire/trim/release persist nothing beyond
-    # the records a real free writes, so at every boundary the per-range
-    # counts recovery rebuilds must equal the number of durable roots
-    # referencing the head (each one a full-extent lease — lengths are
-    # transient) — no range freed while referenced, none retained with
-    # zero reconstructed leases
+    # never a dangling index record: every recovered record names a live
+    # span with a sane lease length (the publish/unpublish durability
+    # ordering guarantees a linked record always implies a live span)
+    rec_refs: dict[int, list[int]] = {}
+    if index is not None:
+        for rec in index.records():
+            assert rec.span is not None, "torn index record survived"
+            sb = r.heap.sb_of(rec.span)
+            assert sb in spans, \
+                f"dangling index record: names a dead span (sb {sb})"
+            assert rec.lease_sbs >= 1 and rec.n_pages >= 1, \
+                f"index record at {rec.ptr} carries a corrupt length"
+            rec_refs.setdefault(sb, []).append(rec.lease_sbs)
+
+    # GC-reconstructed lease counts == the durable reference model, on
+    # EVERY superblock of the span: acquire/trim/release persist nothing
+    # beyond the records a real free writes, so at every boundary the
+    # per-range counts recovery rebuilds must equal the durable roots
+    # referencing the head (each a full-extent lease — lengths are
+    # transient) plus the durable index records (each re-trimmed to its
+    # recorded length) — no range freed while referenced, none retained
+    # with zero reconstructed leases
     for sb, nsb in spans.items():
-        assert sb in root_refs, f"zero-ref span at sb {sb} survived recovery"
-        assert r.leases.counts(sb) == [root_refs[sb]] * nsb, \
+        assert sb in root_refs or sb in rec_refs, \
+            f"zero-ref span at sb {sb} survived recovery"
+        base = root_refs.get(sb, 0)
+        want = [base + sum(1 for ls in rec_refs.get(sb, []) if ls > i)
+                for i in range(nsb)]
+        assert r.leases.counts(sb) == want, \
             f"span at sb {sb}: reconstructed lease counts " \
-            f"{r.leases.counts(sb)} != durable holder count " \
-            f"{root_refs[sb]} over {nsb} sbs"
+            f"{r.leases.counts(sb)} != durable model {want} " \
+            f"(roots {base}, records {rec_refs.get(sb, [])})"
 
     # the free set is genuinely free: a fresh span never lands in a live one
     p = r.malloc(2 * SB_SIZE - 256)
@@ -234,10 +284,15 @@ def run_crash_points(ops: list[tuple[bool, int]], *, size: int = 2 * MB,
                      seed: int = 0) -> int:
     """The harness entry point: trace → snapshot at every persist boundary
     → recover each snapshot → consistency checks.  Returns the number of
-    distinct durable images exercised."""
-    r = Ralloc(None, size, sim_nvm=True, seed=seed)
+    distinct durable images exercised.
+
+    ``expand_sbs=1`` keeps the watermark honest now that publish events
+    allocate small record blocks (a 16-superblock batch expansion per
+    record refill would dwarf the span traffic under test)."""
+    r = Ralloc(None, size, sim_nvm=True, seed=seed, expand_sbs=1)
+    idx = PrefixIndex(r)
     snaps = record_persist_boundaries(r)
-    run_host_trace(r, ops)
+    run_host_trace(r, ops, idx)
     # every op allocates at most one root — a (True, k) op with nothing
     # live falls through to an allocation too, so bound by len(ops), not
     # by the is_free=False count (which would leave roots unchecked)
@@ -245,8 +300,11 @@ def run_crash_points(ops: list[tuple[bool, int]], *, size: int = 2 * MB,
     images = dedup_images(snaps)
     for img in images:
         r2 = Ralloc(None, size, sim_nvm=True, seed=seed + 1,
-                    backing=img.copy())
+                    backing=img.copy(), expand_sbs=1)
+        # registering the typed index root BEFORE recover() is what makes
+        # the trace visit records precisely and re-trim their leases
+        idx2 = PrefixIndex(r2)
         assert r2.dirty_restart, "persist-boundary image must be dirty"
         r2.recover()
-        check_recovered_heap(r2, n_roots)
+        check_recovered_heap(r2, n_roots, index=idx2)
     return len(images)

@@ -133,6 +133,50 @@ def test_property_range_leases_reconstructed_at_any_boundary(ops):
     run_crash_points(ops, seed=29)
 
 
+def test_crash_injection_publish_durable_boundary():
+    """Satellite (``publish_durable``): ``PrefixIndex.publish`` fences
+    between the transient span-lease acquisition and the durable
+    index-record append, so the harness snapshots exactly that window.
+    A crash there must recover to either consistent state —
+    unpublished-but-leased (no record: counts fall back to the durable
+    roots, the span frees when they release) or published (the record
+    re-surfaces, its lease re-trimmed to the recorded length) — and
+    never to a dangling index record (asserted in
+    ``check_recovered_heap``)."""
+    ops = [("alloc", 3), ("publish", 1),         # publish a 1-sb prefix
+           ("free", 0),                          # owner exits: tail frees,
+                                                 # the record alone pins it
+           ("alloc", 2), ("publish", 2),
+           ("unpublish", 0),                     # durable unlink boundary
+           ("free", 0)]
+    n = run_crash_points(ops, seed=37)
+    assert n >= 12
+
+
+def test_crash_injection_record_is_spans_only_reference():
+    """A span whose every holder exited survives on the index record
+    alone, re-trimmed to the published prefix; unpublishing it at last
+    frees the prefix too."""
+    ops = [("alloc", 3), ("publish", 1), ("free", 0), ("alloc", 1),
+           ("unpublish", 0)]
+    n = run_crash_points(ops, seed=43)
+    assert n >= 8
+
+
+@settings(max_examples=5, deadline=None)
+@given(st.lists(st.tuples(st.sampled_from(["alloc", "acquire_prefix",
+                                           "publish", "unpublish",
+                                           "trim", "free"]),
+                          st.integers(1, 3)),
+                min_size=2, max_size=9))
+def test_property_publish_crash_at_any_boundary_recovers(ops):
+    """Satellite property: traces mixing publishes, unpublishes, trims
+    and releases recover — at every persist boundary — lease counts
+    equal to durable roots (full extent) + durable records (recorded,
+    re-trimmed length), with no dangling records."""
+    run_crash_points(ops, seed=41)
+
+
 @pytest.mark.slow
 @settings(max_examples=15, deadline=None)
 @given(st.lists(st.tuples(st.booleans(), st.integers(1, 4)),

@@ -404,6 +404,257 @@ def test_differential_trim_lockstep():
     assert_free_runs_agree(r, dst)
 
 
+# ---------------------------------------------------------------------------
+# durable prefix-index traces (PR 5): publish / crash / re-publish lockstep
+# ---------------------------------------------------------------------------
+from repro.core.prefix_index import REC_BYTES, PrefixIndex  # noqa: E402
+
+_alloc_small = jax.jit(functools.partial(ja.alloc, cfg=DEV_CFG, cls=0))
+
+
+def _pin_record_sb(r, dst):
+    """Pin superblock 0 on both sides as the record superblock.
+
+    Host prefix-index records are small allocator blocks; the first one
+    would claim a superblock for the record size class — an event the
+    device (whose records are sidecar rows, not blocks) never mirrors.
+    Claiming sb 0 up front on BOTH sides (one permanently-rooted block
+    each) keeps every later occupancy/free-run/placement comparison
+    symmetric: all span traffic sits above sb 0, and host record churn
+    stays inside sb 0's block cache with zero superblock traffic.
+    """
+    warm = r.malloc(REC_BYTES)
+    assert r.heap.sb_of(warm) == 0
+    r.set_root(62, warm)
+    dst, offs = _alloc_small(state=dst, need=jnp.ones((1,), bool))
+    warm_dev = int(np.asarray(offs)[0])
+    assert warm_dev // DEV_SB_WORDS == 0
+    return warm, warm_dev, dst
+
+
+def replay_publish_events(events):
+    """Drive both allocators through an acquire/release/publish trace in
+    lock-step, with the host running a real durable ``PrefixIndex``.
+
+    Device records are modeled by their recovery-visible effect: one
+    durable root naming the span head per record (the identical
+    reference-count contribution) plus the recorded lease length
+    replayed as ``trim_large`` after recovery — the exact sequence the
+    serving engine performs from its ``PrefixStore``.
+
+    Returns ``(host, idx, device state, spans, published, warm_dev)``
+    with ``spans`` entries ``[ptr, off, k, holder_leases,
+    publish_leases]`` and ``published`` entries ``(key, ptr, off,
+    lease_sbs)`` (oldest first).
+    """
+    r = Ralloc(None, N_SBS * SB_SIZE, expand_sbs=1)
+    idx = PrefixIndex(r)
+    dst = ja.init_state(DEV_CFG, max_roots=64)
+    warm, warm_dev, dst = _pin_record_sb(r, dst)
+    spans = []          # [ptr, off, k, holder_leases, publish_leases]
+    published = []      # (key, ptr, off, lease_sbs)
+    next_key = 0x10
+    for op, k in events:
+        if op in ("acquire", "acquire_prefix") and spans:
+            ent = spans[0]
+            ext = _host_ext(r, ent[0])
+            n = ext if op == "acquire" else max(1, min(k, ext))
+            r.span_acquire(ent[0], n)
+            dst, ok = _acquire_span(state=dst, off=jnp.int32(ent[1]),
+                                    n_sbs=jnp.int32(n))
+            assert bool(ok)
+            ent[3].append(n)
+        elif op == "publish" and spans:
+            ent = spans[0]
+            ext = _host_ext(r, ent[0])
+            n = max(1, min(k, ext))
+            key = next_key
+            next_key += 1
+            # host: transient lease + durable record; device: the cache's
+            # transient lease (its durable shadow is modeled at recovery)
+            assert idx.publish(key, ent[0], n_pages=n,
+                               lease_sbs=n) is not None
+            dst, ok = _acquire_span(state=dst, off=jnp.int32(ent[1]),
+                                    n_sbs=jnp.int32(n))
+            assert bool(ok)
+            ent[4].append(n)
+            published.append((key, ent[0], ent[1], n))
+        elif op == "unpublish" and published:
+            key, ptr, off, n = published.pop(0)
+            ent = next(e for e in spans if e[0] == ptr)
+            before = dev_occupancy(dst)
+            assert idx.remove(key)          # unlink → release → block free
+            dst = _free_large(state=dst, off=jnp.int32(off),
+                              n_sbs=jnp.int32(n))
+            ent[4].remove(n)
+            if ent[3] or ent[4]:
+                ext = _host_ext(r, ptr)
+                still = [min(l, ext) for l in ent[3] + ent[4]]
+                if still and max(still) == ext:
+                    assert dev_occupancy(dst) == before, \
+                        "covered unpublish disturbed device occupancy"
+            else:
+                spans.pop(spans.index(ent))
+        elif op == "free" and spans and spans[0][3]:
+            ent = spans[0]
+            ext = _host_ext(r, ent[0])
+            lease = min(ent[3].pop(0), ext)
+            r.span_release(ent[0], lease)
+            dst = _free_large(state=dst, off=jnp.int32(ent[1]),
+                              n_sbs=jnp.int32(lease))
+            if not ent[3] and not ent[4]:
+                spans.pop(0)
+        elif op == "alloc" or not spans:
+            ptr = r.malloc(k * SB_SIZE - 256)
+            dst, off = _alloc_large(state=dst,
+                                    nwords=jnp.int32(k * DEV_SB_WORDS - 4))
+            off = int(off)
+            assert (ptr is None) == (off < 0), "serveability drift"
+            if ptr is None:
+                continue
+            assert r.heap.sb_of(ptr) == off // DEV_SB_WORDS, "placement drift"
+            spans.append([ptr, off, k, [k], []])
+        assert host_occupancy(r) == dev_occupancy(dst), "occupancy drift"
+        # naive per-sb count model over ALL outstanding leases (holders
+        # AND publishes — the cache lease counts like any other)
+        assert_lease_lockstep(r, dst,
+                              [[p, o, kk, h + pub]
+                               for p, o, kk, h, pub in spans])
+    return r, idx, dst, spans, published, warm_dev
+
+
+def recover_both_with_index(r, dst, spans, published, warm_dev):
+    """Crash both sides and recover.  Host: durable roots (one per
+    holder lease) + the real index records; ``recover()`` re-trims
+    record leases from their recorded lengths.  Device: the same durable
+    reference set (records stand in as roots) + explicit ``trim_large``
+    per record — the engine's recovery sequence."""
+    roots = np.full((64,), -1, np.int32)
+    i = 0
+    for ptr, off, _, holders, _pubs in spans:
+        for _ in holders:
+            r.set_root(i, ptr)
+            roots[i] = off
+            i += 1
+    for _key, _ptr, off, _n in published:
+        roots[i] = off                      # the record's device stand-in
+        i += 1
+    assert i <= 62
+    roots[62] = warm_dev                    # the pinned record superblock
+    r.recover()                             # auto re-trim (typed root)
+    pers = ja.persistent_snapshot(dst)
+    pers["roots"] = jnp.asarray(roots)
+    refs_tab = jnp.full((jr.num_slots(DEV_CFG), 1), -1, jnp.int32)
+    dst, _ = jr.recover(DEV_CFG, pers, refs_tab)
+    for _key, _ptr, off, n in published:
+        dst, _ok = _trim_large(state=dst, off=jnp.int32(off),
+                               n_keep=jnp.int32(n), n_held=jnp.int32(-1))
+    return dst
+
+
+def assert_post_recovery_index_model(r, dst, spans, published):
+    """Post-recovery lease vectors must equal the index-derived model:
+    holder roots rebuild full-extent, records rebuild re-trimmed to
+    their recorded lengths (clamped to the durable extent)."""
+    for ptr, off, _, holders, _pubs in spans:
+        sb = off // DEV_SB_WORDS
+        ext = _host_ext(r, ptr)
+        dext = int(ja.span_sbs(DEV_CFG, int(dst.sb_block_words[sb])))
+        assert ext == dext, f"post-recovery extent drift at sb {sb}"
+        recs = [n for _k, p, _o, n in published if p == ptr]
+        want = [len(holders) + sum(1 for n in recs if n > i)
+                for i in range(ext)]
+        assert r.span_lease_counts(ptr) == want, \
+            f"host post-recovery lease drift at sb {sb}"
+        assert np.asarray(dst.span_refs)[sb:sb + ext].tolist() == want, \
+            f"device post-recovery lease drift at sb {sb}"
+
+
+EVENT_PUB = st.tuples(st.sampled_from(["alloc", "acquire",
+                                       "acquire_prefix", "free",
+                                       "publish", "unpublish"]),
+                      st.integers(1, 4))
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.lists(EVENT_PUB, min_size=2, max_size=30))
+def test_differential_publish_crash_republish_lockstep(events):
+    """Satellite: publish/crash/re-publish traces through both
+    allocators — post-recovery, the re-trimmed lease vectors match the
+    naive per-sb count model with index-derived lengths, and a fresh
+    publish on the recovered heap stays in lock-step."""
+    r, idx, dst, spans, published, warm_dev = replay_publish_events(events)
+    assert_free_runs_agree(r, dst)
+
+    dst = recover_both_with_index(r, dst, spans, published, warm_dev)
+    assert host_occupancy(r) == dev_occupancy(dst), "post-recovery drift"
+    assert_free_runs_agree(r, dst)
+    # host records really survived (count them against the model)
+    assert len(idx.records()) == len(published)
+    assert_post_recovery_index_model(r, dst, spans, published)
+
+    # re-publish on a surviving span: lock-step continues on the
+    # recovered heap (no placement or lease drift)
+    if spans:
+        ptr, off = spans[0][0], spans[0][1]
+        ext = _host_ext(r, ptr)
+        assert idx.publish(0xFFFF, ptr, n_pages=1, lease_sbs=1) is not None
+        dst, ok = _acquire_span(state=dst, off=jnp.int32(off),
+                                n_sbs=jnp.int32(1))
+        assert bool(ok)
+        assert r.span_lease_counts(ptr)[0] == \
+            int(np.asarray(dst.span_refs)[off // DEV_SB_WORDS])
+        assert host_occupancy(r) == dev_occupancy(dst)
+    # both sides place the next span identically (free sets agree)
+    p = r.malloc(2 * SB_SIZE - 256)
+    dst, o = _alloc_large(state=dst, nwords=jnp.int32(2 * DEV_SB_WORDS - 4))
+    assert (p is None) == (int(o) < 0)
+    if p is not None:
+        assert r.heap.sb_of(p) == int(o) // DEV_SB_WORDS
+
+
+def test_differential_record_only_span_retrims_after_crash():
+    """Deterministic tentpole scenario: every holder of a published span
+    exits, the record alone keeps it alive across a crash, and recovery
+    re-trims the record's full-extent reconstruction down to the
+    published prefix on BOTH sides — the decode-ahead tail frees at
+    recovery, not when some lane re-finishes."""
+    r, idx, dst, spans, published, warm_dev = replay_publish_events([
+        ("alloc", 3),
+        ("publish", 1),                    # 1-sb published prefix
+        ("free", 0),                       # owner exits: tail frees NOW
+    ])
+    assert [e[3] for e in spans] == [[]] and [e[4] for e in spans] == [[1]]
+    assert recovery.free_superblock_runs(r) == [(2, 2)]
+    assert_free_runs_agree(r, dst)
+
+    dst = recover_both_with_index(r, dst, spans, published, warm_dev)
+    # the record is the span's only durable reference; its lease came
+    # back at the trimmed 1-sb extent (durably shrunk pre-crash)
+    ptr, off = spans[0][0], spans[0][1]
+    assert _host_ext(r, ptr) == 1
+    assert r.span_lease_counts(ptr) == [1]
+    assert np.asarray(dst.span_refs)[off // DEV_SB_WORDS] == 1
+    assert_free_runs_agree(r, dst)
+    # unpublish on the recovered heap frees the prefix on both sides
+    assert idx.remove(published[0][0])
+    dst = _free_large(state=dst, off=jnp.int32(off), n_sbs=jnp.int32(1))
+    assert recovery.free_superblock_runs(r) == [(1, 3)]
+    assert_free_runs_agree(r, dst)
+
+
+@pytest.mark.slow
+@settings(max_examples=40, deadline=None)
+@given(st.lists(EVENT_PUB, min_size=5, max_size=60))
+def test_differential_publish_trace_deep(events):
+    """Deep publish-event sweep for the non-blocking slow CI job."""
+    r, idx, dst, spans, published, warm_dev = replay_publish_events(events)
+    assert_free_runs_agree(r, dst)
+    dst = recover_both_with_index(r, dst, spans, published, warm_dev)
+    assert host_occupancy(r) == dev_occupancy(dst)
+    assert_post_recovery_index_model(r, dst, spans, published)
+
+
 @pytest.mark.slow
 @settings(max_examples=40, deadline=None)
 @given(st.lists(st.tuples(st.booleans(), st.integers(1, 5)),

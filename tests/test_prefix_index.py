@@ -1,0 +1,230 @@
+"""Durable prefix index unit + property tests (core.prefix_index).
+
+The index's contract: publishing appends one durable record (the only
+new persistent writes) whose span reference reconstructs the prefix
+cache's lease across a crash; the registered filter function traces
+records *precisely* yet marks exactly the live set a conservative scan
+would; recovery re-trims each record's conservatively-rebuilt
+full-extent lease down to the recorded superblock count.
+"""
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                      # container without dev deps
+    from _hypothesis_fallback import given, settings, strategies as st
+
+from repro.core import pptr as pp
+from repro.core import recovery
+from repro.core.filters import conservative_filter, prefix_index_filter
+from repro.core.layout import SB_SIZE
+from repro.core.prefix_index import (PREFIX_INDEX_ROOT, REC_BYTES,
+                                     PrefixIndex, hash_tokens, iter_records)
+from repro.core.ralloc import Ralloc
+
+MB = 1 << 20
+
+
+def fresh(size_mb: int = 8, **kw):
+    r = Ralloc(None, size_mb * MB, expand_sbs=1, **kw)
+    return r, PrefixIndex(r)
+
+
+# ----------------------------------------------------------------- hashing
+def test_hash_tokens_deterministic_and_untagged():
+    a = hash_tokens([1, 2, 3])
+    assert a == hash_tokens((1, 2, 3))
+    assert a != hash_tokens([3, 2, 1])           # order-sensitive
+    for toks in ([], [0], [7] * 100, range(500)):
+        h = hash_tokens(toks)
+        assert 0 <= h < (1 << 48)                # storable, never pptr-tagged
+        assert not pp.looks_like_pptr(h)
+
+
+# ---------------------------------------------------- publish / remove CRUD
+def test_publish_appends_and_remove_unlinks():
+    r, idx = fresh()
+    spans = [r.malloc(2 * SB_SIZE - 256) for _ in range(3)]
+    keys = [hash_tokens([k]) for k in range(3)]
+    for k, s in zip(keys, spans):
+        assert idx.publish(k, s, n_pages=4, lease_sbs=1) is not None
+    got = idx.records()
+    assert [rec.key for rec in got] == keys[::-1]        # newest first
+    assert [rec.span for rec in got] == spans[::-1]
+    assert all(rec.n_pages == 4 and rec.lease_sbs == 1 for rec in got)
+    assert idx.lookup(keys[1]).span == spans[1]
+    # each publish holds one transient prefix lease
+    for s in spans:
+        assert r.span_lease_counts(s)[0] == 2
+
+    assert idx.remove(keys[1])                   # middle of the chain
+    assert [rec.key for rec in idx.records()] == [keys[2], keys[0]]
+    assert r.span_lease_counts(spans[1]) == [1, 1]   # its lease released
+    assert not idx.remove(keys[1])               # already gone
+    assert idx.remove(keys[2])                   # head of the chain
+    assert [rec.key for rec in idx.records()] == [keys[0]]
+    assert idx.clear() == 1
+    assert idx.records() == []
+    for s in spans:                              # cache leases all released
+        assert r.span_lease_counts(s) == [1, 1]
+
+
+def test_publish_rejects_bad_args():
+    r, idx = fresh()
+    s = r.malloc(2 * SB_SIZE - 256)
+    with pytest.raises(ValueError):
+        idx.publish(1, s, n_pages=1, lease_sbs=0)        # empty lease
+    small = r.malloc(64)
+    with pytest.raises(ValueError):
+        idx.publish(1, small, n_pages=1, lease_sbs=1)    # not a span
+    r.free(s)
+    with pytest.raises(ValueError):
+        idx.publish(1, s, n_pages=1, lease_sbs=1)        # dead span
+
+
+def test_record_blocks_recycle_through_the_allocator():
+    """Records are ordinary blocks: removal frees them for reuse."""
+    r, idx = fresh()
+    s = r.malloc(2 * SB_SIZE - 256)
+    rec = idx.publish(5, s, n_pages=2, lease_sbs=1)
+    idx.remove(5)
+    assert r.malloc(REC_BYTES) == rec            # LIFO thread cache
+
+
+# ------------------------------------------------- filter round-trip (sat.)
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 6), st.integers(0, 2 ** 48 - 1))
+def test_filter_round_trip_matches_conservative_scan(n_recs, key0):
+    """Satellite: for index records, the typed filter and a conservative
+    Boehm-style scan must mark the SAME live set — same record-word
+    targets per record, and an identical reachable set whether the trace
+    runs typed or untyped."""
+    r, idx = fresh()
+    spans = []
+    for i in range(n_recs):
+        s = r.malloc((1 + i % 3) * SB_SIZE - 256)
+        spans.append(s)
+        assert idx.publish((key0 + i) % (1 << 48), s,
+                           n_pages=1 + i, lease_sbs=1) is not None
+    # per-record: identical target sets (the typed filter only adds type
+    # names for precise recursion; it may not see more or fewer words)
+    for rec in idx.records():
+        typed = {t for t, _ in prefix_index_filter(r, rec.ptr, REC_BYTES)}
+        cons = {t for t, _ in conservative_filter(r, rec.ptr, REC_BYTES)}
+        assert typed == cons, (typed, cons)
+    # whole-trace: same reachable set and same span reference counts
+    refs_typed: dict = {}
+    r._root_filters[PREFIX_INDEX_ROOT] = "prefix_index"
+    typed_set = set(recovery.trace(r, refs_typed))
+    refs_cons: dict = {}
+    r._root_filters[PREFIX_INDEX_ROOT] = None
+    cons_set = set(recovery.trace(r, refs_cons))
+    r._root_filters[PREFIX_INDEX_ROOT] = "prefix_index"
+    assert typed_set == cons_set
+    assert refs_typed == refs_cons
+    assert all(refs_typed[r.heap.sb_of(s)] == 1 for s in spans)
+
+
+# ---------------------------------------------------------- crash recovery
+def test_records_survive_crash_and_retrim_leases():
+    """End-to-end host tentpole: a crash forgets every transient lease;
+    recovery rebuilds the cache's lease FROM the record and re-trims it
+    to the recorded superblock count, freeing the decode-ahead tail
+    immediately — while a rooted holder keeps its conservative
+    full-extent lease."""
+    r = Ralloc(None, 8 * MB, sim_nvm=True, seed=3, expand_sbs=1)
+    idx = PrefixIndex(r)
+    s = r.malloc(4 * SB_SIZE - 256)
+    sb = r.heap.sb_of(s)
+    r.write_word(s, 0xFEED)
+    r.flush_range(s, 1)
+    r.fence()
+    r.set_root(0, s)                             # the owner's durable root
+    key = hash_tokens([9, 9])
+    idx.publish(key, s, n_pages=3, lease_sbs=2)
+    assert r.span_lease_counts(s) == [2, 2, 1, 1]
+    r.mem.drain()
+    img = r.mem.nvm.copy()                       # crash with owner live
+
+    r2 = Ralloc(None, 8 * MB, sim_nvm=True, seed=4, backing=img,
+                expand_sbs=1)
+    idx2 = PrefixIndex(r2)
+    r2.get_root(0)
+    stats = r2.recover()
+    assert stats["index_records"] == 1 and stats["index_retrims"] == 1
+    # owner root: full extent; record: re-trimmed to 2 sbs
+    assert r2.span_lease_counts(s) == [2, 2, 1, 1]
+    rec = idx2.lookup(key)
+    assert rec.span == s and rec.n_pages == 3 and rec.lease_sbs == 2
+    assert r2.read_word(s) == 0xFEED
+
+    # owner exits (unroot BEFORE releasing) → only the re-trimmed record
+    # lease remains: the decode-ahead tail frees NOW, not when some lane
+    # re-finishes
+    r2.set_root(0, None)
+    r2.free(s)
+    assert r2.span_lease_counts(s) == [1, 1]
+    assert recovery.free_superblock_runs(r2) == [(sb + 2, 2)]
+    # crash AGAIN with the record as the span's only reference
+    r2.mem.drain()
+    img2 = r2.mem.nvm.copy()
+    r3 = Ralloc(None, 8 * MB, sim_nvm=True, seed=5, backing=img2,
+                expand_sbs=1)
+    idx3 = PrefixIndex(r3)
+    stats = r3.recover()
+    assert stats["index_records"] == 1
+    assert r3.span_lease_counts(s) == [1, 1]     # extent stayed trimmed
+    assert idx3.remove(key)                      # unpublish frees the prefix
+    assert (sb, 2) in recovery.free_superblock_runs(r3) or \
+        any(a <= sb < a + ln for a, ln in recovery.free_superblock_runs(r3))
+
+
+def test_crash_before_root_swing_leaves_no_dangling_record():
+    """The publish_durable window: a crash after the record words are
+    durable but before the root swings leaves the record unreachable —
+    GC frees its block, the lease count falls back to the durable roots,
+    and nothing dangles."""
+    r = Ralloc(None, 8 * MB, sim_nvm=True, seed=7, expand_sbs=1)
+    idx = PrefixIndex(r)
+    s = r.malloc(3 * SB_SIZE - 256)
+    r.set_root(0, s)
+    r.mem.drain(); r.fence()
+    # replay publish's steps by hand, stopping before the root swing
+    r.span_acquire(s, 1)
+    r.fence()
+    rec = r.malloc(REC_BYTES)
+    r.write_word(rec, pp.PPTR_NULL)
+    r.write_word(rec + 1, pp.encode(rec + 1, s))
+    r.write_word(rec + 2, 0xABCD)
+    r.write_word(rec + 3, 1)
+    r.write_word(rec + 4, 1)
+    r.flush_range(rec, 5)
+    r.fence()                                    # record durable …
+    r.mem.drain()
+    img = r.mem.nvm.copy()                       # … crash BEFORE the swing
+
+    r2 = Ralloc(None, 8 * MB, sim_nvm=True, seed=8, backing=img,
+                expand_sbs=1)
+    idx2 = PrefixIndex(r2)
+    r2.get_root(0)
+    stats = r2.recover()
+    assert stats["index_records"] == 0           # unreachable → no record
+    assert idx2.records() == []
+    assert r2.span_lease_counts(s) == [1, 1, 1]  # the durable root only
+    # the record block was swept: it is allocatable again
+    assert r2.malloc(REC_BYTES) is not None
+    r2.free(s)                                   # one free tears it down
+    with pytest.raises(ValueError):
+        r2.free(s)
+
+
+def test_iter_records_survives_cycles():
+    """Defensive: a corrupt image whose chain loops must not hang."""
+    r, idx = fresh()
+    s = r.malloc(2 * SB_SIZE - 256)
+    a = idx.publish(1, s, n_pages=1, lease_sbs=1)
+    b = idx.publish(2, s, n_pages=1, lease_sbs=1)
+    r.write_word(a, pp.encode(a, b))             # a → b → a cycle
+    recs = list(iter_records(r))
+    assert [rec.ptr for rec in recs] == [b, a]

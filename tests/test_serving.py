@@ -240,10 +240,12 @@ def test_engine_span_prefix_sharing(mesh):
     assert own_b.size and not (set(own_b.tolist())
                                & set(range(off, off + n_span)))
 
-    # crash: transient refcounts are lost, GC reconstructs them from the
-    # two lanes' roots (the cache's reference is transient and drops)
-    eng.crash_and_recover()
-    assert int(eng.astate.span_refs[head_sb]) == 2
+    # crash: transient refcounts are lost; GC reconstructs them from the
+    # two lanes' roots PLUS the durable index record — the cache's lease
+    # now survives the crash (tentpole: crash-surviving cache keys)
+    stats = eng.crash_and_recover()
+    assert stats["index_records"] == 1
+    assert int(eng.astate.span_refs[head_sb]) == 3
     assert ja.live_blocks(eng.astate, eng.acfg)["large"] == 1
     # recounted per-page refs never cover span-backed pages — a stale
     # entry would pin the offset after the span frees and is reallocated
@@ -254,9 +256,15 @@ def test_engine_span_prefix_sharing(mesh):
         eng.step()
     assert eng.sessions[b].tokens[:len(tokens_b)] == tokens_b
 
-    # a *sharer* can re-publish after the crash dropped the cache: the
-    # new entry takes one span reference via the span path (never the
-    # per-page path — that would refcount span-interior pages)
+    # the record already re-published the entry: publishing again is a
+    # no-op (the cache holds exactly one reference per entry)
+    eng.publish_prefix(b)
+    assert int(eng.astate.span_refs[head_sb]) == 3
+    eng.drop_prefix_cache()              # cache lease + index record out
+    assert int(eng.astate.span_refs[head_sb]) == 2
+    # a *sharer* can publish anew after the drop: the entry takes one
+    # span reference via the span path (never the per-page path — that
+    # would refcount span-interior pages)
     eng.publish_prefix(b)
     assert int(eng.astate.span_refs[head_sb]) == 3
     assert not (set(eng.page_refs) & set(range(off, off + n_span)))
@@ -331,6 +339,83 @@ def test_engine_owner_exit_frees_decode_ahead_tail(mesh):
     assert int(np.asarray(eng.astate.span_refs).sum()) == 0
 
 
+def test_engine_prefix_index_survives_crash(mesh):
+    """Tentpole acceptance: a published prefix survives
+    ``crash_and_recover`` through the durable index — cache-hittable
+    without re-prefill — and the recovered lease vector equals the
+    pre-crash *trimmed* one: the record's and each live sharer's leases
+    re-trim to their page-derived superblock counts instead of the
+    conservative full extent."""
+    from repro.core import jax_alloc as ja
+    cfg = dataclasses.replace(get_smoke_config("qwen2_5_32b"), page_size=8)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServingEngine(cfg, mesh, params, lanes=4, max_seq=64,
+                        pages_per_sb=2)
+    rng = np.random.default_rng(11)
+    prompt = [int(t) for t in rng.integers(1, cfg.vocab_size, size=24)]
+
+    a = eng.add_request(prompt, share_prefix=True)   # miss → reserves a span
+    off, n_span = eng.large_spans[a]
+    head_sb = off // eng.acfg.sb_words
+    ext = ja.span_sbs(eng.acfg, n_span)
+    for _ in range(len(prompt)):
+        eng.step()
+    eng.publish_prefix(a)                            # cache lease + record
+    full = len(prompt) // cfg.page_size
+    lease_sbs = -(-full // eng.acfg.sb_words)
+    assert lease_sbs < ext                 # there IS a decode-ahead tail
+    b = eng.add_request(prompt, share_prefix=True)   # sharer: prefix lease
+    c = eng.add_request(prompt)                      # control (own span)
+    for _ in range(len(prompt) + 4):       # control decodes past its prompt
+        eng.step()
+    refs_before = np.asarray(eng.astate.span_refs).copy()
+    assert refs_before[head_sb] == 3       # owner + cache + sharer
+    assert refs_before[head_sb + ext - 1] == 1       # tail: owner only
+
+    stats = eng.crash_and_recover()
+    assert stats["index_records"] == 1
+    # acceptance: lease vector == pre-crash trimmed extents, NOT the
+    # conservative full-extent reconstruction (which would be 3s across)
+    assert np.asarray(eng.astate.span_refs).tolist() == \
+        refs_before.tolist(), "post-recovery lease vector drifted"
+
+    # acceptance: the published prefix is cache-hittable without
+    # re-prefill — no fresh reservation, the request starts at the
+    # prompt boundary on the recovered span
+    spans_live = ja.live_blocks(eng.astate, eng.acfg)["large"]
+    d = eng.add_request(prompt, share_prefix=True)
+    assert d in eng.shared_spans and d not in eng.large_spans
+    assert int(np.asarray(eng.dstate["pos"][d])) == len(prompt)
+    assert ja.live_blocks(eng.astate, eng.acfg)["large"] == spans_live
+    bt_d = np.asarray(eng.dstate["block_table"][d])
+    assert bt_d[:full].tolist() == list(range(off, off + full))
+    # …and decodes correctly off the recovered prefix (parity vs the
+    # control lane, which prefilled the same prompt itself)
+    for _ in range(4):
+        eng.step()
+    assert eng.sessions[d].tokens[len(prompt):] == \
+        eng.sessions[c].tokens[len(prompt):len(eng.sessions[d].tokens)]
+
+    # owner exit durably trims the tail; a second crash recovers the
+    # trimmed extent as-is (record re-trim is a no-op at equal extents)
+    eng.finish(a)
+    refs_trimmed = np.asarray(eng.astate.span_refs).copy()
+    assert refs_trimmed[head_sb] == 3      # cache + b + d
+    eng.crash_and_recover()
+    assert np.asarray(eng.astate.span_refs).tolist() == \
+        refs_trimmed.tolist()
+    assert int(ja.span_sbs(eng.acfg, int(
+        eng.astate.sb_block_words[head_sb]))) == lease_sbs
+
+    for lane in (b, c, d):
+        eng.finish(lane)
+    eng.drop_prefix_cache()                # last lease + record out
+    assert ja.live_blocks(eng.astate, eng.acfg)["large"] == 0
+    assert int(np.asarray(eng.astate.span_refs).sum()) == 0
+    assert ja.live_blocks(eng.astate, eng.acfg)[0] == 0
+    assert eng.prefix_store.walk() == []
+
+
 def test_engine_finished_lane_offset_poisoned(mesh):
     """Satellite regression (stale-offset hazard): once a lane finishes,
     its span records are poisoned — a span reallocated at the same
@@ -377,6 +462,39 @@ def test_engine_finished_lane_offset_poisoned(mesh):
     assert int(eng.astate.sb_class[head_sb]) == ja.LARGE_CLS
     eng.finish(b)
     assert ja.live_blocks(eng.astate, eng.acfg)["large"] == 0
+
+
+def test_prefix_hit_requires_exact_tokens(mesh):
+    """Hash-keyed cache regression: a 48-bit key collision must never
+    serve another prompt's KV — hits on entries published this process
+    verify exact token equality (recovered entries, whose tokens died
+    with the crash, match by hash alone — the documented residual)."""
+    import dataclasses as dc
+    from repro.core.prefix_index import hash_tokens
+    cfg = dc.replace(get_smoke_config("qwen2_5_32b"), page_size=4)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServingEngine(cfg, mesh, params, lanes=3, max_seq=64)
+    prompt = [5, 9, 3, 7, 2, 8, 1, 4]
+    a = eng.add_request(prompt)
+    for _ in range(len(prompt)):
+        eng.step()
+    eng.publish_prefix(a)
+    # forge a collision: alias the published entry under another
+    # prompt's hash, exactly what equal 48-bit FNV digests would do
+    other = [6, 6, 6, 6, 6, 6, 6, 6]
+    eng._prefix_cache[hash_tokens(other)] = \
+        eng._prefix_cache[hash_tokens(prompt)]
+    eng._prefix_tokens[hash_tokens(other)] = tuple(prompt)
+    b = eng.add_request(other, share_prefix=True)
+    assert int(np.asarray(eng.dstate["pos"][b])) == 0   # miss, no KV reuse
+    # the genuine prompt still hits
+    c = eng.add_request(prompt, share_prefix=True)
+    assert int(np.asarray(eng.dstate["pos"][c])) == len(prompt)
+    for lane in (a, b, c):
+        eng.finish(lane)
+    del eng._prefix_cache[hash_tokens(other)]           # drop the forgery
+    del eng._prefix_tokens[hash_tokens(other)]
+    eng.drop_prefix_cache()
 
 
 def test_prefix_sharing_refcounts(mesh):
