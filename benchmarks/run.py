@@ -239,13 +239,33 @@ BENCHES: dict[str, dict] = {
 }
 
 
+def _meter_requests(a) -> dict:
+    """Count allocator *requests* (malloc/free/span_acquire/span_release)
+    on ``a`` in place — instance-attribute wrappers, so identity and
+    feature detection (``hasattr``) on the adapter stay intact."""
+    meter = {"n": 0}
+    for meth in ("malloc", "free", "span_acquire", "span_release"):
+        fn = getattr(a, meth, None)
+        if fn is None:
+            continue
+
+        def wrapped(*args, _fn=fn, **kw):
+            meter["n"] += 1
+            return _fn(*args, **kw)
+        setattr(a, meth, wrapped)
+    return meter
+
+
 def run_smoke(names: list[str], seed: int,
               json_path: str | None = None) -> int:
     """One tiny round of every selected workload, fail-fast (CI tier-1).
 
     ``json_path`` additionally writes the per-round results as JSON —
     CI uploads it as a workflow artifact so the perf trajectory is
-    inspectable per-run without scraping logs."""
+    inspectable per-run without scraping logs.  Each round also reports
+    its persistence traffic (``n_flush``/``n_fence``) normalized per
+    allocator request (``fences_per_request``) — the paper's headline
+    cost metric, trended per CI run via the artifact."""
     failed = 0
     results: list[dict] = []
 
@@ -262,6 +282,8 @@ def run_smoke(names: list[str], seed: int,
             # "alloc+variant" labels distinct rounds of one allocator so
             # the JSON rows stay distinguishable in the artifact
             a = fresh(kind.split("+", 1)[0], mb=64)
+            meter = _meter_requests(a)
+            a.mem.reset_counters()
             t0 = time.perf_counter()
             try:
                 fn(a, seed)
@@ -270,9 +292,15 @@ def run_smoke(names: list[str], seed: int,
                        error=repr(e))
                 print(f"smoke[{name},{kind}] FAILED: {e!r}", flush=True)
             else:
-                record(name, kind, True, time.perf_counter() - t0)
+                c = a.counters
+                fpr = (c["fence"] / meter["n"]) if meter["n"] else 0.0
+                record(name, kind, True, time.perf_counter() - t0,
+                       n_requests=meter["n"], n_flush=c["flush"],
+                       n_fence=c["fence"],
+                       fences_per_request=round(fpr, 3))
                 print(f"smoke[{name},{kind}] ok "
-                      f"({time.perf_counter() - t0:.2f}s)", flush=True)
+                      f"({time.perf_counter() - t0:.2f}s, "
+                      f"{fpr:.2f} fences/request)", flush=True)
             finally:
                 a.close()
     if "sharedprompt" in names:

@@ -1,0 +1,34 @@
+"""Persist-order analysis layer (two-pronged, static + dynamic).
+
+* ``trace`` / ``persist_lint`` — dynamic checking: an optional tracer on
+  ``NVMArray`` records every write/flush/fence/cas/crash as an
+  epoch-stamped event; ``persist_lint`` replays the event stream against
+  a declarative ordering spec (record fields durable before the root
+  swing, durable unlink before lease release, dirty flag before any
+  superblock mutation, ...) and reports violations plus the perf
+  diagnostics the paper cares about (redundant flushes, empty fences).
+* ``static_checks`` — an AST pass enforcing the repo-wide invariants
+  that used to be honor-system: no direct ``.nvm[...]`` stores outside
+  ``core/atomics.py``, no ``jax.sharding.AxisType``/``shard_map``
+  references outside ``src/repro/runtime/``, and every write to a
+  persistent layout field paired with a flush in the same function (or
+  carrying a ``# persist: deferred`` annotation).
+* ``faults`` — named fault-injection sites guarding the seeded
+  flush/fence pairs, so mutation tests can prove the dynamic checker
+  actually fails when an ordering site is disabled.
+
+This package must stay import-light at ``__init__`` time: ``core``
+modules import ``analysis.faults``, so importing core submodules here
+would create a cycle.  Import the submodules explicitly.
+"""
+
+from __future__ import annotations
+
+__all__ = ["faults", "persist_lint", "static_checks", "trace"]
+
+
+def __getattr__(name):
+    if name in __all__:
+        import importlib
+        return importlib.import_module(f".{name}", __name__)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

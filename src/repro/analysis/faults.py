@@ -1,0 +1,48 @@
+"""Named fault-injection sites for the seeded flush/fence pairs.
+
+The persist-order checker (``analysis.persist_lint``) is only worth its
+keep if disabling a real ordering site makes it fail.  Each site below
+guards exactly one flush/fence pair in the production code; mutation
+tests suppress a site and assert the checker reports a violation, while
+the unsuppressed tree must report zero violations on every crash-harness
+and differential-fuzz trace.
+
+This module is deliberately dependency-free (the guarded ``core``
+modules import it, so it must import nothing from ``core``).
+"""
+
+from __future__ import annotations
+
+from contextlib import contextmanager
+
+#: every seeded site, for discoverability (suppressing an unknown site
+#: is an error — a typo would silently test nothing)
+SITES = frozenset({
+    "prefix_index.publish.fields_persist",   # record fields flush+fence
+    "prefix_index.publish.record_persist",   # seal-word flush+fence (append)
+    "prefix_index.remove.unlink_persist",    # mid-chain unlink flush+fence
+    "heap.set_root.persist",                 # root swing flush+fence
+    "ralloc.trim_tail.persist",              # trim's size-record shrink
+    "ralloc.free_large.persist",             # span record clears before free
+})
+
+_suppressed: set[str] = set()
+
+
+def is_suppressed(site: str) -> bool:
+    """True iff a mutation test disabled this flush/fence site."""
+    return site in _suppressed
+
+
+@contextmanager
+def suppress(*sites: str):
+    """Disable the named flush/fence sites for the duration of the block."""
+    unknown = set(sites) - SITES
+    if unknown:
+        raise ValueError(f"unknown fault site(s): {sorted(unknown)}")
+    added = set(sites) - _suppressed
+    _suppressed.update(added)
+    try:
+        yield
+    finally:
+        _suppressed.difference_update(added)

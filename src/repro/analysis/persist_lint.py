@@ -1,0 +1,401 @@
+"""Dynamic persist-order checker: replay NVM traces against ordering rules.
+
+The paper's recoverability argument rests on a handful of precisely
+ordered durable writes (record fields before the root swing, durable
+unlink before lease release, trim's size shrink before the tail frees,
+dirty flag before any superblock mutation).  This module turns that
+prose into a machine-checked spec: a :class:`DurabilityShadow` replays a
+:class:`~repro.analysis.trace.PersistTracer` event stream under the
+*strict* durability model — a write is guaranteed durable only once a
+flush of its line happened *after* the write and a fence happened after
+that flush (real ``clwb`` captures the line at flush time; the
+simulator's fence-time write-back is a superset, so the shadow is the
+conservative lower bound) — and a set of :class:`Rule` triggers fire on
+writes and semantic ``note`` events, checking durable state at exactly
+the instant ordering matters.
+
+The shadow deliberately ignores the simulator's random evictions: it
+models *guarantees*, not luck, which also makes the mutation tests
+deterministic (a suppressed flush site always violates, regardless of
+the eviction RNG).
+
+Perf diagnostics ride along: redundant flushes (line already scheduled
+with nothing new dirty), empty fences (no effective flush since the
+last fence), and fences per semantic operation.
+"""
+
+from __future__ import annotations
+
+from collections import Counter
+from dataclasses import dataclass, field
+
+from ..core import layout
+from ..core import pptr as pp
+from ..core.atomics import CACHELINE_WORDS
+from ..core.prefix_index import REC_WORDS, TYPENAME as PREFIX_TYPENAME
+
+__all__ = [
+    "DurabilityShadow",
+    "Rule",
+    "Violation",
+    "Report",
+    "standard_rules",
+    "check_trace",
+    "check_allocator",
+]
+
+_NOFLUSH = object()      # sentinel: pending word has no post-write flush yet
+
+#: note labels that count as one semantic operation for fences-per-op
+OP_LABELS = frozenset({"publish_end", "lease_release", "tail_free",
+                       "span_free"})
+
+
+class DurabilityShadow:
+    """Strict (guarantee-only) model of the persist state of every word.
+
+    * ``base`` — durable image at trace start (words never written keep
+      their base value durably).
+    * ``committed`` — words whose durable value changed during the trace.
+    * ``pending`` — words written but not yet guaranteed durable:
+      ``addr -> [latest_value, flushed_value_or_sentinel]`` where the
+      flushed value is the snapshot a post-write flush captured (real
+      clwb semantics) and becomes durable at the next fence.
+    """
+
+    def __init__(self, base):
+        self.base = base
+        self.committed: dict[int, int] = {}
+        self.pending: dict[int, list] = {}
+        self._by_line: dict[int, set[int]] = {}
+        self._fence_has_work = False
+        self.diag = Counter(writes=0, flushes=0, fences=0,
+                            redundant_flushes=0, empty_fences=0)
+
+    # ------------------------------------------------------------- events
+    def write(self, addr: int, value: int) -> None:
+        self.diag["writes"] += 1
+        ent = self.pending.get(addr)
+        if ent is None:
+            self.pending[addr] = [value, _NOFLUSH]
+            self._by_line.setdefault(addr // CACHELINE_WORDS, set()).add(addr)
+        else:
+            ent[0] = value
+
+    def flush(self, addr: int) -> None:
+        self.diag["flushes"] += 1
+        effective = False
+        for w in self._by_line.get(addr // CACHELINE_WORDS, ()):
+            ent = self.pending[w]
+            if ent[1] is _NOFLUSH or ent[1] != ent[0]:
+                ent[1] = ent[0]
+                effective = True
+        if effective:
+            self._fence_has_work = True
+        else:
+            self.diag["redundant_flushes"] += 1
+
+    def fence(self) -> None:
+        self.diag["fences"] += 1
+        if not self._fence_has_work:
+            self.diag["empty_fences"] += 1
+        self._fence_has_work = False
+        done = []
+        for w, ent in self.pending.items():
+            if ent[1] is _NOFLUSH:
+                continue
+            self.committed[w] = ent[1]
+            if ent[1] == ent[0]:
+                done.append(w)
+            else:                      # rewritten since the flush snapshot
+                ent[1] = _NOFLUSH
+        for w in done:
+            del self.pending[w]
+            line = self._by_line[w // CACHELINE_WORDS]
+            line.discard(w)
+            if not line:
+                del self._by_line[w // CACHELINE_WORDS]
+
+    def drain(self) -> None:
+        for w, ent in self.pending.items():
+            self.committed[w] = ent[0]
+        self.pending.clear()
+        self._by_line.clear()
+        self._fence_has_work = False
+
+    def crash(self) -> None:
+        self.pending.clear()
+        self._by_line.clear()
+        self._fence_has_work = False
+
+    # ------------------------------------------------------------ queries
+    def is_durable(self, addr: int) -> bool:
+        """True iff word ``addr``'s latest write is guaranteed durable."""
+        return addr not in self.pending
+
+    def durable_value(self, addr: int) -> int:
+        """Guaranteed-durable content of ``addr`` (base image fallback)."""
+        v = self.committed.get(addr)
+        return int(self.base[addr]) if v is None else v
+
+
+@dataclass(frozen=True)
+class Violation:
+    rule: str
+    seq: int          # event sequence number at which the rule fired
+    message: str
+
+    def __str__(self):
+        return f"[{self.rule}] @{self.seq}: {self.message}"
+
+
+@dataclass(frozen=True)
+class Rule:
+    """One declarative ordering rule.
+
+    ``trigger(event) -> bool`` selects the instants the rule cares
+    about; ``check(shadow, event) -> list[str]`` inspects the durable
+    state *just before the event applies* and returns violation
+    messages.
+    """
+
+    name: str
+    trigger: object
+    check: object
+
+
+@dataclass
+class Report:
+    violations: list = field(default_factory=list)
+    diagnostics: dict = field(default_factory=dict)
+
+    @property
+    def ok(self) -> bool:
+        return not self.violations
+
+    def __str__(self):
+        if self.ok:
+            return "persist-lint: OK"
+        return "persist-lint: {} violation(s)\n{}".format(
+            len(self.violations),
+            "\n".join(f"  {v}" for v in self.violations))
+
+
+# ---------------------------------------------------------------------------
+# The standard rule set: the repo's recoverability contract, rule by rule.
+# ---------------------------------------------------------------------------
+def standard_rules(r) -> list[Rule]:
+    """Ordering spec for a :class:`~repro.core.ralloc.Ralloc` heap ``r``.
+
+    Rules close over the heap geometry and the root-filter typing table,
+    never over memory contents — all state questions go through the
+    shadow at trigger time.
+    """
+    cfg = r.config
+    desc_base, sb_base = cfg.desc_base, cfg.sb_base
+    total_words = cfg.total_words
+
+    def sb_of(addr):
+        if addr >= sb_base:
+            return (addr - sb_base) // layout.SB_WORDS
+        return (addr - desc_base) // layout.DESC_WORDS
+
+    def desc(sb, fld):
+        return desc_base + sb * layout.DESC_WORDS + fld
+
+    def is_index_slot(slot):
+        return r._root_filters.get(slot) == PREFIX_TYPENAME
+
+    rules = []
+
+    # (1) Dirty flag set before any superblock/descriptor mutation: a
+    # write that needs recovery must be preceded by a durable dirty=1,
+    # or the restart path would skip recovery over a torn heap.
+    def dirty_check(sh, ev):
+        if sh.durable_value(layout.M_DIRTY) != 1:
+            return [f"write to word {ev.addr} (sb {sb_of(ev.addr)}) before "
+                    f"the dirty flag is durably set"]
+        return []
+    rules.append(Rule(
+        "dirty-before-sb-mutation",
+        lambda ev: ev.kind == "write" and ev.addr >= desc_base,
+        dirty_check))
+
+    # (2) Watermark covers the superblock: recovery only sweeps
+    # sb < durable(M_USED_SBS), so mutating a superblock the durable
+    # watermark does not cover would leave it unswept after a crash.
+    def watermark_check(sh, ev):
+        sb = sb_of(ev.addr)
+        if sb >= sh.durable_value(layout.M_USED_SBS):
+            return [f"write to sb {sb} beyond the durable watermark "
+                    f"({sh.durable_value(layout.M_USED_SBS)})"]
+        return []
+    rules.append(Rule(
+        "watermark-covers-sb",
+        lambda ev: ev.kind == "write" and ev.addr >= desc_base,
+        watermark_check))
+
+    # (3) All non-seal record fields durable before the seal word is
+    # written (note "record_seal" fires between the field fence and the
+    # seal write in PrefixIndex.publish).
+    def seal_check(sh, ev):
+        rec = ev.info["record"]
+        bad = [w for w in (rec, rec + 1, rec + 3, rec + 4)
+               if not sh.is_durable(w)]
+        if bad:
+            return [f"record {rec}: words {bad} not durable at seal time"]
+        return []
+    rules.append(Rule(
+        "record-fields-durable-before-seal",
+        lambda ev: ev.kind == "note" and ev.label == "record_seal",
+        seal_check))
+
+    # (4) Whole record durable before the root swing publishes it: a
+    # non-null store to an index-typed root slot must name a record all
+    # REC_WORDS of which are guaranteed durable.
+    def swing_check(sh, ev):
+        rec = sb_base + ev.value - 1
+        bad = [w for w in range(rec, rec + REC_WORDS)
+               if not sh.is_durable(w)]
+        if bad:
+            return [f"root swing to record {rec} with non-durable "
+                    f"words {bad}"]
+        return []
+    rules.append(Rule(
+        "record-durable-before-root-swing",
+        lambda ev: (ev.kind == "write" and ev.value
+                    and layout.M_ROOTS <= ev.addr < layout.M_ROOTS
+                    + layout.MAX_ROOTS
+                    and is_index_slot(ev.addr - layout.M_ROOTS)),
+        swing_check))
+
+    # (5) The root swing itself is durable by the time publish returns
+    # (note "publish_end"): otherwise the caller believes the record is
+    # published while a crash would silently drop it *and* its lease.
+    def publish_end_check(sh, ev):
+        slot, rec = ev.info["slot"], ev.info["record"]
+        addr = layout.M_ROOTS + slot
+        want = rec - sb_base + 1
+        if not sh.is_durable(addr) or sh.durable_value(addr) != want:
+            return [f"publish returned with root slot {slot} not durably "
+                    f"pointing at record {rec}"]
+        return []
+    rules.append(Rule(
+        "root-swing-durable-at-publish-end",
+        lambda ev: ev.kind == "note" and ev.label == "publish_end",
+        publish_end_check))
+
+    # (6) Durable unlink strictly before lease release (note
+    # "lease_release" fires in PrefixIndex.remove just before
+    # span_release): if the durable chain still reaches the record, a
+    # crash after the release would recover a record whose lease was
+    # already dropped — a dangling index entry.
+    def unlink_check(sh, ev):
+        slot, rec = ev.info["slot"], ev.info["record"]
+        off = sh.durable_value(layout.M_ROOTS + slot)
+        cur = sb_base + off - 1 if off else None
+        seen = set()
+        while cur is not None and cur not in seen and len(seen) < 65536:
+            if not (sb_base <= cur < total_words):
+                break                      # garbage next: chain truncates
+            if cur == rec:
+                return [f"lease release for record {rec} while the "
+                        f"durable chain from slot {slot} still reaches it"]
+            seen.add(cur)
+            cur = pp.decode(cur, sh.durable_value(cur))
+        return []
+    rules.append(Rule(
+        "unlink-durable-before-lease-release",
+        lambda ev: ev.kind == "note" and ev.label == "lease_release",
+        unlink_check))
+
+    # (7) Trim's size-record shrink durable before the tail frees (note
+    # "tail_free" fires in _trim_tail between the persist and the free
+    # pushes): the durable head size must already exclude the tail, and
+    # the tail descriptors must be durably cleared, or recovery would
+    # resurrect the span over reused superblocks.
+    def trim_check(sh, ev):
+        head, new_ext, old_ext = (ev.info["head"], ev.info["new_ext"],
+                                  ev.info["old_ext"])
+        msgs = []
+        szw = desc(head, layout.D_BLOCK_SIZE)
+        sz = sh.durable_value(szw)
+        if not sh.is_durable(szw) or sz <= 0 or sz > new_ext * layout.SB_SIZE:
+            msgs.append(f"tail free with head sb {head} durable size {sz} "
+                        f"not shrunk to ≤ {new_ext} sb(s)")
+        for sb in range(head + new_ext, head + old_ext):
+            cw = desc(sb, layout.D_SIZE_CLASS)
+            if not sh.is_durable(cw) or sh.durable_value(cw) != 0:
+                msgs.append(f"tail free with sb {sb} continuation marker "
+                            f"not durably cleared")
+        return msgs
+    rules.append(Rule(
+        "trim-shrink-durable-before-tail-free",
+        lambda ev: ev.kind == "note" and ev.label == "tail_free",
+        trim_check))
+
+    # (8) Large-span records durably cleared before the span re-enters
+    # the free set (note "span_free" in _free_large): a crash after the
+    # push with live records would double-place the superblocks.
+    def span_free_check(sh, ev):
+        head, nsb = ev.info["head"], ev.info["nsb"]
+        msgs = []
+        for sb in range(head, head + nsb):
+            for fld in (layout.D_SIZE_CLASS, layout.D_BLOCK_SIZE):
+                w = desc(sb, fld)
+                if not sh.is_durable(w) or sh.durable_value(w) != 0:
+                    msgs.append(f"span free with sb {sb} desc word {fld} "
+                                f"not durably cleared")
+        return msgs
+    rules.append(Rule(
+        "span-records-cleared-before-free",
+        lambda ev: ev.kind == "note" and ev.label == "span_free",
+        span_free_check))
+
+    return rules
+
+
+# ---------------------------------------------------------------------------
+# Replay
+# ---------------------------------------------------------------------------
+def check_trace(events, base, rules) -> Report:
+    """Replay ``events`` over ``base``, firing ``rules`` before each event
+    applies; returns violations plus perf diagnostics."""
+    sh = DurabilityShadow(base)
+    violations: list[Violation] = []
+    notes = Counter()
+    for ev in events:
+        if ev.kind in ("write", "note"):
+            for rule in rules:
+                if rule.trigger(ev):
+                    for msg in rule.check(sh, ev):
+                        violations.append(Violation(rule.name, ev.seq, msg))
+        if ev.kind == "write":
+            sh.write(ev.addr, ev.value)
+        elif ev.kind == "flush":
+            sh.flush(ev.addr)
+        elif ev.kind == "fence":
+            sh.fence()
+        elif ev.kind == "drain":
+            sh.drain()
+        elif ev.kind == "crash":
+            sh.crash()
+        elif ev.kind == "note":
+            notes[ev.label] += 1
+        # cas events are bookkeeping only: the underlying store already
+        # arrived as its own write event.
+    diag = dict(sh.diag)
+    diag["notes"] = dict(notes)
+    ops = sum(n for lbl, n in notes.items() if lbl in OP_LABELS)
+    diag["ops"] = ops
+    diag["fences_per_op"] = (diag["fences"] / ops) if ops else None
+    return Report(violations=violations, diagnostics=diag)
+
+
+def check_allocator(r, tracer, rules=None) -> Report:
+    """Check the trace an attached tracer captured against the standard
+    ordering spec for heap ``r`` (or an explicit rule list)."""
+    if tracer.base is None:
+        raise ValueError("tracer has no base image; use attach_tracer()")
+    return check_trace(tracer.events, tracer.base,
+                       standard_rules(r) if rules is None else rules)

@@ -1,0 +1,223 @@
+"""Static repo-invariant lint (AST pass).
+
+Three rules, each converting a documented-but-honor-system invariant of
+this codebase into a machine check:
+
+``NVM001`` — no direct ``.nvm[...]`` stores outside ``core/atomics.py``.
+    The ``nvm`` buffer is the durable image; a store that bypasses
+    ``NVMArray.write`` is invisible to the write-back simulation, the
+    persistence counters and the persist-order tracer.
+
+``SHD001`` — no ``jax.sharding.AxisType`` / ``jax.experimental.shard_map``
+    references outside ``src/repro/runtime/`` (the PR-1 rule).  All mesh
+    and sharding concerns live behind the runtime facade so the core
+    stays host-only importable.
+
+``PER001`` — every write call whose target expression names a persistent
+    layout field (``M_ROOTS``, ``M_DIRTY``, ``M_USED_SBS``,
+    ``D_SIZE_CLASS``, ``D_BLOCK_SIZE``) must share its function with a
+    flush-like call (``flush``/``flush_range``/``fence``/``persist``/
+    ``_persist``/``drain``/``set_root``) or carry a ``# persist:
+    deferred`` annotation on its line or the line above.  The rule is
+    deliberately function-local and name-based: it cannot prove
+    ordering (that is the dynamic checker's job) but it catches the
+    classic drive-by — a new durable-field write added without any
+    persistence thought at all.
+
+Used by ``tools/lint_persist.py`` (CLI, wired into tier-1 CI) and the
+unit tests.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import pathlib
+
+PERSIST_FIELDS = frozenset({"M_ROOTS", "M_DIRTY", "M_USED_SBS",
+                            "D_SIZE_CLASS", "D_BLOCK_SIZE"})
+WRITE_METHODS = frozenset({"write", "write_word", "write_block"})
+FLUSH_METHODS = frozenset({"flush", "flush_range", "fence", "persist",
+                           "_persist", "drain", "set_root"})
+DEFER_ANNOTATION = "persist: deferred"
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    path: str
+    line: int
+    code: str
+    message: str
+
+    def __str__(self):
+        return f"{self.path}:{self.line}: {self.code} {self.message}"
+
+
+def _attr_names(node) -> set[str]:
+    """Every identifier reachable in an expression (Name ids + Attribute
+    attrs) — the currency of all three rules' matching."""
+    out = set()
+    for n in ast.walk(node):
+        if isinstance(n, ast.Name):
+            out.add(n.id)
+        elif isinstance(n, ast.Attribute):
+            out.add(n.attr)
+    return out
+
+
+def _is_nvm_subscript(node) -> bool:
+    return (isinstance(node, ast.Subscript)
+            and isinstance(node.value, ast.Attribute)
+            and node.value.attr == "nvm")
+
+
+def _called_method(call: ast.Call) -> str | None:
+    f = call.func
+    if isinstance(f, ast.Attribute):
+        return f.attr
+    if isinstance(f, ast.Name):
+        return f.id
+    return None
+
+
+def _line_has_deferral(source_lines, lineno: int) -> bool:
+    for ln in (lineno, lineno - 1):
+        if 1 <= ln <= len(source_lines) \
+                and DEFER_ANNOTATION in source_lines[ln - 1]:
+            return True
+    return False
+
+
+class _Scope:
+    """One function body (or the module top level): collects the flagged
+    write calls and whether any flush-like call appears."""
+
+    def __init__(self, name):
+        self.name = name
+        self.flagged_writes: list[ast.Call] = []
+        self.has_flush = False
+
+
+def check_source(path_label: str, text: str, *,
+                 allow_nvm_store: bool = False,
+                 allow_sharding: bool = False) -> list[Finding]:
+    """Lint one file's source; ``path_label`` is used in findings only."""
+    findings: list[Finding] = []
+    try:
+        tree = ast.parse(text)
+    except SyntaxError as e:
+        return [Finding(path_label, e.lineno or 0, "PARSE", str(e))]
+    source_lines = text.splitlines()
+
+    # ---------------------------------------------------------- NVM001
+    if not allow_nvm_store:
+        for node in ast.walk(tree):
+            targets = []
+            if isinstance(node, ast.Assign):
+                targets = node.targets
+            elif isinstance(node, (ast.AugAssign, ast.AnnAssign)):
+                targets = [node.target]
+            for t in targets:
+                if _is_nvm_subscript(t):
+                    findings.append(Finding(
+                        path_label, node.lineno, "NVM001",
+                        "direct .nvm[...] store outside core/atomics.py "
+                        "bypasses the write-back simulation and the "
+                        "persist tracer; use NVMArray.write"))
+
+    # ---------------------------------------------------------- SHD001
+    if not allow_sharding:
+        def _sharding_hit(node) -> str | None:
+            if isinstance(node, ast.Attribute):
+                chain = _attr_names(node)
+                if node.attr == "AxisType" and "sharding" in chain:
+                    return "jax.sharding.AxisType"
+                if node.attr == "shard_map" and ("jax" in chain
+                                                 or "experimental" in chain):
+                    return "shard_map"
+            if isinstance(node, ast.ImportFrom) and node.module:
+                mod = node.module
+                if "shard_map" in mod:
+                    return mod
+                if mod.startswith("jax"):
+                    for a in node.names:
+                        if a.name in ("shard_map", "AxisType"):
+                            return f"{mod}.{a.name}"
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    if "shard_map" in a.name or a.name == "jax.sharding":
+                        return a.name
+            return None
+
+        for node in ast.walk(tree):
+            hit = _sharding_hit(node)
+            if hit:
+                findings.append(Finding(
+                    path_label, node.lineno, "SHD001",
+                    f"{hit} referenced outside src/repro/runtime/ — mesh "
+                    "and sharding concerns live behind the runtime facade"))
+
+    # ---------------------------------------------------------- PER001
+    scopes: list[_Scope] = []
+
+    def visit_body(scope: _Scope, nodes):
+        for node in nodes:
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                sub = _Scope(node.name)
+                scopes.append(sub)
+                visit_body(sub, node.body)
+                continue
+            if isinstance(node, ast.ClassDef):
+                visit_body(scope, node.body)
+                continue
+            for call in [n for n in ast.walk(node)
+                         if isinstance(n, ast.Call)]:
+                meth = _called_method(call)
+                if meth in FLUSH_METHODS:
+                    scope.has_flush = True
+                if meth in WRITE_METHODS and call.args:
+                    # only the *target* expression (first arg) counts —
+                    # a value that mentions a layout constant is not a
+                    # store to that field
+                    if _attr_names(call.args[0]) & PERSIST_FIELDS:
+                        scope.flagged_writes.append(call)
+
+    module_scope = _Scope("<module>")
+    scopes.append(module_scope)
+    visit_body(module_scope, tree.body)
+
+    for scope in scopes:
+        if scope.has_flush:
+            continue
+        for call in scope.flagged_writes:
+            if _line_has_deferral(source_lines, call.lineno):
+                continue
+            fields = sorted(_attr_names(call.args[0]) & PERSIST_FIELDS)
+            findings.append(Finding(
+                path_label, call.lineno, "PER001",
+                f"write to persistent field(s) {', '.join(fields)} in "
+                f"{scope.name}() with no flush-like call in the same "
+                f"function; flush it or annotate `# {DEFER_ANNOTATION}`"))
+
+    findings.sort(key=lambda f: (f.line, f.code))
+    return findings
+
+
+def check_file(path) -> list[Finding]:
+    p = pathlib.Path(path)
+    parts = p.parts
+    return check_source(
+        str(p), p.read_text(),
+        allow_nvm_store=(p.name == "atomics.py" and "core" in parts),
+        allow_sharding="runtime" in parts)
+
+
+def check_tree(root) -> list[Finding]:
+    """Lint every ``*.py`` under ``root`` (or a single file)."""
+    rootp = pathlib.Path(root)
+    if rootp.is_file():
+        return check_file(rootp)
+    findings: list[Finding] = []
+    for p in sorted(rootp.rglob("*.py")):
+        findings.extend(check_file(p))
+    return findings

@@ -1,0 +1,112 @@
+"""Epoch-stamped persist-event tracing for the simulated NVM.
+
+``NVMArray`` accepts an optional ``tracer``; when set, every ``write``,
+``flush``, ``fence``, ``cas``, ``crash`` and ``drain`` is reported *at
+entry* (before the memory mutates), so a tracer that raises models a
+crash just before the event takes effect.  Allocators forward semantic
+markers via ``NVMArray.note`` (``record_seal``, ``publish_end``,
+``lease_release``, ``tail_free``, ``span_free``) which the ordering
+rules in :mod:`repro.analysis.persist_lint` trigger on.
+
+Events are epoch-stamped: the epoch is the number of fences observed so
+far, i.e. all events in one epoch sit between the same pair of persist
+barriers.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+__all__ = [
+    "TraceEvent",
+    "PersistTracer",
+    "CrashAfter",
+    "SimulatedCrash",
+    "attach_tracer",
+]
+
+
+@dataclass(frozen=True)
+class TraceEvent:
+    """One memory-ordering event.
+
+    ``addr``/``value`` are word-granular (``None`` when not applicable:
+    fences, crashes, notes).  ``label``/``info`` carry the semantic
+    payload of ``note`` events.
+    """
+
+    seq: int
+    epoch: int
+    kind: str                      # write|flush|fence|cas|crash|drain|note
+    addr: int | None = None
+    value: int | None = None
+    label: str | None = None
+    info: dict = field(default_factory=dict)
+
+
+class PersistTracer:
+    """Records the full event stream plus a snapshot of the base image.
+
+    ``base`` is the durable image at attach time; the checker's shadow
+    model needs it to answer "what is the durable value of word X" for
+    words never rewritten during the trace.
+    """
+
+    __slots__ = ("events", "base", "epoch")
+
+    def __init__(self, base=None):
+        self.events: list[TraceEvent] = []
+        self.base = base
+        self.epoch = 0
+
+    def record(self, kind, addr=None, value=None, label=None, info=None):
+        self.events.append(TraceEvent(
+            seq=len(self.events), epoch=self.epoch, kind=kind, addr=addr,
+            value=None if value is None else int(value),
+            label=label, info=info or {}))
+        if kind in ("fence", "drain"):
+            self.epoch += 1
+
+    def clear(self):
+        self.events.clear()
+
+
+class SimulatedCrash(RuntimeError):
+    """Raised by :class:`CrashAfter` when its event budget is exhausted."""
+
+
+class CrashAfter(PersistTracer):
+    """Tracer that lets exactly ``budget`` events through, then raises.
+
+    Because ``NVMArray`` reports events before mutating, the raising
+    event never takes effect: the memory is left exactly as if the
+    machine lost power at that point (volatile cache intact — callers
+    crash-test by reopening from ``mem.nvm``, which holds only durable
+    state).
+    """
+
+    __slots__ = ("remaining",)
+
+    def __init__(self, budget, base=None):
+        super().__init__(base)
+        self.remaining = budget
+
+    def record(self, kind, addr=None, value=None, label=None, info=None):
+        if self.remaining <= 0:
+            raise SimulatedCrash(f"event budget exhausted at {kind}")
+        self.remaining -= 1
+        super().record(kind, addr, value, label, info)
+
+
+def attach_tracer(obj, tracer=None):
+    """Attach a tracer to an allocator (anything with ``.mem``) or a raw
+    ``NVMArray``; snapshots the durable image as the shadow base."""
+    mem = getattr(obj, "mem", obj)
+    if tracer is None:
+        tracer = PersistTracer()
+    if tracer.base is None:
+        tracer.base = np.array(mem.nvm, copy=True)
+    mem.tracer = tracer
+    return tracer

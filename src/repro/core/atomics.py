@@ -41,13 +41,18 @@ class NVMArray:
 
     def __init__(self, words: int, *, sim: bool = False, seed: int = 0,
                  evict_prob: float = 0.01, backing: np.ndarray | None = None,
-                 flush_ns: int = 0, fence_ns: int = 0):
+                 flush_ns: int = 0, fence_ns: int = 0, tracer=None):
         if backing is not None:
             assert backing.dtype == np.int64 and backing.size >= words
             self.nvm = backing
         else:
             self.nvm = np.zeros(words, dtype=np.int64)
         self.sim = sim
+        # Optional persist-event tracer (analysis.trace.PersistTracer):
+        # every ordering-relevant call is reported *at entry*, before the
+        # memory mutates, so a raising tracer models a crash just before
+        # the event.  None (the default) costs one attribute test per op.
+        self.tracer = tracer
         # Optional modeled Optane write-back latency (benchmarks only):
         # clwb issue + WPQ drain are ~100–300 ns on real hardware; a busy
         # wait injects that cost so persistence shows up in throughput.
@@ -91,6 +96,8 @@ class NVMArray:
 
     def write(self, idx: int, value: int) -> None:
         value = int(np.int64(np.uint64(value & ((1 << 64) - 1))))
+        if self.tracer is not None:
+            self.tracer.record("write", idx, value)
         if self.sim:
             self._cache.setdefault(self._line(idx), {})[idx] = value
             self._maybe_evict()
@@ -104,6 +111,8 @@ class NVMArray:
     # -- persistence ----------------------------------------------------------
     def flush(self, idx: int) -> None:
         """clwb: schedule the line containing ``idx`` for write-back."""
+        if self.tracer is not None:
+            self.tracer.record("flush", idx)
         self.n_flush += 1
         if self.sim:
             self._scheduled.add(self._line(idx))
@@ -112,6 +121,8 @@ class NVMArray:
 
     def fence(self) -> None:
         """sfence: all scheduled lines become durable."""
+        if self.tracer is not None:
+            self.tracer.record("fence")
         self.n_fence += 1
         if self.sim:
             for line_id in list(self._scheduled):
@@ -149,12 +160,16 @@ class NVMArray:
     # -- crash ----------------------------------------------------------------
     def crash(self) -> None:
         """Full-system crash: every non-durable line is lost."""
+        if self.tracer is not None:
+            self.tracer.record("crash")
         if self.sim:
             self._cache.clear()
             self._scheduled.clear()
 
     def drain(self) -> None:
         """Clean shutdown: write back everything (implicit eventual WB)."""
+        if self.tracer is not None:
+            self.tracer.record("drain")
         if self.sim:
             for line_id in list(self._cache.keys()):
                 self._writeback(line_id)
@@ -166,8 +181,12 @@ class NVMArray:
         self.n_cas += 1
         with self._cas_lock:
             if self.read(idx) == int(np.int64(np.uint64(expected & ((1 << 64) - 1)))):
-                self.write(idx, new)
+                self.write(idx, new)      # the store reaches the tracer here
+                if self.tracer is not None:
+                    self.tracer.record("cas", idx, new, info={"ok": True})
                 return True
+            if self.tracer is not None:
+                self.tracer.record("cas", idx, info={"ok": False})
             return False
 
     def faa(self, idx: int, delta: int) -> int:
@@ -179,3 +198,11 @@ class NVMArray:
 
     def reset_counters(self) -> None:
         self.n_flush = self.n_fence = self.n_cas = 0
+
+    # -- semantic trace markers ------------------------------------------------
+    def note(self, label: str, **info) -> None:
+        """Forward a semantic marker (``record_seal``, ``lease_release``,
+        ``tail_free``, ...) to the attached tracer; no-op untraced.  The
+        ordering rules in ``analysis.persist_lint`` trigger on these."""
+        if self.tracer is not None:
+            self.tracer.record("note", label=label, info=info)

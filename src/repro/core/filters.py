@@ -73,18 +73,27 @@ def tree_node_filter(reader, block_word, size_bytes):
 
 def prefix_index_filter(reader, block_word, size_bytes):
     """Durable prefix-index record (core.prefix_index):
-    [next: pptr][span: pptr][key48][n_pages][lease_sbs].
+    [next: pptr][span: pptr][seal: key48+checksum16][n_pages][lease_sbs].
 
     Word 0 chains to the next record (typed recursion); word 1 is the
     record's reference to the published span head — the mark pass counts
     it exactly like a root, which is how the prefix cache's lease
-    survives a crash.  Words 2–4 are plain integers (the key is masked
-    to 48 bits so it can never carry the pptr tag), so the typed filter
-    and a conservative scan mark the identical live set.
+    survives a crash.  Words 2–4 are plain integers (the seal checksum
+    is remapped away from the pptr tag), so the typed filter and a
+    conservative scan mark the identical live set.
+
+    A record whose seal checksum does not match its fields is torn: its
+    span reference is *not* yielded (belt — ``prune_torn_records`` has
+    already durably unlinked it before the mark pass, suspenders), so a
+    torn record can never re-publish a span.  Its next pointer is still
+    followed: valid records behind it must stay reachable.
     """
+    from .prefix_index import record_seal_matches
     nxt = pp.decode(block_word, reader.read_word(block_word))
     if nxt is not None:
         yield nxt, "prefix_index"
+    if not record_seal_matches(reader, block_word):
+        return
     span = pp.decode(block_word + 1, reader.read_word(block_word + 1))
     if span is not None:
         yield span, None          # span head: traced conservatively

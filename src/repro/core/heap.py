@@ -21,6 +21,7 @@ import os
 import numpy as np
 
 from . import layout
+from ..analysis.faults import is_suppressed
 from .atomics import NVMArray
 from .layout import HeapConfig, MAGIC
 
@@ -111,8 +112,9 @@ class PersistentHeap:
         assert 0 <= i < layout.MAX_ROOTS
         off = 0 if block_word is None else (block_word - self.config.sb_base + 1)
         self.mem.write(layout.M_ROOTS + i, off)
-        self.mem.flush(layout.M_ROOTS + i)
-        self.mem.fence()
+        if not is_suppressed("heap.set_root.persist"):
+            self.mem.flush(layout.M_ROOTS + i)
+            self.mem.fence()
 
     def get_root(self, i: int) -> int | None:
         off = self.mem.read(layout.M_ROOTS + i)

@@ -13,7 +13,11 @@ holding:
 
     word 0   next record        (self-relative pptr, PPTR_NULL ends)
     word 1   span head          (self-relative pptr to the published span)
-    word 2   key                (48-bit prompt hash — see ``hash_tokens``)
+    word 2   seal               (48-bit prompt hash — see ``hash_tokens`` —
+                                 plus a 16-bit content checksum in the top
+                                 bits; written *last*, after every other
+                                 word is durable, so a torn record is
+                                 detectable — see ``record_is_valid``)
     word 3   page count         (full prompt pages published)
     word 4   lease length       (page-derived superblock count of the
                                  cache's prefix lease)
@@ -31,17 +35,24 @@ spirit to ``Ralloc._trim_tail``):
 
   * ``publish``: transient ``span_acquire`` first, then a fence (prior
     application flushes of the published contents become durable before
-    the index can claim the prefix exists), then the record words are
-    written + flushed + fenced, and only then does the root swing (its
-    own flush + fence).  A crash anywhere in that window recovers to one
-    of two consistent states: *unpublished-but-leased* (the record never
-    became reachable — GC frees the block and the lease count falls back
-    to the durable roots) or *published* (the record re-surfaces and the
-    prefix is re-published).  A dangling or torn record is unreachable
-    by construction.
+    the index can claim the prefix exists), then the non-seal record
+    words are written + flushed + fenced, then the seal word (key +
+    content checksum) is written + flushed + fenced *last*, and only
+    then does the root swing (its own flush + fence).  A crash anywhere
+    in that window recovers to one of two consistent states:
+    *unpublished-but-leased* (the record never became reachable — GC
+    frees the block and the lease count falls back to the durable roots)
+    or *published* (the record re-surfaces and the prefix is
+    re-published).  A dangling or torn record is unreachable by
+    construction, and — defense in depth against hardware tears the
+    protocol cannot see — a record whose seal checksum does not match
+    its fields is pruned at recovery (``prune_torn_records``), never
+    re-published.
   * ``remove``: the record is durably unlinked *before* its transient
     lease is released and its block freed — a linked record always
-    implies a live span.
+    implies a live span.  (The checksum covers words 1, 3, 4 and the
+    key, *not* word 0: unlinking a neighbour rewrites a live record's
+    next pointer, which must not stale its seal.)
 
 Recovery-time **re-trim**: references rebuild as full-extent leases
 (lease lengths are transient), but an index record knows its page-derived
@@ -57,6 +68,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Iterator
 
+from ..analysis.faults import is_suppressed
 from . import pptr as pp
 from .layout import MAX_ROOTS, WORD
 
@@ -73,11 +85,12 @@ _KEY_MASK = (1 << 48) - 1
 def hash_tokens(tokens) -> int:
     """Deterministic 48-bit FNV-1a over a token sequence.
 
-    48 bits on purpose: the stored key word can never carry the pptr tag
-    pattern in its top 16 bits, so a conservative scan of a record marks
-    exactly the same targets as the typed filter (pinned by test).
-    Python's builtin ``hash`` is salted per process and useless across a
-    crash; this one is stable.
+    48 bits on purpose: the top 16 bits of the seal word carry the
+    content checksum instead, and ``_record_checksum`` guarantees the
+    checksum never equals the pptr tag pattern — so a conservative scan
+    of a record marks exactly the same targets as the typed filter
+    (pinned by test).  Python's builtin ``hash`` is salted per process
+    and useless across a crash; this one is stable.
     """
     h = 0xCBF29CE484222325
     for t in tokens:
@@ -86,30 +99,117 @@ def hash_tokens(tokens) -> int:
     return h & _KEY_MASK
 
 
+def _record_checksum(span_word: int, n_pages: int, lease_sbs: int,
+                     key48: int) -> int:
+    """16-bit content checksum stored in the seal word's top bits.
+
+    FNV-1a over the sealed fields, folded to 16 bits.  The nonzero seed
+    makes the all-zero record invalid (a zeroed seal word never matches
+    — pinned by test), and the pptr tag pattern is remapped so the seal
+    word can never be mistaken for a self-relative reference by the
+    conservative scan.
+    """
+    h = 0x9E3779B97F4A7C15
+    for v in (span_word, n_pages, lease_sbs, key48):
+        h ^= int(v) & 0xFFFFFFFFFFFFFFFF
+        h = (h * 0x100000001B3) & 0xFFFFFFFFFFFFFFFF
+    c = (h ^ (h >> 16) ^ (h >> 32) ^ (h >> 48)) & 0xFFFF
+    if c == pp.PPTR_TAG:
+        c ^= 0x5A5A
+    return c
+
+
+def record_seal_matches(reader, rec: int) -> bool:
+    """Checksum-only validity: the seal word's top 16 bits match the
+    checksum of the sealed fields and the span pptr decodes.  Callers
+    must have bounds-checked ``rec`` (``record_is_valid`` does both)."""
+    w1 = int(reader.read_word(rec + 1))
+    w2 = int(reader.read_word(rec + 2)) & ((1 << 64) - 1)
+    if pp.decode(rec + 1, w1) is None:
+        return False
+    return (w2 >> 48) == _record_checksum(
+        w1, int(reader.read_word(rec + 3)),
+        int(reader.read_word(rec + 4)), w2 & _KEY_MASK)
+
+
+def record_is_valid(r, rec: int) -> bool:
+    """True iff ``rec`` lies inside the used superblock region and its
+    seal checksum matches — i.e. the record was completely written."""
+    heap = r.heap
+    if not (heap.in_sb_region(rec) and heap.in_sb_region(rec + REC_WORDS - 1)):
+        return False
+    return record_seal_matches(r, rec)
+
+
 @dataclasses.dataclass(frozen=True)
 class PrefixRecord:
     """One decoded index record."""
     ptr: int                 # record block word address
     key: int                 # 48-bit prompt hash
-    span: int | None         # span head block address (None = torn/corrupt)
+    span: int | None         # span head block address (valid records: set)
     n_pages: int             # published whole pages
     lease_sbs: int           # the cache lease's superblock count
 
 
 def iter_records(r, slot: int = PREFIX_INDEX_ROOT) -> Iterator[PrefixRecord]:
-    """Walk the record chain from root ``slot`` (cycle-safe)."""
+    """Walk the record chain from root ``slot`` (cycle-safe).
+
+    Torn/corrupt records are skipped, never yielded: traversal continues
+    through an in-bounds invalid record's next pointer and truncates at
+    an out-of-bounds one (its memory cannot be read, let alone trusted).
+    """
     rec = r.heap.get_root(slot)
     seen: set[int] = set()
     while rec is not None and rec not in seen:
         seen.add(rec)
-        yield PrefixRecord(
-            ptr=rec,
-            key=int(r.read_word(rec + 2)) & _KEY_MASK,
-            span=pp.decode(rec + 1, r.read_word(rec + 1)),
-            n_pages=int(r.read_word(rec + 3)),
-            lease_sbs=int(r.read_word(rec + 4)),
-        )
+        if not (r.heap.in_sb_region(rec)
+                and r.heap.in_sb_region(rec + REC_WORDS - 1)):
+            break
+        if record_seal_matches(r, rec):
+            yield PrefixRecord(
+                ptr=rec,
+                key=int(r.read_word(rec + 2)) & _KEY_MASK,
+                span=pp.decode(rec + 1, r.read_word(rec + 1)),
+                n_pages=int(r.read_word(rec + 3)),
+                lease_sbs=int(r.read_word(rec + 4)),
+            )
         rec = pp.decode(rec, r.read_word(rec))
+
+
+def prune_torn_records(r, slot: int = PREFIX_INDEX_ROOT) -> int:
+    """Durably unlink every torn/corrupt record on the chain; returns the
+    number pruned.
+
+    Runs at recovery time *before* the mark pass (``recovery.recover``),
+    so a torn record is never re-published: its span pptr never reaches
+    the tracer and its block, unreachable once unlinked, is reclaimed by
+    the ordinary sweep.  Each unlink is individually durable (the same
+    unlink-before-anything-else discipline as ``PrefixIndex.remove``).
+    """
+    m = r.mem
+    heap = r.heap
+    pruned = 0
+    prev = None                    # last valid record kept on the chain
+    rec = heap.get_root(slot)
+    seen: set[int] = set()
+    while rec is not None and rec not in seen:
+        seen.add(rec)
+        in_bounds = (heap.in_sb_region(rec)
+                     and heap.in_sb_region(rec + REC_WORDS - 1))
+        if in_bounds and record_seal_matches(r, rec):
+            prev, rec = rec, pp.decode(rec, r.read_word(rec))
+            continue
+        pruned += 1
+        nxt = pp.decode(rec, r.read_word(rec)) if in_bounds else None
+        if prev is None:
+            heap.set_root(slot, nxt)              # durable flush + fence
+        else:
+            m.write(prev, pp.PPTR_NULL if nxt is None
+                    else pp.encode(prev, nxt))
+            m.flush(prev)
+            m.fence()
+        rec = nxt
+    return pruned
 
 
 def retrim_after_recovery(r, slot: int = PREFIX_INDEX_ROOT
@@ -186,13 +286,23 @@ class PrefixIndex:
         head = r.heap.get_root(self.slot)
         r.write_word(rec, pp.PPTR_NULL if head is None
                      else pp.encode(rec, head))
-        r.write_word(rec + 1, pp.encode(rec + 1, span_ptr))
-        r.write_word(rec + 2, int(key) & _KEY_MASK)
+        span_word = pp.encode(rec + 1, span_ptr)
+        r.write_word(rec + 1, span_word)
         r.write_word(rec + 3, int(n_pages))
         r.write_word(rec + 4, int(lease_sbs))
-        r.flush_range(rec, REC_WORDS)
-        r.fence()                    # record durable BEFORE it is reachable
+        if not is_suppressed("prefix_index.publish.fields_persist"):
+            r.flush_range(rec, REC_WORDS)
+            r.fence()                # fields durable BEFORE the seal word:
+        r.mem.note("record_seal", record=rec)     # …a torn record can only
+        key48 = int(key) & _KEY_MASK              # be missing its seal
+        cksum = _record_checksum(span_word, int(n_pages), int(lease_sbs),
+                                 key48)
+        r.write_word(rec + 2, key48 | (cksum << 48))
+        if not is_suppressed("prefix_index.publish.record_persist"):
+            r.flush_range(rec + 2, 1)
+            r.fence()                # sealed record durable BEFORE reachable
         r.set_root(self.slot, rec, TYPENAME)     # atomic swing (flush+fence)
+        r.mem.note("publish_end", record=rec, slot=self.slot)
         return rec
 
     def remove(self, key: int) -> bool:
@@ -207,7 +317,8 @@ class PrefixIndex:
         while rec is not None and rec not in seen:
             seen.add(rec)
             nxt = pp.decode(rec, r.read_word(rec))
-            if (int(r.read_word(rec + 2)) & _KEY_MASK) == key:
+            if (record_is_valid(r, rec)
+                    and (int(r.read_word(rec + 2)) & _KEY_MASK) == key):
                 # unlink durable BEFORE the lease drops: a linked record
                 # must always imply a live span
                 if prev is None:
@@ -215,10 +326,12 @@ class PrefixIndex:
                 else:
                     r.write_word(prev, pp.PPTR_NULL if nxt is None
                                  else pp.encode(prev, nxt))
-                    r.flush_range(prev, 1)
-                    r.fence()
+                    if not is_suppressed("prefix_index.remove.unlink_persist"):
+                        r.flush_range(prev, 1)
+                        r.fence()
                 span = pp.decode(rec + 1, r.read_word(rec + 1))
                 lease = int(r.read_word(rec + 4))
+                r.mem.note("lease_release", record=rec, slot=self.slot)
                 if span is not None and lease >= 1:
                     r.span_release(span, lease)
                 r.free(rec)

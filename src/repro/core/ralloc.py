@@ -27,6 +27,7 @@ import math
 import threading
 
 from . import layout, recovery
+from ..analysis.faults import is_suppressed
 from .filters import FilterRegistry, conservative_filter
 from .heap import PersistentHeap
 from .layout import (ANCHOR_NIL_AVAIL, D_ANCHOR, D_BLOCK_SIZE, D_NEXT_FREE,
@@ -621,7 +622,9 @@ class Ralloc:
             m.write(self.desc(sb, D_BLOCK_SIZE), 0)
             to_persist += [self.desc(sb, D_SIZE_CLASS),
                            self.desc(sb, D_BLOCK_SIZE)]
-        self._persist(*to_persist)
+        if not is_suppressed("ralloc.free_large.persist"):
+            self._persist(*to_persist)
+        self.mem.note("span_free", head=first, nsb=nsb)
         # the span re-enters the free set as one atomic unit: a placement
         # drain interleaving between the pushes would observe a torn run
         # (a prefix of the span), claim it misaligned, and leave stranded
@@ -657,7 +660,10 @@ class Ralloc:
             m.write(self.desc(sb, D_BLOCK_SIZE), 0)
             to_persist += [self.desc(sb, D_SIZE_CLASS),
                            self.desc(sb, D_BLOCK_SIZE)]
-        self._persist(*to_persist)
+        if not is_suppressed("ralloc.trim_tail.persist"):
+            self._persist(*to_persist)
+        self.mem.note("tail_free", head=head, new_ext=new_ext,
+                      old_ext=old_ext)
         # the tail re-enters the free set atomically (same torn-run
         # argument as _free_large)
         with self._large_lock:

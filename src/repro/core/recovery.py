@@ -138,6 +138,18 @@ def recover(r) -> dict:
     for c in range(layout.NUM_CLASSES):
         m.write(layout.M_PARTIAL_HEADS + c, pack_head(-1, 0))
 
+    # step 4½: prune torn prefix-index records *before* the mark pass —
+    # a record whose seal checksum does not match its fields must never
+    # be re-published, so it is durably unlinked here and its block left
+    # for the sweep (unreachable ⇒ reclaimed).
+    index_slots = sorted(i for i, t in r._root_filters.items()
+                         if t == "prefix_index")
+    index_pruned = 0
+    if index_slots:
+        from .prefix_index import prune_torn_records
+        for slot in index_slots:
+            index_pruned += prune_torn_records(r, slot)
+
     # step 5: mark (+ span-refcount reconstruction, same pass)
     span_refs: dict[int, int] = {}
     visited = trace(r, span_refs)
@@ -221,8 +233,6 @@ def recover(r) -> dict:
     # The trims write persistent records (_trim_tail) before the final
     # drain below, so the recovered image is already re-trimmed.
     index_records = index_retrims = 0
-    index_slots = sorted(i for i, t in r._root_filters.items()
-                         if t == "prefix_index")
     if index_slots:
         from .prefix_index import retrim_after_recovery
         for slot in index_slots:
@@ -240,6 +250,7 @@ def recover(r) -> dict:
         "free_runs": len(free_superblock_runs(r)),
         "index_records": index_records,
         "index_retrims": index_retrims,
+        "index_pruned": index_pruned,
         "partial_superblocks": n_partial,
         "full_superblocks": n_full,
         "large_blocks": len(large_heads),

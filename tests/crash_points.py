@@ -40,6 +40,8 @@ from __future__ import annotations
 
 import numpy as np
 
+from repro.analysis.persist_lint import check_allocator
+from repro.analysis.trace import attach_tracer
 from repro.core import layout, recovery
 from repro.core.layout import (D_BLOCK_SIZE, D_SIZE_CLASS, LARGE_CLASS,
                                LARGE_CONT, SB_SIZE)
@@ -49,6 +51,14 @@ from repro.core.ralloc import Ralloc
 MB = 1 << 20
 SENTINEL = 0xC0DE0000
 KEY0 = 0x51A5E0000
+
+
+def assert_persist_order(r: Ralloc, tracer, where: str) -> None:
+    """Every harness run doubles as a persist-order check: replay the
+    traced events against the standard ordering spec and fail on any
+    violation (see ``repro.analysis.persist_lint``)."""
+    rep = check_allocator(r, tracer)
+    assert rep.ok, f"persist-order violations during {where}:\n{rep}"
 
 
 def record_persist_boundaries(r: Ralloc) -> list[np.ndarray]:
@@ -291,8 +301,10 @@ def run_crash_points(ops: list[tuple[bool, int]], *, size: int = 2 * MB,
     record refill would dwarf the span traffic under test)."""
     r = Ralloc(None, size, sim_nvm=True, seed=seed, expand_sbs=1)
     idx = PrefixIndex(r)
+    tracer = attach_tracer(r)
     snaps = record_persist_boundaries(r)
     run_host_trace(r, ops, idx)
+    assert_persist_order(r, tracer, "the host trace")
     # every op allocates at most one root — a (True, k) op with nothing
     # live falls through to an allocation too, so bound by len(ops), not
     # by the is_free=False count (which would leave roots unchecked)
@@ -304,7 +316,9 @@ def run_crash_points(ops: list[tuple[bool, int]], *, size: int = 2 * MB,
         # registering the typed index root BEFORE recover() is what makes
         # the trace visit records precisely and re-trim their leases
         idx2 = PrefixIndex(r2)
+        tracer2 = attach_tracer(r2)
         assert r2.dirty_restart, "persist-boundary image must be dirty"
         r2.recover()
         check_recovered_heap(r2, n_roots, index=idx2)
+        assert_persist_order(r2, tracer2, "recovery of a boundary image")
     return len(images)

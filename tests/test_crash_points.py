@@ -177,6 +177,64 @@ def test_property_publish_crash_at_any_boundary_recovers(ops):
     run_crash_points(ops, seed=41)
 
 
+def test_torn_record_pruned_at_recovery_never_republished():
+    """Satellite (torn-record hardening): a record whose sealed words
+    tore across the crash must be durably unlinked by recovery — its key
+    unresolvable, its lease never reconstructed, its block reclaimed —
+    while an intact neighbour record survives untouched.  A second
+    recovery over the pruned image is a no-op (``index_pruned == 0``)."""
+    from repro.core.layout import SB_SIZE
+    from repro.core.prefix_index import PrefixIndex, hash_tokens
+    from repro.core.ralloc import Ralloc
+
+    r = Ralloc(None, 2 * (1 << 20), sim_nvm=True, seed=51, expand_sbs=1)
+    idx = PrefixIndex(r)
+    key_a, key_b = hash_tokens([1, 2]), hash_tokens([3, 4])
+    a = r.malloc(2 * SB_SIZE - 256)
+    r.write_word(a, 0xAAAA); r.flush_range(a, 1); r.fence()
+    r.set_root(0, a)
+    rec_a = idx.publish(key_a, a, n_pages=1, lease_sbs=1)
+    b = r.malloc(2 * SB_SIZE - 256)
+    r.write_word(b, 0xBBBB); r.flush_range(b, 1); r.fence()
+    rec_b = idx.publish(key_b, b, n_pages=2, lease_sbs=2)
+    assert rec_a is not None and rec_b is not None
+    # b's only durable reference is its record; a is also rooted
+    r.mem.drain(); r.fence()
+    img = r.mem.nvm.copy()
+    img[rec_b + 4] ^= 0x2000                  # tear a sealed word of b's rec
+
+    r2 = Ralloc(None, 2 * (1 << 20), sim_nvm=True, seed=52,
+                backing=img, expand_sbs=1)
+    idx2 = PrefixIndex(r2)
+    stats = r2.recover()
+    assert stats["index_pruned"] == 1, stats
+    # the torn record is gone and never re-publishes its span
+    assert idx2.lookup(key_b) is None
+    surv = idx2.lookup(key_a)
+    assert surv is not None and surv.ptr == rec_a and surv.n_pages == 1
+    assert int(r2.read_word(surv.span)) == 0xAAAA
+    assert [rec.ptr for rec in idx2.records()] == [rec_a]
+    # leases reflect survivors only: span a = root + record on sb 0 of 2;
+    # span b lost its sole reference and was swept into the free set
+    sb_a, sb_b = r2.heap.sb_of(a), r2.heap.sb_of(b)
+    assert r2.leases.counts(sb_a)[0] == 2
+    # counts() == [] means span b is not tracked at all (count() would
+    # report the advisory single-owner default for unknown spans)
+    assert r2.leases.counts(sb_b) == []
+    assert sb_b not in r2.leases.snapshot()
+    from repro.core import recovery as rec_mod
+    assert any(s <= sb_b < s + ln
+               for s, ln in rec_mod.free_superblock_runs(r2))
+    # pruning is idempotent: a second recovery finds nothing torn
+    img2 = r2.mem.nvm.copy()
+    r3 = Ralloc(None, 2 * (1 << 20), sim_nvm=True, seed=53,
+                backing=img2, expand_sbs=1)
+    idx3 = PrefixIndex(r3)
+    stats3 = r3.recover()
+    assert stats3["index_pruned"] == 0
+    assert [rec.ptr for rec in idx3.records()] == [rec_a]
+
+
 @pytest.mark.slow
 @settings(max_examples=15, deadline=None)
 @given(st.lists(st.tuples(st.booleans(), st.integers(1, 4)),

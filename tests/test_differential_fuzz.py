@@ -23,6 +23,8 @@ try:
 except ImportError:                      # container without dev deps
     from _hypothesis_fallback import given, settings, strategies as st
 
+from repro.analysis.persist_lint import check_allocator
+from repro.analysis.trace import attach_tracer
 from repro.core import jax_alloc as ja
 from repro.core import jax_recovery as jr
 from repro.core import layout, recovery
@@ -64,10 +66,22 @@ def dev_occupancy(st_: ja.AllocState) -> tuple[int, list[str]]:
     return used, out
 
 
+def assert_persist_clean(r):
+    """Every fuzz run doubles as a persist-order check: the host heap
+    carries a tracer from birth (see the replay functions), and the full
+    event stream — trace, recovery, post-recovery ops — must satisfy the
+    standard ordering spec (``repro.analysis.persist_lint``).  The fast
+    (non-sim) mode changes nothing: the shadow models *guarantees*, not
+    the cache."""
+    rep = check_allocator(r, r._persist_tracer)
+    assert rep.ok, f"persist-order violations:\n{rep}"
+
+
 def replay(ops):
     """Drive both allocators through one trace; assert lock-step at every
     op.  Returns (host, device state, live list of (host ptr, dev off, k))."""
     r = Ralloc(None, N_SBS * SB_SIZE)
+    r._persist_tracer = attach_tracer(r)
     dst = ja.init_state(DEV_CFG, max_roots=64)
     live = []
     for is_free, k in ops:
@@ -89,6 +103,7 @@ def replay(ops):
                 f"device sb {off // DEV_SB_WORDS}"
             live.append((ptr, off, k))
         assert host_occupancy(r) == dev_occupancy(dst), "occupancy drift"
+    assert_persist_clean(r)
     return r, dst, live
 
 
@@ -140,6 +155,7 @@ def test_differential_trace_lockstep(ops):
     if ptr is not None:
         assert r.heap.sb_of(ptr) == int(off) // DEV_SB_WORDS, \
             "post-recovery placement drift"
+    assert_persist_clean(r)      # trace + recovery + post-recovery ops
 
 
 def test_differential_best_fit_prefers_smallest_run():
@@ -214,6 +230,7 @@ def replay_events(events):
     Returns (host, device state, live [[ptr, off, k, leases]]).
     """
     r = Ralloc(None, N_SBS * SB_SIZE)
+    r._persist_tracer = attach_tracer(r)
     dst = ja.init_state(DEV_CFG, max_roots=64)
     live = []       # [ptr, off, k, [lease_sbs, ...]]
     for op, k in events:
@@ -271,6 +288,7 @@ def replay_events(events):
             live.append([ptr, off, k, [k]])
         assert host_occupancy(r) == dev_occupancy(dst), "occupancy drift"
         assert_lease_lockstep(r, dst, live)
+    assert_persist_clean(r)
     return r, dst, live
 
 
@@ -328,6 +346,7 @@ def test_differential_refcounted_trace_lockstep(events):
     assert (ptr is None) == (int(off) < 0)
     if ptr is not None:
         assert r.heap.sb_of(ptr) == int(off) // DEV_SB_WORDS
+    assert_persist_clean(r)      # trace + recovery + post-recovery ops
 
 
 def test_differential_shared_free_keeps_span_placed():
@@ -448,6 +467,7 @@ def replay_publish_events(events):
     lease_sbs)`` (oldest first).
     """
     r = Ralloc(None, N_SBS * SB_SIZE, expand_sbs=1)
+    r._persist_tracer = attach_tracer(r)
     idx = PrefixIndex(r)
     dst = ja.init_state(DEV_CFG, max_roots=64)
     warm, warm_dev, dst = _pin_record_sb(r, dst)
@@ -520,6 +540,7 @@ def replay_publish_events(events):
         assert_lease_lockstep(r, dst,
                               [[p, o, kk, h + pub]
                                for p, o, kk, h, pub in spans])
+    assert_persist_clean(r)
     return r, idx, dst, spans, published, warm_dev
 
 
@@ -611,6 +632,7 @@ def test_differential_publish_crash_republish_lockstep(events):
     assert (p is None) == (int(o) < 0)
     if p is not None:
         assert r.heap.sb_of(p) == int(o) // DEV_SB_WORDS
+    assert_persist_clean(r)      # trace + recovery + re-publish
 
 
 def test_differential_record_only_span_retrims_after_crash():
@@ -641,6 +663,7 @@ def test_differential_record_only_span_retrims_after_crash():
     dst = _free_large(state=dst, off=jnp.int32(off), n_sbs=jnp.int32(1))
     assert recovery.free_superblock_runs(r) == [(1, 3)]
     assert_free_runs_agree(r, dst)
+    assert_persist_clean(r)      # trace + recovery + unpublish
 
 
 @pytest.mark.slow
@@ -653,6 +676,7 @@ def test_differential_publish_trace_deep(events):
     dst = recover_both_with_index(r, dst, spans, published, warm_dev)
     assert host_occupancy(r) == dev_occupancy(dst)
     assert_post_recovery_index_model(r, dst, spans, published)
+    assert_persist_clean(r)
 
 
 @pytest.mark.slow

@@ -1,0 +1,294 @@
+"""Units for the persist-order analysis layer (``repro.analysis``).
+
+Covers the strict durability shadow (the clwb-captures-at-flush model),
+the tracer plumbing, the perf diagnostics, the torn-record seal
+checksum, and the static AST lint — including the requirement that the
+current tree is lint-clean (the same gate CI enforces via
+``tools/lint_persist.py``).
+"""
+
+import pathlib
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.analysis.persist_lint import (DurabilityShadow, check_allocator,
+                                         check_trace, standard_rules)
+from repro.analysis.static_checks import (DEFER_ANNOTATION, check_source,
+                                          check_tree)
+from repro.analysis.trace import CrashAfter, SimulatedCrash, attach_tracer
+from repro.analysis import faults
+from repro.core import pptr as pp
+from repro.core.atomics import NVMArray
+from repro.core.layout import SB_SIZE
+from repro.core.prefix_index import (PrefixIndex, _record_checksum,
+                                     hash_tokens, record_is_valid)
+from repro.core.ralloc import Ralloc
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+
+
+# ---------------------------------------------------------------------------
+# DurabilityShadow: the strict (guarantee-only) model
+# ---------------------------------------------------------------------------
+def _shadow(n=64):
+    return DurabilityShadow(np.zeros(n, dtype=np.int64))
+
+
+def test_shadow_write_flush_fence_lifecycle():
+    sh = _shadow()
+    sh.write(3, 7)
+    assert not sh.is_durable(3)
+    assert sh.durable_value(3) == 0          # base image until committed
+    sh.flush(3)
+    assert not sh.is_durable(3)              # clwb alone guarantees nothing
+    sh.fence()
+    assert sh.is_durable(3)
+    assert sh.durable_value(3) == 7
+
+
+def test_shadow_fence_without_flush_commits_nothing():
+    sh = _shadow()
+    sh.write(3, 7)
+    sh.fence()
+    assert not sh.is_durable(3)
+    assert sh.durable_value(3) == 0
+
+
+def test_shadow_rewrite_after_flush_keeps_flushed_snapshot():
+    """Hardware clwb captures the line at flush time: a later write is
+    NOT covered by the earlier flush, but the flushed snapshot still
+    commits at the fence."""
+    sh = _shadow()
+    sh.write(3, 7)
+    sh.flush(3)
+    sh.write(3, 9)                           # after the flush
+    sh.fence()
+    assert not sh.is_durable(3)              # latest value not guaranteed
+    assert sh.durable_value(3) == 7          # the snapshot committed
+    sh.flush(3)
+    sh.fence()
+    assert sh.is_durable(3)
+    assert sh.durable_value(3) == 9
+
+
+def test_shadow_flush_covers_whole_line():
+    sh = _shadow()
+    sh.write(8, 1)
+    sh.write(9, 2)
+    sh.flush(8)                              # same cache line as 9
+    sh.fence()
+    assert sh.is_durable(8) and sh.is_durable(9)
+
+
+def test_shadow_crash_drops_pending_drain_commits_all():
+    sh = _shadow()
+    sh.write(3, 7)
+    sh.crash()
+    assert sh.is_durable(3) and sh.durable_value(3) == 0
+    sh.write(4, 9)
+    sh.drain()
+    assert sh.is_durable(4) and sh.durable_value(4) == 9
+
+
+def test_shadow_perf_diagnostics():
+    sh = _shadow()
+    sh.write(3, 7)
+    sh.flush(3)
+    sh.flush(3)                              # nothing new dirty → redundant
+    sh.fence()
+    sh.fence()                               # nothing flushed since → empty
+    assert sh.diag["redundant_flushes"] == 1
+    assert sh.diag["empty_fences"] == 1
+    assert sh.diag["flushes"] == 2 and sh.diag["fences"] == 2
+
+
+# ---------------------------------------------------------------------------
+# Tracer plumbing
+# ---------------------------------------------------------------------------
+def test_tracer_records_epoch_stamped_events():
+    mem = NVMArray(64, sim=True)
+    tr = attach_tracer(mem)
+    mem.write(3, 7)
+    mem.flush(3)
+    mem.fence()
+    mem.write(4, 1)
+    kinds = [(e.kind, e.epoch) for e in tr.events]
+    assert kinds == [("write", 0), ("flush", 0), ("fence", 0), ("write", 1)]
+    assert tr.events[0].addr == 3 and tr.events[0].value == 7
+
+
+def test_tracer_cas_emits_write_then_cas():
+    mem = NVMArray(64)
+    tr = attach_tracer(mem)
+    assert mem.cas(0, 0, 5)
+    assert [e.kind for e in tr.events] == ["write", "cas"]
+    assert tr.events[1].info == {"ok": True}
+    assert not mem.cas(0, 0, 6)              # expected stale
+    assert tr.events[-1].kind == "cas" and not tr.events[-1].info["ok"]
+
+
+def test_tracer_note_passthrough_and_untraced_noop():
+    mem = NVMArray(64)
+    mem.note("whatever", a=1)                # no tracer: must not raise
+    tr = attach_tracer(mem)
+    mem.note("record_seal", record=12)
+    ev = tr.events[-1]
+    assert ev.kind == "note" and ev.label == "record_seal"
+    assert ev.info == {"record": 12}
+
+
+def test_crash_after_blocks_the_budgeted_event():
+    mem = NVMArray(64, sim=True)
+    attach_tracer(mem, CrashAfter(2))
+    mem.write(3, 7)                          # event 1
+    mem.flush(3)                             # event 2
+    with pytest.raises(SimulatedCrash):
+        mem.fence()                          # event 3: blocked BEFORE effect
+    mem.tracer = None
+    assert int(mem.nvm[3]) == 0              # the fence never wrote back
+
+
+# ---------------------------------------------------------------------------
+# check_trace end-to-end on a live allocator
+# ---------------------------------------------------------------------------
+def test_clean_publish_remove_trace_has_zero_violations():
+    r = Ralloc(None, 2 * (1 << 20), sim_nvm=True, seed=3, expand_sbs=1)
+    tr = attach_tracer(r)
+    idx = PrefixIndex(r)
+    p = r.malloc(2 * SB_SIZE - 256)
+    r.write_word(p, 0xBEEF)
+    r.flush_range(p, 1)
+    r.fence()
+    r.set_root(0, p)
+    key = hash_tokens([1, 2])
+    assert idx.publish(key, p, n_pages=2, lease_sbs=1) is not None
+    assert idx.remove(key)
+    rep = check_allocator(r, tr)
+    assert rep.ok, rep
+    d = rep.diagnostics
+    assert d["notes"]["publish_end"] == 1
+    assert d["notes"]["lease_release"] == 1
+    assert d["ops"] == 2 and d["fences_per_op"] > 0
+
+
+def test_check_trace_flags_unflushed_root_swing():
+    """Synthetic violation: hand-built event stream where a root swing
+    publishes a record none of whose words are durable."""
+    from repro.analysis.trace import TraceEvent
+    from repro.core import layout
+    r = Ralloc(None, 2 * (1 << 20), sim_nvm=True, seed=4, expand_sbs=1)
+    PrefixIndex(r, slot=9)
+    base = r.mem.nvm.copy()
+    rec = r.config.sb_base + 100
+    events = [
+        TraceEvent(0, 0, "write", rec, 1),
+        TraceEvent(1, 0, "write", layout.M_ROOTS + 9,
+                   rec - r.config.sb_base + 1),
+    ]
+    rep = check_trace(events, base, standard_rules(r))
+    assert any(v.rule == "record-durable-before-root-swing"
+               for v in rep.violations), rep
+
+
+# ---------------------------------------------------------------------------
+# faults registry
+# ---------------------------------------------------------------------------
+def test_faults_suppress_scoped_and_typo_rejected():
+    site = "heap.set_root.persist"
+    assert not faults.is_suppressed(site)
+    with faults.suppress(site):
+        assert faults.is_suppressed(site)
+    assert not faults.is_suppressed(site)
+    with pytest.raises(ValueError):
+        with faults.suppress("no.such.site"):
+            pass
+
+
+# ---------------------------------------------------------------------------
+# seal checksum (torn-record hardening)
+# ---------------------------------------------------------------------------
+def test_checksum_zero_fields_nonzero_and_never_pptr_tag():
+    assert _record_checksum(0, 0, 0, 0) != 0     # zeroed seal word invalid
+    rng = np.random.default_rng(7)
+    for _ in range(500):
+        vals = [int(x) for x in rng.integers(0, 1 << 62, size=4)]
+        c = _record_checksum(*vals)
+        assert 0 <= c < (1 << 16)
+        assert c != pp.PPTR_TAG              # conservative-scan equivalence
+
+
+def test_record_is_valid_detects_each_torn_field():
+    r = Ralloc(None, 2 * (1 << 20), sim_nvm=True, seed=5, expand_sbs=1)
+    idx = PrefixIndex(r)
+    p = r.malloc(2 * SB_SIZE - 256)
+    r.set_root(0, p)
+    rec = idx.publish(hash_tokens([3]), p, n_pages=2, lease_sbs=1)
+    assert record_is_valid(r, rec)
+    for off in (1, 2, 3, 4):                 # every sealed word
+        saved = r.read_word(rec + off)
+        r.write_word(rec + off, saved ^ 0x10000)
+        assert not record_is_valid(r, rec), f"tear in word {off} missed"
+        r.write_word(rec + off, saved)
+    assert record_is_valid(r, rec)
+    # …but a next-pointer rewrite (neighbour unlink) must NOT invalidate
+    r.write_word(rec, pp.PPTR_NULL)
+    assert record_is_valid(r, rec)
+    # out-of-bounds addresses are invalid, not crashes
+    assert not record_is_valid(r, r.config.total_words + 5)
+
+
+# ---------------------------------------------------------------------------
+# static checks
+# ---------------------------------------------------------------------------
+def test_static_nvm001_store_flagged_and_allowed_in_atomics():
+    src = "def f(mem):\n    mem.nvm[3] = 7\n"
+    assert [f.code for f in check_source("x.py", src)] == ["NVM001"]
+    assert check_source("x.py", src, allow_nvm_store=True) == []
+    # reads don't count
+    assert check_source("x.py", "def f(mem):\n    return mem.nvm[3]\n") == []
+
+
+def test_static_shd001_sharding_refs_flagged_outside_runtime():
+    for src in ("from jax.experimental.shard_map import shard_map\n",
+                "import jax.experimental.shard_map as sm\n",
+                "from jax.sharding import AxisType\n",
+                "def f():\n    import jax\n    return jax.sharding.AxisType\n"):
+        codes = [f.code for f in check_source("x.py", src)]
+        assert codes and set(codes) == {"SHD001"}, src
+        assert check_source("x.py", src, allow_sharding=True) == []
+    # the runtime facade re-export is the sanctioned path
+    assert check_source("x.py", "from repro.runtime import shard_map\n") == []
+
+
+def test_static_per001_unflushed_persistent_write():
+    bad = "def g(mem, layout):\n    mem.write(layout.M_ROOTS + 1, 5)\n"
+    assert [f.code for f in check_source("x.py", bad)] == ["PER001"]
+    ok = ("def g(mem, layout):\n"
+          "    mem.write(layout.M_ROOTS + 1, 5)\n"
+          "    mem.flush(layout.M_ROOTS + 1)\n"
+          "    mem.fence()\n")
+    assert check_source("x.py", ok) == []
+    deferred = ("def g(mem, layout):\n"
+                f"    # {DEFER_ANNOTATION}: drained at close\n"
+                "    mem.write(layout.D_SIZE_CLASS, 0)\n")
+    assert check_source("x.py", deferred) == []
+    # a layout constant used as a *value* is not a persistent-field write
+    val = "def g(mem, layout):\n    mem.write(10, layout.M_ROOTS)\n"
+    assert check_source("x.py", val) == []
+
+
+def test_static_lint_current_tree_is_clean():
+    findings = check_tree(REPO / "src" / "repro")
+    assert findings == [], "\n".join(map(str, findings))
+
+
+def test_lint_cli_exits_zero_on_tree():
+    proc = subprocess.run(
+        [sys.executable, str(REPO / "tools" / "lint_persist.py"),
+         str(REPO / "src" / "repro")],
+        capture_output=True, text=True, cwd=REPO)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "clean" in proc.stdout

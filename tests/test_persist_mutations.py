@@ -1,0 +1,161 @@
+"""Mutation tests: the persist-order checker has teeth.
+
+Each seeded flush/fence site in the allocator can be suppressed via
+``repro.analysis.faults.suppress``.  For every site we run a scenario
+that exercises it and assert the trace checker reports a violation of
+the *expected* rule; the identical unmutated scenario must report zero
+violations.  This is the ISSUE's acceptance bar: the checker is only
+evidence if deleting a barrier actually trips it.
+
+The shadow model is strict (flush-after-write + fence required), so
+these results are deterministic — no dependence on the simulator's
+random eviction, and identical in sim and fast modes.
+"""
+
+import pytest
+
+from repro.analysis import faults
+from repro.analysis.persist_lint import check_allocator
+from repro.analysis.trace import attach_tracer
+from repro.core.layout import SB_SIZE
+from repro.core.prefix_index import PrefixIndex, hash_tokens
+from repro.core.ralloc import Ralloc
+
+HEAP_BYTES = 4 * (1 << 20)
+
+
+def _heap(seed):
+    r = Ralloc(None, HEAP_BYTES, sim_nvm=True, seed=seed, expand_sbs=1)
+    tr = attach_tracer(r)
+    return r, tr
+
+
+def _publish_scenario(seed=11):
+    """Allocate a 2-sb span, root it, publish a prefix record."""
+    r, tr = _heap(seed)
+    idx = PrefixIndex(r)
+    p = r.malloc(2 * SB_SIZE - 256)
+    r.write_word(p, 0x1111)
+    r.flush_range(p, 1)
+    r.fence()
+    r.set_root(0, p)
+    idx.publish(hash_tokens([1]), p, n_pages=2, lease_sbs=2)
+    return r, tr, idx
+
+
+def _rules_fired(r, tr):
+    rep = check_allocator(r, tr)
+    return rep, {v.rule for v in rep.violations}
+
+
+# ---------------------------------------------------------------------------
+# baseline: every scenario below, unmutated, is clean
+# ---------------------------------------------------------------------------
+def test_unmutated_combined_scenario_is_clean():
+    r, tr, idx = _publish_scenario()
+    # second record → later mid-chain removal path
+    q = r.malloc(3 * SB_SIZE - 256)
+    r.set_root(1, q)
+    idx.publish(hash_tokens([2]), q, n_pages=1, lease_sbs=3)
+    assert idx.remove(hash_tokens([1]))          # mid-chain unlink
+    r.span_trim(q, 1)                            # tail trim
+    # free an unpublished span end-to-end
+    s = r.malloc(SB_SIZE)
+    r.set_root(2, s)
+    r.set_root(2, None)
+    r.free(s)
+    rep, fired = _rules_fired(r, tr)
+    assert rep.ok, rep
+    assert fired == set()
+
+
+# ---------------------------------------------------------------------------
+# one test per fault site
+# ---------------------------------------------------------------------------
+def test_mutation_publish_fields_persist():
+    r, tr = _heap(21)
+    idx = PrefixIndex(r)
+    p = r.malloc(2 * SB_SIZE - 256)
+    r.set_root(0, p)
+    with faults.suppress("prefix_index.publish.fields_persist"):
+        idx.publish(hash_tokens([1]), p, n_pages=2, lease_sbs=2)
+    rep, fired = _rules_fired(r, tr)
+    assert not rep.ok
+    assert "record-fields-durable-before-seal" in fired, rep
+
+
+def test_mutation_publish_record_persist():
+    r, tr = _heap(22)
+    idx = PrefixIndex(r)
+    p = r.malloc(2 * SB_SIZE - 256)
+    r.set_root(0, p)
+    with faults.suppress("prefix_index.publish.record_persist"):
+        idx.publish(hash_tokens([1]), p, n_pages=2, lease_sbs=2)
+    rep, fired = _rules_fired(r, tr)
+    assert not rep.ok
+    assert "record-durable-before-root-swing" in fired, rep
+
+
+def test_mutation_remove_unlink_persist():
+    r, tr = _heap(23)
+    idx = PrefixIndex(r)
+    p = r.malloc(2 * SB_SIZE - 256)
+    r.set_root(0, p)
+    q = r.malloc(SB_SIZE)
+    r.set_root(1, q)
+    idx.publish(hash_tokens([1]), p, n_pages=2, lease_sbs=2)
+    idx.publish(hash_tokens([2]), q, n_pages=1, lease_sbs=1)
+    with faults.suppress("prefix_index.remove.unlink_persist"):
+        assert idx.remove(hash_tokens([1]))      # NOT the head → mid-chain
+    rep, fired = _rules_fired(r, tr)
+    assert not rep.ok
+    assert "unlink-durable-before-lease-release" in fired, rep
+
+
+def test_mutation_set_root_persist():
+    r, tr = _heap(24)
+    idx = PrefixIndex(r)
+    p = r.malloc(2 * SB_SIZE - 256)
+    with faults.suppress("heap.set_root.persist"):
+        r.set_root(0, p)
+        idx.publish(hash_tokens([1]), p, n_pages=2, lease_sbs=2)
+    rep, fired = _rules_fired(r, tr)
+    assert not rep.ok
+    assert "root-swing-durable-at-publish-end" in fired, rep
+
+
+def test_mutation_trim_tail_persist():
+    r, tr = _heap(25)
+    p = r.malloc(3 * SB_SIZE - 256)
+    r.set_root(0, p)
+    with faults.suppress("ralloc.trim_tail.persist"):
+        r.span_trim(p, 1)
+    rep, fired = _rules_fired(r, tr)
+    assert not rep.ok
+    assert "trim-shrink-durable-before-tail-free" in fired, rep
+
+
+def test_mutation_free_large_persist():
+    # The span must have no other lease holders (no published record):
+    # freeing a leased span only decrements the lease and never reaches
+    # _free_large's persist at all.
+    r, tr = _heap(26)
+    p = r.malloc(SB_SIZE)
+    r.set_root(1, p)
+    r.set_root(1, None)
+    with faults.suppress("ralloc.free_large.persist"):
+        r.free(p)
+    rep, fired = _rules_fired(r, tr)
+    assert not rep.ok
+    assert "span-records-cleared-before-free" in fired, rep
+
+
+# ---------------------------------------------------------------------------
+# the wiring has teeth too: a suppressed site makes the crash harness fail
+# ---------------------------------------------------------------------------
+def test_crash_harness_detects_suppressed_site():
+    from crash_points import run_crash_points
+    ops = [("alloc", 2), ("publish", 1)]
+    with faults.suppress("prefix_index.publish.record_persist"):
+        with pytest.raises(AssertionError):
+            run_crash_points(ops, seed=90)

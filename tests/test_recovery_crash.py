@@ -1,0 +1,179 @@
+"""Crash-during-recovery idempotence fuzz.
+
+Recovery itself writes to the durable image (prune, sweep, lease
+re-trim, final drain).  A machine that crashes *mid-recovery* reboots
+into a second recovery over the partially-rewritten image — so recovery
+must be idempotent: recovering the crash-interrupted image must land on
+exactly the same semantic heap as recovering the pristine image once.
+
+Mechanism: a ``CrashAfter(k)`` tracer raises ``SimulatedCrash`` on the
+k+1-th memory event inside ``recover()``; in sim-NVM mode the backing
+array then holds precisely the durable bytes (the write-back cache is
+lost).  We re-open that image and recover fully, then compare semantic
+state — per-superblock class records, the free *set* and its runs (list
+order is rebuild-order, not part of the contract), the range-lease
+snapshot, the index records, and the raw root table — against a
+reference recovery of the pristine image.
+"""
+
+import random
+
+import pytest
+
+from repro.analysis.persist_lint import check_allocator
+from repro.analysis.trace import CrashAfter, SimulatedCrash, attach_tracer
+from repro.core import layout, recovery
+from repro.core.layout import D_BLOCK_SIZE, D_SIZE_CLASS, SB_SIZE
+from repro.core.prefix_index import PrefixIndex, hash_tokens
+from repro.core.ralloc import Ralloc
+
+HEAP_BYTES = 4 * (1 << 20)
+SEED = 77
+
+
+def _build_image(torn: bool = False):
+    """A heap whose recovery exercises every write-phase: a published
+    span whose owner vanished un-released (forces a *real* re-trim), a
+    plain rooted span, a freed span (free run), and small record blocks.
+    Returns the pristine durable image."""
+    r = Ralloc(None, HEAP_BYTES, sim_nvm=True, seed=SEED, expand_sbs=1)
+    idx = PrefixIndex(r)
+    a = r.malloc(3 * SB_SIZE - 256)
+    r.write_word(a, 0xAAAA)
+    r.set_root(0, a)
+    rec = idx.publish(hash_tokens([1, 2, 3]), a, n_pages=1, lease_sbs=1)
+    assert rec is not None
+    b = r.malloc(2 * SB_SIZE - 256)
+    r.write_word(b, 0xBBBB)
+    r.set_root(1, b)
+    c = r.malloc(SB_SIZE)
+    r.set_root(2, c)
+    r.set_root(2, None)
+    r.free(c)
+    # the owner of `a` exits without releasing: after the crash the index
+    # record is the span's only durable reference, so recovery must
+    # re-trim its 3-sb extent down to the record's 1-sb lease.
+    r.set_root(0, None)
+    r.mem.drain()
+    r.fence()
+    img = r.mem.nvm.copy()
+    if torn:
+        # tear a sealed word of the (single) record: prune must unlink it
+        img[rec + 4] ^= 0x4000
+    return img
+
+
+def _semantic_state(r, idx):
+    m = r.mem
+    used = int(m.read(layout.M_USED_SBS))
+    descs = {sb: (int(m.read(r.desc(sb, D_SIZE_CLASS))),
+                  int(m.read(r.desc(sb, D_BLOCK_SIZE))))
+             for sb in range(used)}
+    return {
+        "used": used,
+        "descs": descs,
+        "free": sorted(recovery.free_superblock_list(r)),
+        "runs": sorted(recovery.free_superblock_runs(r)),
+        "leases": {sb: segs for sb, segs in r.leases.snapshot().items()
+                   if segs},
+        "records": sorted((c.ptr, c.key, c.span, c.n_pages, c.lease_sbs)
+                          for c in idx.records()),
+        "roots": tuple(int(m.read(layout.M_ROOTS + i))
+                       for i in range(layout.MAX_ROOTS)),
+    }
+
+
+def _recover_fully(img, *, seed_shift=0):
+    r = Ralloc(None, HEAP_BYTES, sim_nvm=True, seed=SEED + 1 + seed_shift,
+               backing=img.copy(), expand_sbs=1)
+    idx = PrefixIndex(r)
+    tr = attach_tracer(r)
+    stats = r.recover()
+    rep = check_allocator(r, tr)
+    assert rep.ok, f"persist-order violation during recovery:\n{rep}"
+    return r, idx, stats, len(tr.events)
+
+
+def _crash_then_recover(img, budget):
+    """Crash recovery after `budget` events; return the re-recovered
+    heap's semantic state, or None if the budget outlived recovery."""
+    work = img.copy()
+    r = Ralloc(None, HEAP_BYTES, sim_nvm=True, seed=SEED + 2,
+               backing=work, expand_sbs=1)
+    PrefixIndex(r)
+    attach_tracer(r, CrashAfter(budget))
+    try:
+        r.recover()
+        return None                       # recovery finished under budget
+    except SimulatedCrash:
+        pass
+    # `work` now holds exactly what was durable at the crash point
+    r2, idx2, _, _ = _recover_fully(work, seed_shift=2)
+    return _semantic_state(r2, idx2)
+
+
+def _budget_sweep(n_events, extra_random=6):
+    ks = {1, 2, 3, n_events - 2, n_events - 1}
+    ks.update(n_events * i // 12 for i in range(1, 12))
+    rng = random.Random(SEED)
+    ks.update(rng.randrange(1, n_events) for _ in range(extra_random))
+    return sorted(k for k in ks if 1 <= k < n_events)
+
+
+def test_recovery_scenario_is_potent():
+    """Guard the fixture: the reference recovery must actually re-trim a
+    span and rebuild leases/free runs, else the sweep proves nothing."""
+    img = _build_image()
+    r, idx, stats, n_events = _recover_fully(img)
+    assert stats["index_retrims"] == 1, stats
+    assert stats["index_pruned"] == 0, stats
+    ref = _semantic_state(r, idx)
+    assert ref["records"] and ref["free"] and ref["leases"]
+    assert n_events > 50
+    # recovery is a fixed point: running it again changes nothing
+    r.recover()
+    assert _semantic_state(r, idx) == ref
+
+
+@pytest.mark.parametrize("torn", [False, True],
+                         ids=["clean-image", "torn-record-image"])
+def test_crash_mid_recovery_is_idempotent(torn):
+    img = _build_image(torn=torn)
+    r_ref, idx_ref, stats, n_events = _recover_fully(img)
+    assert stats["index_pruned"] == (1 if torn else 0), stats
+    ref = _semantic_state(r_ref, idx_ref)
+
+    budgets = _budget_sweep(n_events) if not torn \
+        else _budget_sweep(n_events, extra_random=3)[::2]
+    assert len(budgets) >= 8
+    interrupted = 0
+    for k in budgets:
+        state = _crash_then_recover(img, k)
+        if state is None:
+            continue
+        interrupted += 1
+        assert state == ref, f"divergence after crash at event {k}"
+    # the sweep must have produced real mid-recovery crashes, including
+    # deep ones (after the mark pass, inside sweep/retrim writes)
+    assert interrupted >= len(budgets) - 2, (interrupted, len(budgets))
+
+
+def test_crash_during_recovery_of_crash_image():
+    """Double fault: crash mid-operation, crash again mid-recovery, then
+    recover — still identical to recovering the first crash image."""
+    r = Ralloc(None, HEAP_BYTES, sim_nvm=True, seed=SEED, expand_sbs=1)
+    idx = PrefixIndex(r)
+    a = r.malloc(2 * SB_SIZE - 256)
+    r.set_root(0, a)
+    idx.publish(hash_tokens([9]), a, n_pages=1, lease_sbs=1)
+    b = r.malloc(SB_SIZE)
+    r.set_root(1, b)
+    r.mem.crash()                          # power loss mid-epoch
+    img = r.mem.nvm.copy()
+
+    r_ref, idx_ref, _, n_events = _recover_fully(img)
+    ref = _semantic_state(r_ref, idx_ref)
+    for k in (3, n_events // 3, 2 * n_events // 3, n_events - 1):
+        state = _crash_then_recover(img, k)
+        if state is not None:
+            assert state == ref, f"divergence after nested crash at {k}"

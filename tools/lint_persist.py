@@ -1,0 +1,42 @@
+#!/usr/bin/env python
+"""Repo-invariant static lint CLI (tier-1 CI gate).
+
+    python tools/lint_persist.py [path ...]     # default: src/repro
+
+Checks (see ``repro.analysis.static_checks``):
+  NVM001  no direct .nvm[...] stores outside core/atomics.py
+  SHD001  no jax.sharding.AxisType / shard_map outside src/repro/runtime/
+  PER001  persistent-field writes flushed in-function or annotated
+          `# persist: deferred`
+
+Exits 0 iff no findings.
+"""
+
+from __future__ import annotations
+
+import pathlib
+import sys
+
+_REPO = pathlib.Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(_REPO / "src"))
+
+from repro.analysis.static_checks import check_tree  # noqa: E402
+
+
+def main(argv=None) -> int:
+    targets = (argv if argv is not None else sys.argv[1:]) or \
+        [str(_REPO / "src" / "repro")]
+    findings = []
+    for t in targets:
+        findings.extend(check_tree(t))
+    for f in findings:
+        print(f)
+    if findings:
+        print(f"lint-persist: {len(findings)} finding(s)", file=sys.stderr)
+        return 1
+    print("lint-persist: clean")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
