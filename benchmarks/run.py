@@ -117,6 +117,24 @@ def bench_sharedprompt_recover(seed=0):
         a.close()
 
 
+def bench_servingchurn(seed=0):
+    """Larson-style serving churn over the durable prefix index: the
+    extra ``servingchurn_fences`` rows are
+    ``name,fences_per_request,requests_per_sec`` (not us/ops).  The
+    group-commit variant batches a whole generation of publications
+    behind one fence pair + one root swing (``publish_batch``) and
+    evicts through ``remove_batch`` — fences/request drops toward the
+    amortized floor instead of paying the strict protocol per record."""
+    for label, gc in (("ralloc", 1), ("ralloc+groupcommit", 8)):
+        a = fresh("ralloc")
+        ops, fpr = workloads.servingchurn(a, lanes=8, rounds=6,
+                                          group_commit=gc, seed=seed)
+        _row(f"servingchurn[{label}]", ops)
+        print(f"servingchurn_fences[{label}],{fpr:.3f},{ops:.0f}",
+              flush=True)
+        a.close()
+
+
 def bench_prodcon(pairs=(1,), seed=0):
     for kind in KINDS:
         for p in pairs:
@@ -227,6 +245,17 @@ BENCHES: dict[str, dict] = {
                        a, iters=2, fanout=3, seed=s,
                        durable_index=False))],
     },
+    "servingchurn": {
+        "full": bench_servingchurn,
+        # strict vs group-commit publish on the same churn: the pair is
+        # what the baseline gate trends — a regression that reopens the
+        # per-record fence pairs shows up as fences_per_request drift
+        "smoke": [("ralloc", lambda a, s: workloads.servingchurn(
+            a, lanes=4, rounds=3, hold_rounds=1, group_commit=1, seed=s)),
+            ("ralloc+groupcommit", lambda a, s: workloads.servingchurn(
+                a, lanes=4, rounds=3, hold_rounds=1, group_commit=4,
+                seed=s))],
+    },
     "prodcon": {
         "full": bench_prodcon,
         "smoke": [("ralloc", lambda a, s: workloads.prodcon(
@@ -257,7 +286,8 @@ def _meter_requests(a) -> dict:
 
 
 def run_smoke(names: list[str], seed: int,
-              json_path: str | None = None) -> int:
+              json_path: str | None = None,
+              baseline_path: str | None = None) -> int:
     """One tiny round of every selected workload, fail-fast (CI tier-1).
 
     ``json_path`` additionally writes the per-round results as JSON —
@@ -265,7 +295,13 @@ def run_smoke(names: list[str], seed: int,
     inspectable per-run without scraping logs.  Each round also reports
     its persistence traffic (``n_flush``/``n_fence``) normalized per
     allocator request (``fences_per_request``) — the paper's headline
-    cost metric, trended per CI run via the artifact."""
+    cost metric, trended per CI run via the artifact.
+
+    ``baseline_path`` points at a checked-in prior smoke artifact
+    (``benchmarks/baselines/smoke.json``): every round present in both
+    must reproduce its baseline ``fences_per_request`` within ±20% —
+    the gate that catches a silently reopened fence pair (regression)
+    or an unrecorded improvement (update the baseline to claim it)."""
     failed = 0
     results: list[dict] = []
 
@@ -337,6 +373,53 @@ def run_smoke(names: list[str], seed: int,
                       flush=True)
         finally:
             a.close()
+    if "servingchurn" in names:
+        # acceptance gate: the group commit must at least HALVE
+        # fences/request vs the strict per-record publish protocol on
+        # the same churn — weaker amortization means the batch paths
+        # quietly fell back to per-record fencing
+        fprs = {}
+        t0 = time.perf_counter()
+        for label, gc_n in (("ralloc", 1), ("ralloc+groupcommit", 4)):
+            a = fresh("ralloc", mb=64)
+            try:
+                _, fprs[label] = workloads.servingchurn(
+                    a, lanes=4, rounds=3, hold_rounds=1,
+                    group_commit=gc_n, seed=seed)
+            finally:
+                a.close()
+        ok = fprs["ralloc+groupcommit"] * 2 <= fprs["ralloc"]
+        record("servingchurn_sanity", "ralloc", ok,
+               time.perf_counter() - t0,
+               fences_strict=round(fprs["ralloc"], 3),
+               fences_grouped=round(fprs["ralloc+groupcommit"], 3))
+        if not ok:
+            print(f"smoke[servingchurn,ralloc] FAILED: group commit "
+                  f"{fprs['ralloc+groupcommit']:.3f} fences/request is "
+                  f"not ≤ half of strict {fprs['ralloc']:.3f} "
+                  f"(publish_batch/remove_batch amortization dead)",
+                  flush=True)
+    if baseline_path:
+        import json
+        with open(baseline_path) as f:
+            base = json.load(f)
+        want = {(b["workload"], b["kind"]): b["fences_per_request"]
+                for b in base.get("results", [])
+                if b.get("fences_per_request") is not None}
+        for row in list(results):
+            key = (row["workload"], row["kind"])
+            if row.get("fences_per_request") is None or key not in want:
+                continue
+            w, g = want[key], row["fences_per_request"]
+            if abs(g - w) <= 0.2 * w + 0.05:
+                continue
+            record(f"baseline:{key[0]}", key[1], False, 0.0,
+                   fences_per_request=g, baseline=w)
+            print(f"smoke[{key[0]},{key[1]}] FAILED baseline gate: "
+                  f"{g:.3f} fences/request vs checked-in {w:.3f} (±20%)"
+                  f" — regression, or an intended improvement that "
+                  f"needs benchmarks/baselines/smoke.json updated",
+                  flush=True)
     if json_path:
         import json
         with open(json_path, "w") as f:
@@ -361,6 +444,10 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="smoke only: also write per-round results as "
                          "JSON (CI uploads it as a workflow artifact)")
+    ap.add_argument("--baseline", default=None, metavar="PATH",
+                    help="smoke only: checked-in prior smoke artifact; "
+                         "each round's fences_per_request must match it "
+                         "within ±20%% (benchmarks/baselines/smoke.json)")
     args = ap.parse_args(argv)
     if args.workloads in ("all", ""):
         names = list(BENCHES)
@@ -371,7 +458,8 @@ def main(argv: list[str] | None = None) -> int:
             ap.error(f"unknown workload(s): {', '.join(unknown)} "
                      f"(known: {', '.join(BENCHES)})")
     if args.profile == "smoke":
-        return run_smoke(names, args.seed, json_path=args.json)
+        return run_smoke(names, args.seed, json_path=args.json,
+                         baseline_path=args.baseline)
     print("name,us_per_call,derived")
     for name in names:
         BENCHES[name]["full"](seed=args.seed)

@@ -364,6 +364,85 @@ def sharedprompt_recover(alloc, iters=4, span_k=3, fanout=3, prefix_k=1,
     return iters * fanout / dt, reprefilled, peak
 
 
+def servingchurn(alloc, lanes=8, rounds=6, group_commit=1, hold_rounds=2,
+                 span_k=2, seed=0):
+    """Larson-style cross-lane serving churn over the durable prefix
+    index (ralloc only).  Each round a new *generation* of ``lanes``
+    requests arrives: every lane reserves a prompt span, prefills it
+    (flushed stamp per superblock models the prompt KV), and publishes
+    its prefix into the durable index; the generation published
+    ``hold_rounds`` rounds ago is evicted by *this* round — records
+    unlinked, spans freed — Larson's bleeding pattern lifted from
+    objects to published prompts.
+
+    ``group_commit`` is how many publications ride one index commit:
+    1 = the strict per-record protocol (a fence pair per stage, per
+    record), ``lanes`` = the whole generation lands behind one shared
+    fields fence, one shared seal fence and ONE root swing
+    (``PrefixIndex.publish_batch``), with eviction through the matching
+    ``remove_batch`` (one unlink fence per generation).
+
+    Returns ``(requests_per_sec, fences_per_request)`` where a request
+    is one serve (reserve+prefill+publish) or one eviction.
+    """
+    import collections
+    from repro.core.layout import SB_SIZE, SB_WORDS
+    from repro.core.prefix_index import REC_BYTES, PrefixIndex, hash_tokens
+    r = alloc.r                         # ralloc-only (durable index)
+    idx = PrefixIndex(r)
+    # warm the record class so its one-off superblock claim doesn't
+    # pollute the per-protocol fence comparison
+    r.free(r.malloc(REC_BYTES))
+    gc = max(1, min(int(group_commit), lanes))
+    size = span_k * SB_SIZE - 512
+    gens = collections.deque()          # generations still published
+    requests = 0
+    fence0 = r.mem.n_fence
+
+    def evict(gen):
+        nonlocal requests
+        keys, heads = gen
+        if gc > 1:
+            idx.remove_batch(keys)
+        else:
+            for k in keys:
+                idx.remove(k)
+        for h in heads:
+            alloc.free(h)               # owner hold drops: the span frees
+        requests += len(heads)
+
+    t0 = time.perf_counter()
+    for it in range(rounds):
+        keys, heads, items = [], [], []
+        for lane in range(lanes):
+            head = alloc.malloc(size)
+            assert head is not None
+            for j in range(span_k):
+                r.write_word(head + j * SB_WORDS, 0x5EED + j)
+                r.flush_range(head + j * SB_WORDS, 1)
+            key = hash_tokens([seed, it, lane])
+            keys.append(key)
+            heads.append(head)
+            items.append((key, head, span_k, span_k))
+            requests += 1
+        # publish the generation (the flushed prefill stamps become
+        # durable under the publish protocol's own content fence)
+        if gc > 1:
+            for i in range(0, len(items), gc):
+                idx.publish_batch(items[i:i + gc])
+        else:
+            for item in items:
+                idx.publish(*item)
+        gens.append((keys, heads))
+        if len(gens) > hold_rounds:     # the bleeding edge: this round
+            evict(gens.popleft())       # evicts an older generation
+    while gens:
+        evict(gens.popleft())
+    dt = time.perf_counter() - t0
+    fences = r.mem.n_fence - fence0
+    return requests / dt, fences / max(requests, 1)
+
+
 def prodcon(alloc, n_pairs=1, items=4000, size=64):
     """Producer/consumer via an M&S-style queue: producer allocates,
     consumer frees (paper's Prod-con)."""

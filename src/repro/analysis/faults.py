@@ -20,7 +20,16 @@ from contextlib import contextmanager
 SITES = frozenset({
     "prefix_index.publish.fields_persist",   # record fields flush+fence
     "prefix_index.publish.record_persist",   # seal-word flush+fence (append)
+    "prefix_index.publish_batch.fields_persist",   # group-commit: the ONE
+    #                                          fence N records' field groups
+    #                                          share before any seal is written
+    "prefix_index.publish_batch.records_persist",  # group-commit: the ONE
+    #                                          fence N sealed records share
+    #                                          before the single root swing
     "prefix_index.remove.unlink_persist",    # mid-chain unlink flush+fence
+    "prefix_index.remove_batch.unlink_persist",    # batched eviction: the ONE
+    #                                          fence N unlinks share before
+    #                                          any lease drops
     "heap.set_root.persist",                 # root swing flush+fence
     "ralloc.trim_tail.persist",              # trim's size-record shrink
     "ralloc.free_large.persist",             # span record clears before free

@@ -184,12 +184,22 @@ class Report:
 # ---------------------------------------------------------------------------
 # The standard rule set: the repo's recoverability contract, rule by rule.
 # ---------------------------------------------------------------------------
-def standard_rules(r) -> list[Rule]:
+def standard_rules(r, *, group_commit: bool = True) -> list[Rule]:
     """Ordering spec for a :class:`~repro.core.ralloc.Ralloc` heap ``r``.
 
     Rules close over the heap geometry and the root-filter typing table,
     never over memory contents — all state questions go through the
     shadow at trigger time.
+
+    ``group_commit`` appends the *relaxed* batch-publish variant of the
+    record rules (``PrefixIndex.publish_batch``): N record field groups
+    may share ONE fence — none of the intermediate records is reachable
+    before the swing, so per-record fences buy nothing — but every
+    record of the batch must still be fully durable before the single
+    root swing, and the swing itself durable by batch end.  The batch
+    rules trigger only on ``batch_*`` notes, so strict single-publish
+    traces are unaffected; pass ``group_commit=False`` for the pure
+    per-record spec.
     """
     cfg = r.config
     desc_base, sb_base = cfg.desc_base, cfg.sb_base
@@ -352,6 +362,75 @@ def standard_rules(r) -> list[Rule]:
         lambda ev: ev.kind == "note" and ev.label == "span_free",
         span_free_check))
 
+    if not group_commit:
+        return rules
+
+    # --- group-commit (publish_batch) relaxation: N field groups share
+    # one fence, but the shared boundaries still order strictly against
+    # the seals and the single root swing.
+
+    # (3b) Every batch record's non-seal fields durable before ANY seal
+    # word is written (note "batch_seal" fires between the shared field
+    # fence and the first seal write).
+    def batch_seal_check(sh, ev):
+        msgs = []
+        for rec in ev.info["records"]:
+            bad = [w for w in (rec, rec + 1, rec + 3, rec + 4)
+                   if not sh.is_durable(w)]
+            if bad:
+                msgs.append(f"batch record {rec}: words {bad} not durable "
+                            f"at seal time")
+        return msgs
+    rules.append(Rule(
+        "batch-fields-durable-before-seal",
+        lambda ev: ev.kind == "note" and ev.label == "batch_seal",
+        batch_seal_check))
+
+    # (4b) Every batch record fully durable (fields AND seal) before the
+    # single root swing publishes the whole segment (note "batch_root"
+    # fires between the shared seal fence and the swing).
+    def batch_root_check(sh, ev):
+        msgs = []
+        for rec in ev.info["records"]:
+            bad = [w for w in range(rec, rec + REC_WORDS)
+                   if not sh.is_durable(w)]
+            if bad:
+                msgs.append(f"batch root swing with record {rec} words "
+                            f"{bad} not durable")
+        return msgs
+    rules.append(Rule(
+        "batch-records-durable-before-root-swing",
+        lambda ev: ev.kind == "note" and ev.label == "batch_root",
+        batch_root_check))
+
+    # (5b) The swing is durable by the time publish_batch returns and
+    # the durable chain from the root reaches every batch record — the
+    # relaxation never weakens what the caller may assume at return.
+    def batch_end_check(sh, ev):
+        slot, recs = ev.info["slot"], ev.info["records"]
+        addr = layout.M_ROOTS + slot
+        want = recs[0] - sb_base + 1
+        if not sh.is_durable(addr) or sh.durable_value(addr) != want:
+            return [f"publish_batch returned with root slot {slot} not "
+                    f"durably pointing at record {recs[0]}"]
+        reached = set()
+        off = sh.durable_value(addr)
+        cur = sb_base + off - 1 if off else None
+        while cur is not None and cur not in reached and len(reached) < 65536:
+            if not (sb_base <= cur < total_words):
+                break
+            reached.add(cur)
+            cur = pp.decode(cur, sh.durable_value(cur))
+        missing = [rec for rec in recs if rec not in reached]
+        if missing:
+            return [f"publish_batch returned with records {missing} not on "
+                    f"the durable chain from slot {slot}"]
+        return []
+    rules.append(Rule(
+        "root-swing-durable-at-batch-end",
+        lambda ev: ev.kind == "note" and ev.label == "publish_batch_end",
+        batch_end_check))
+
     return rules
 
 
@@ -364,6 +443,7 @@ def check_trace(events, base, rules) -> Report:
     sh = DurabilityShadow(base)
     violations: list[Violation] = []
     notes = Counter()
+    batch_ops = 0
     for ev in events:
         if ev.kind in ("write", "note"):
             for rule in rules:
@@ -382,11 +462,14 @@ def check_trace(events, base, rules) -> Report:
             sh.crash()
         elif ev.kind == "note":
             notes[ev.label] += 1
+            if ev.label == "publish_batch_end":
+                # one group commit = N semantic publishes for fences/op
+                batch_ops += len(ev.info.get("records", ()))
         # cas events are bookkeeping only: the underlying store already
         # arrived as its own write event.
     diag = dict(sh.diag)
     diag["notes"] = dict(notes)
-    ops = sum(n for lbl, n in notes.items() if lbl in OP_LABELS)
+    ops = batch_ops + sum(n for lbl, n in notes.items() if lbl in OP_LABELS)
     diag["ops"] = ops
     diag["fences_per_op"] = (diag["fences"] / ops) if ops else None
     return Report(violations=violations, diagnostics=diag)

@@ -54,6 +54,21 @@ spirit to ``Ralloc._trim_tail``):
     key, *not* word 0: unlinking a neighbour rewrites a live record's
     next pointer, which must not stale its seal.)
 
+Group commit (``publish_batch`` / ``remove_batch``): N publications can
+amortize the persist boundaries — the batch's records are chained among
+themselves (the last points at the old head), all N field groups share
+ONE flush+fence, all N seal words share ONE flush+fence, and a single
+root swing publishes the whole chain segment atomically (NVTraverse's
+observation: only the "destination" write must be individually ordered;
+intermediate appends may ride one fence).  ≈3 fences per batch instead
+of 4 per record.  A crash still lands in one of the two consistent
+states above, now batch-wide: before the swing none of the N records is
+reachable (GC frees the blocks, leases fall back to the roots); after it
+all N are.  Eviction mirrors it: ``remove_batch`` durably unlinks every
+victim behind one fence (head removals fold into one root swing) before
+ANY of the batch's leases drops — the per-record invariant is unchanged,
+only the fence is shared.
+
 Recovery-time **re-trim**: references rebuild as full-extent leases
 (lease lengths are transient), but an index record knows its page-derived
 lease length — ``retrim_after_recovery`` shrinks each record's
@@ -304,6 +319,132 @@ class PrefixIndex:
         r.set_root(self.slot, rec, TYPENAME)     # atomic swing (flush+fence)
         r.mem.note("publish_end", record=rec, slot=self.slot)
         return rec
+
+    def publish_batch(self, items) -> list:
+        """Group-commit publish: durably publish N prefixes with ONE
+        field fence, ONE seal fence and ONE root swing.
+
+        ``items`` is an iterable of ``(key, span_ptr, n_pages,
+        lease_sbs)`` tuples.  Returns the per-item record addresses
+        (``None`` where the heap could not place a record block — that
+        publish stays transient-only and its lease is released at once,
+        exactly like the single-publish degradation).
+
+        Ordering (module docstring, "Group commit"): leases for all N
+        first, then every record's non-seal fields — the batch chained
+        newest-first, the last new record pointing at the old head —
+        then one flush+fence covering all field groups *and* the
+        application's prior flushes of the published contents, then all
+        seal words + one flush+fence, then the single root swing.  The
+        intermediate records need no individual fences because none is
+        reachable until the swing lands.
+        """
+        r = self.r
+        items = [(int(k) & _KEY_MASK, sp, int(np_), int(ls))
+                 for k, sp, np_, ls in items]
+        if not items:
+            return []
+        if len(items) == 1:            # degenerate batch: the strict path
+            return [self.publish(*items[0])]
+        for _k, _sp, _np, lease_sbs in items:
+            if lease_sbs < 1:
+                raise ValueError(
+                    f"publish with an empty lease ({lease_sbs} sbs)")
+        for _k, span_ptr, _np, lease_sbs in items:
+            r.span_acquire(span_ptr, lease_sbs)
+        recs: list = []
+        for _k, span_ptr, _np, lease_sbs in items:
+            rec = r.malloc(REC_BYTES)
+            if rec is None:            # degrade per item, keep the rest
+                r.span_release(span_ptr, lease_sbs)
+            recs.append(rec)
+        batch = [(rec, it) for rec, it in zip(recs, items) if rec is not None]
+        if not batch:
+            return recs
+        head = r.heap.get_root(self.slot)
+        seals = []
+        for i, (rec, (key48, span_ptr, n_pages, lease_sbs)) in \
+                enumerate(batch):
+            nxt = batch[i + 1][0] if i + 1 < len(batch) else head
+            r.write_word(rec, pp.PPTR_NULL if nxt is None
+                         else pp.encode(rec, nxt))
+            span_word = pp.encode(rec + 1, span_ptr)
+            r.write_word(rec + 1, span_word)
+            r.write_word(rec + 3, n_pages)
+            r.write_word(rec + 4, lease_sbs)
+            cksum = _record_checksum(span_word, n_pages, lease_sbs, key48)
+            seals.append((rec, key48 | (cksum << 48)))
+        if not is_suppressed("prefix_index.publish_batch.fields_persist"):
+            for rec, _ in batch:
+                r.flush_range(rec, REC_WORDS)
+            r.fence()                  # the ONE fence N field groups share
+        r.mem.note("batch_seal", records=[rec for rec, _ in batch])
+        for rec, seal in seals:
+            r.write_word(rec + 2, seal)
+        if not is_suppressed("prefix_index.publish_batch.records_persist"):
+            for rec, _ in seals:
+                r.flush_range(rec + 2, 1)
+            r.fence()                  # the ONE fence N sealed records share
+        r.mem.note("batch_root", records=[rec for rec, _ in batch],
+                   slot=self.slot)
+        r.set_root(self.slot, batch[0][0], TYPENAME)   # single swing
+        r.mem.note("publish_batch_end", records=[rec for rec, _ in batch],
+                   slot=self.slot)
+        return recs
+
+    def remove_batch(self, keys) -> int:
+        """Batched eviction: durably unlink every record matching
+        ``keys`` behind ONE shared fence (plus at most one root swing
+        when the head is among the victims), then release the leases and
+        free the blocks.  Returns the number removed.
+
+        The per-record invariant of ``remove`` holds batch-wide: every
+        unlink is durable before ANY lease of the batch drops.
+        """
+        r = self.r
+        want = {int(k) & _KEY_MASK for k in keys}
+        if not want:
+            return 0
+        chain: list[tuple[int, int | None]] = []   # (rec, next) in order
+        victims: list[tuple[int, int | None, int]] = []
+        rec = r.heap.get_root(self.slot)
+        seen: set[int] = set()
+        while rec is not None and rec not in seen:
+            seen.add(rec)
+            nxt = pp.decode(rec, r.read_word(rec))
+            if (record_is_valid(r, rec)
+                    and (int(r.read_word(rec + 2)) & _KEY_MASK) in want):
+                victims.append((rec, pp.decode(rec + 1, r.read_word(rec + 1)),
+                                int(r.read_word(rec + 4))))
+            else:
+                chain.append((rec, nxt))
+            rec = nxt
+        if not victims:
+            return 0
+        # rewire the survivors around the victims: every predecessor
+        # whose successor changed gets one next-pointer write, and all
+        # those writes share one flush+fence
+        dirty: list[int] = []
+        for i, (surv, old_nxt) in enumerate(chain):
+            new_nxt = chain[i + 1][0] if i + 1 < len(chain) else None
+            if new_nxt != old_nxt:
+                r.write_word(surv, pp.PPTR_NULL if new_nxt is None
+                             else pp.encode(surv, new_nxt))
+                dirty.append(surv)
+        if dirty and not is_suppressed(
+                "prefix_index.remove_batch.unlink_persist"):
+            for w in dirty:
+                r.flush_range(w, 1)
+            r.fence()                  # the ONE fence N unlinks share
+        new_head = chain[0][0] if chain else None
+        if new_head != r.heap.get_root(self.slot):
+            r.set_root(self.slot, new_head, TYPENAME)   # head victims fold
+        for rec, span, lease in victims:
+            r.mem.note("lease_release", record=rec, slot=self.slot)
+            if span is not None and lease >= 1:
+                r.span_release(span, lease)
+            r.free(rec)
+        return len(victims)
 
     def remove(self, key: int) -> bool:
         """Durably unlink the record for ``key``, release the cache's

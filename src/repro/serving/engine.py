@@ -1,15 +1,27 @@
 """Continuous-batching serving engine over the Ralloc paged arena.
 
-The engine owns:
+The engine owns the *mechanism*:
   * an ``AllocState`` whose blocks are KV pages (1 block = 1 page, so the
     position-independent offsets the allocator returns *are* page ids);
   * the decode step built by ``serving.decode`` (shard_map TP);
-  * per-lane sessions (a lane = one decode stream).
+  * per-lane transient state (``serving.lane_state``) and the shared
+    prefix cache (``serving.prefix_cache``).
+
+Policy lives in ``serving.scheduler``: admission with a bounded wait
+queue, arrivals/finishes interleaved with batched decode, and the
+group-commit cadence for the publish queue below.
 
 Page allocation happens lazily: a lane that crosses a page boundary gets
 a fresh page from the allocator (vectorized ``alloc`` over all lanes —
 the rank-indexed cache makes the common step allocation-free).  Evicted
 sessions free their pages in one vectorized ``free``.
+
+Group-commit publish: span-path publications split into a transient half
+(``queue_publish`` — cache entry + prefix lease, effective immediately)
+and a durable half parked in ``_publish_queue``; ``flush_publishes``
+lands N queued records with ONE vectorized block allocation, one chained
+``PrefixStore.append_batch`` and ONE root swing — the device mirror of
+``core.prefix_index.publish_batch``'s single-fence-pair group commit.
 
 Recoverability (paper §4.5 transplanted to inference): the persistent
 fields of the allocator plus each session's block-table row (the "page
@@ -20,7 +32,6 @@ mark–sweep and the engine resumes mid-generation.
 
 from __future__ import annotations
 
-import dataclasses
 import functools
 
 import jax
@@ -32,16 +43,14 @@ from ..core import jax_recovery as jr
 from ..core.prefix_index import hash_tokens
 from ..models.config import ModelConfig
 from . import decode as dec
+from .lane_state import LaneStates, Session, reset_lane
+from .prefix_cache import PrefixCache
 from .prefix_store import PrefixStore
+from .scheduler import EngineBusy, PendingPublish
+
+__all__ = ["ServingEngine", "Session", "EngineBusy", "PAGE_CLS"]
 
 PAGE_CLS = 0
-
-
-@dataclasses.dataclass
-class Session:
-    lane: int
-    tokens: list
-    done: bool = False
 
 
 class ServingEngine:
@@ -77,55 +86,73 @@ class ServingEngine:
                                                        cfg=self.acfg))
         self._trim_large = jax.jit(functools.partial(ja.trim_large,
                                                      cfg=self.acfg))
-        # lanes holding a contiguous multi-superblock page span (oversized
-        # prompts): lane -> (span head offset, n_pages); the owner holds a
-        # full-extent lease released via free_large — unleased tail
-        # superblocks (the decode-ahead slack nobody's prefix lease
-        # covers) free right then, not at the last holder's exit
-        self.large_spans: dict[int, tuple[int, int]] = {}
-        # lanes that *acquired* a prefix lease on another lane's published
-        # span (shared-prefix hits): lane -> (off, n_backed_pages,
-        # lease_sbs); finish releases exactly that prefix range
-        self.shared_spans: dict[int, tuple[int, int, int]] = {}
+        self.lane_states = LaneStates(lanes)
         pshape = jax.tree.map(
             lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), params)
         self.step_fn, _, _ = dec.make_decode_step(cfg, mesh, pshape)
         self.dstate = dec.make_dstate(cfg, batch=lanes, max_seq=max_seq,
                                       pages_per_shard=int(num_sbs
                                                           * pages_per_sb) + 1)
-        self.sessions: dict[int, Session] = {}
-        self.cur_tokens = np.zeros((lanes,), np.int32)
-        self.free_lanes = list(range(lanes))
-        # prefix sharing (RadixAttention-style): pages holding a shared
-        # prompt prefix are referenced by several block tables; refcounts
-        # enforce the paper's "no block used for two purposes" discipline —
-        # a shared page returns to the allocator only at refcount zero
-        self.page_refs: dict[int, int] = {}
-        # the prefix cache itself is transient (rebuilt after a crash);
-        # keys are 48-bit prompt hashes (core.prefix_index.hash_tokens) so
-        # a durable index record can name its entry across a crash
-        self._prefix_cache: dict[int, tuple] = {}    # hash -> cache entry
-        # exact published token sequences (transient): a hit must never
-        # serve another prompt's KV on a 48-bit hash collision, so hits
-        # on entries published THIS process verify token equality.  The
-        # durable record stores only the hash, so entries re-published by
-        # recovery match by hash alone — the documented residual.
-        self._prefix_tokens: dict[int, tuple] = {}   # hash -> exact tokens
+        # prefix sharing (RadixAttention-style) — transient entries,
+        # page refcounts and exact-token collision guard
+        self.prefix_cache = PrefixCache()
         # durable prefix index: span-path entries additionally own one
         # record block reachable from roots[_index_root], which is what
         # lets crash_and_recover re-publish them instead of re-prefilling
         self.prefix_store = PrefixStore(jr.num_slots(self.acfg))
+        # group-commit queue: transiently-published span entries whose
+        # durable record append waits for the next flush_publishes
+        self._publish_queue: list[PendingPublish] = []
+        self.publish_capacity = max(4, lanes)    # records per group commit
+
+    # ------------------------------------------- component-state delegation
+    @property
+    def sessions(self) -> dict[int, Session]:
+        return self.lane_states.sessions
+
+    @property
+    def free_lanes(self) -> list[int]:
+        return self.lane_states.free_lanes
+
+    @property
+    def large_spans(self) -> dict[int, tuple[int, int]]:
+        return self.lane_states.large_spans
+
+    @property
+    def shared_spans(self) -> dict[int, tuple[int, int, int]]:
+        return self.lane_states.shared_spans
+
+    @property
+    def cur_tokens(self) -> np.ndarray:
+        return self.lane_states.cur_tokens
+
+    @property
+    def _prefix_cache(self) -> dict[int, tuple]:
+        return self.prefix_cache.entries
+
+    @property
+    def _prefix_tokens(self) -> dict[int, tuple]:
+        return self.prefix_cache.tokens
+
+    @property
+    def page_refs(self) -> dict[int, int]:
+        return self.prefix_cache.page_refs
+
+    @page_refs.setter
+    def page_refs(self, refs: dict[int, int]) -> None:
+        self.prefix_cache.page_refs = refs
 
     # ------------------------------------------------------------- requests
     def add_request(self, prompt: list[int],
                     share_prefix: bool = False) -> int:
-        lane = self.free_lanes.pop()
+        lane = self.lane_states.acquire()
+        if lane is None:
+            raise EngineBusy(
+                f"all {self.lanes} lanes are busy — queue admission through "
+                f"serving.scheduler.Scheduler.submit")
         self.sessions[lane] = Session(lane=lane, tokens=list(prompt))
         # reset lane state (pos=0) and feed the prompt token by token
-        self.dstate["pos"] = self.dstate["pos"].at[lane].set(0)
-        self.dstate["block_table"] = \
-            self.dstate["block_table"].at[lane].set(-1)
-        self.dstate["kv_pos"] = self.dstate["kv_pos"].at[lane].set(-1)
+        self.dstate = reset_lane(self.dstate, lane)
         self.cur_tokens[lane] = prompt[0]
         # oversized prompt: its page table will not fit the per-step lazy
         # path gracefully — reserve one contiguous multi-superblock span up
@@ -139,16 +166,23 @@ class ServingEngine:
         table_width = int(self.dstate["block_table"].shape[1])
         n_prompt_pages = min(-(-len(prompt) // self.cfg.page_size),
                              table_width)
-        khash = hash_tokens(prompt)
-        hit = self._prefix_cache.get(khash) if share_prefix else None
-        if hit is not None:
-            known = self._prefix_tokens.get(khash)
-            if known is not None and known != tuple(prompt):
-                hit = None               # hash collision: treat as a miss
+        hit = self.prefix_cache.lookup(prompt) if share_prefix else None
         if (self.cfg.attn_layers > 0 and hit is None
                 and n_prompt_pages > self.acfg.sb_words):
             n_ahead = min(-(-self.max_seq // self.cfg.page_size), table_width)
-            self._reserve_span(lane, max(n_prompt_pages, n_ahead))
+            try:
+                self._reserve_span(lane, max(n_prompt_pages, n_ahead))
+            except MemoryError:
+                # back out the admission completely: session gone, lane
+                # decode state neutral, lane in the pool exactly once —
+                # the lane must be indistinguishable from never-admitted
+                # (the old path handed the lane back with this request's
+                # pos/block-table/cur-token still written into it)
+                del self.sessions[lane]
+                self.dstate = reset_lane(self.dstate, lane)
+                self.cur_tokens[lane] = 0
+                self.lane_states.release(lane)
+                raise
         if hit is not None:
             if hit[0] == "span":
                 # lease the published span's *prefix*: the prompt's KV
@@ -166,7 +200,7 @@ class ServingEngine:
                 _, pages, plen, kvp, next_tok = hit
                 pages = np.asarray(pages, np.int32)
                 for p in pages.tolist():
-                    self.page_refs[p] = self.page_refs.get(p, 1) + 1
+                    self.prefix_cache.add_page_ref(p)
             bt = np.asarray(self.dstate["block_table"]).copy()
             bt[lane, :len(pages)] = pages
             self.dstate["block_table"] = jnp.asarray(bt)
@@ -184,13 +218,13 @@ class ServingEngine:
 
     def _reserve_span(self, lane: int, n_pages: int) -> None:
         """Back ``n_pages`` page-table slots of ``lane`` with one
-        contiguous large-object span (page ids = span offsets)."""
+        contiguous large-object span (page ids = span offsets).  Raises
+        ``MemoryError`` with the lane untouched; ``add_request`` owns
+        backing the admission out."""
         self.astate, off = self._alloc_large(state=self.astate,
                                              nwords=jnp.int32(n_pages))
         off = int(off)
         if off < 0:
-            self.free_lanes.append(lane)
-            del self.sessions[lane]
             raise MemoryError(
                 f"KV arena cannot reserve a contiguous {n_pages}-page span")
         self.large_spans[lane] = (off, n_pages)
@@ -198,15 +232,27 @@ class ServingEngine:
         bt[lane, :n_pages] = off + np.arange(n_pages, dtype=np.int32)
         self.dstate["block_table"] = jnp.asarray(bt)
 
-    def _alloc_block(self) -> int:
-        """One arena block (a prefix-index record slot); -1 when full."""
-        need = np.zeros((self.lanes,), bool)
-        need[0] = True
+    def _alloc_blocks(self, n: int) -> list[int]:
+        """``n`` arena blocks (prefix-index record slots) in ONE
+        vectorized alloc; -1 entries when the arena is full.
+
+        Record slots occupy dedicated ranks *past* the lane range — the
+        old single-record path requested rank 0, lane 0's slot in the
+        rank-indexed cache, so fusing a record grab into a step's lane
+        allocation could pop one cache entry for both a KV page and a
+        record.  The tail ranks can never collide with any lane's, and
+        the fixed ``lanes + publish_capacity`` width keeps this a single
+        jit trace across batch sizes."""
+        assert 0 < n <= self.publish_capacity
+        need = np.zeros((self.lanes + self.publish_capacity,), bool)
+        need[self.lanes:self.lanes + n] = True
         self.astate, offs = self._alloc(state=self.astate,
                                         need=jnp.asarray(need))
-        return int(np.asarray(offs)[0])
+        return [int(o) for o in
+                np.asarray(offs)[self.lanes:self.lanes + n]]
 
-    def publish_prefix(self, lane: int) -> None:
+    # -------------------------------------------------------------- publish
+    def queue_publish(self, lane: int) -> bool:
         """Register this lane's fully-processed prompt as a shared prefix.
 
         Only whole pages are shared (a partially-filled page would be
@@ -214,13 +260,19 @@ class ServingEngine:
         holding a reserved span publishes the *span itself*: later
         matching requests acquire the span (one refcount each, see
         ``core.spans``) instead of copying pages into a fresh
-        reservation; the span frees when the last holder exits."""
+        reservation; the span frees when the last holder exits.
+
+        The transient half is immediate — cache entry + prefix lease, so
+        sharers can hit before any flush — but the durable record append
+        parks in the group-commit queue until ``flush_publishes``.
+        Page-path entries are transient-only and complete here.  Returns
+        True when a new entry was created."""
         s = self.sessions[lane]
         pos = int(np.asarray(self.dstate["pos"][lane]))
         page = self.cfg.page_size
         full = pos // page
         if full == 0:
-            return
+            return False
         kv = np.asarray(self.dstate["kv_pos"][lane])
         span = self.large_spans.get(lane)
         if span is None:
@@ -240,14 +292,13 @@ class ServingEngine:
                 cover += 1
             full = min(full, cover)
             if full == 0:
-                return
+                return False
             key = hash_tokens(s.tokens[:full * page])
-            prev = self._prefix_cache.get(key)
-            if prev is not None:
+            if self._prefix_cache.get(key) is not None:
                 # already published (the cache holds exactly one reference
                 # per entry): acquiring again would leak a span reference
                 # when this entry is overwritten
-                return
+                return False
             # the prefix cache itself holds one *prefix* lease — just the
             # superblocks the shared prompt pages occupy — so the prefix
             # survives the publishing session's eviction while the
@@ -256,44 +307,82 @@ class ServingEngine:
             self.astate, _ = self._acquire_span(
                 state=self.astate, off=jnp.int32(off),
                 n_sbs=jnp.int32(lease_sbs))
-            next_tok = int(self.cur_tokens[lane])
-            self._prefix_cache[key] = (
-                "span", off, n_span, full, full * page, kv[:full].copy(),
-                next_tok, lease_sbs)
-            self._prefix_tokens[key] = tuple(s.tokens[:full * page])
-            # durable index record (serving.prefix_store): one ordinary
-            # arena block, fields before the root swing — after a crash
+            # the prefix boundary token, NOT the lane's current token:
+            # mid-page publishes clamp the entry to full*page positions,
+            # and a sharer's first decode input must be the token that
+            # followed the *published* prefix, not whatever this lane is
+            # decoding several positions later
+            next_tok = int(s.tokens[full * page])
+            self.prefix_cache.insert(
+                key,
+                ("span", off, n_span, full, full * page, kv[:full].copy(),
+                 next_tok, lease_sbs),
+                tokens=s.tokens[:full * page])
+            # the durable index record (one ordinary arena block) parks in
+            # the group-commit queue: flush_publishes appends the whole
+            # batch behind a single root swing, mirroring the host
+            # PrefixIndex.publish_batch fence amortization.  After a crash
             # the record re-publishes this entry and re-trims the lease,
-            # so the prefix is hittable without re-prefill.  A full arena
-            # degrades safely: the publish stays transient-only.
-            rec = self._alloc_block()
-            if rec >= 0:
-                self.prefix_store.append(
-                    rec, key=key, span=off, n_pages=full,
-                    span_pages=n_span, next_tok=next_tok,
-                    lease_sbs=lease_sbs)
-                self.astate = ja.set_root(self.astate, self._index_root,
-                                          jnp.int32(rec))
-            return
+            # so the prefix is hittable without re-prefill.
+            self._publish_queue.append(PendingPublish(
+                key=key, span=off, n_pages=full, span_pages=n_span,
+                next_tok=next_tok, lease_sbs=lease_sbs))
+            return True
         bt = np.asarray(self.dstate["block_table"][lane])
-        if pos != full * page or pos != len(s.tokens) - (
-                1 if len(s.tokens) > full * page else 0):
-            # share only a fully-processed, page-aligned prompt
-            if pos < full * page:
-                return
+        if pos != full * page:
+            # share only a fully-processed, page-aligned prompt: a
+            # mid-page publish would hand sharers a boundary token whose
+            # preceding positions are NOT all inside the shared pages
+            return False
         pages = tuple(int(p) for p in bt[:full])
         for p in pages:
             # +1: the prefix cache itself holds a reference, so the pages
             # survive the publishing session's eviction
-            self.page_refs[p] = self.page_refs.get(p, 1) + 1
+            self.prefix_cache.add_page_ref(p)
         # page-path entries stay transient-only: their sharing is per-page
         # refcounts, not a span lease, and the durable index records only
         # span-backed prefixes (a crash forgets these — they re-prefill)
         pkey = hash_tokens(s.tokens[:full * page])
-        self._prefix_cache[pkey] = (
-            "pages", pages, full * page, kv[:full].copy(),
-            int(self.cur_tokens[lane]))
-        self._prefix_tokens[pkey] = tuple(s.tokens[:full * page])
+        self.prefix_cache.insert(
+            pkey,
+            ("pages", pages, full * page, kv[:full].copy(),
+             int(self.cur_tokens[lane])),
+            tokens=s.tokens[:full * page])
+        return True
+
+    def flush_publishes(self) -> int:
+        """Land every parked publication durably: per batch of up to
+        ``publish_capacity``, ONE vectorized record-block allocation, one
+        chained ``append_batch`` and ONE root swing — the group commit.
+        A full arena degrades safely: those publishes stay
+        transient-only.  Returns the number of records appended."""
+        appended = 0
+        while self._publish_queue:
+            batch = self._publish_queue[:self.publish_capacity]
+            del self._publish_queue[:len(batch)]
+            recs = self._alloc_blocks(len(batch))
+            payloads = [dict(rec_off=rec, key=p.key, span=p.span,
+                             n_pages=p.n_pages, span_pages=p.span_pages,
+                             next_tok=p.next_tok, lease_sbs=p.lease_sbs)
+                        for rec, p in zip(recs, batch) if rec >= 0]
+            if payloads:
+                self.prefix_store.append_batch(payloads)
+                self.astate = ja.set_root(
+                    self.astate, self._index_root,
+                    jnp.int32(self.prefix_store.head))
+                appended += len(payloads)
+        return appended
+
+    @property
+    def pending_publishes(self) -> int:
+        return len(self._publish_queue)
+
+    def publish_prefix(self, lane: int) -> None:
+        """Immediate (ungrouped) publish: queue + flush in one call.
+        Batched serving amortizes instead via ``queue_publish`` +
+        ``flush_publishes`` on the scheduler's cadence."""
+        self.queue_publish(lane)
+        self.flush_publishes()
 
     def drop_prefix_cache(self) -> None:
         """Release the cache's references; fully-unreferenced pages (and
@@ -302,7 +391,10 @@ class ServingEngine:
             if entry[0] == "span":
                 # durable unlink FIRST (a linked record must always imply
                 # a live span — core.prefix_index ordering), then the
-                # lease release, then the record block frees
+                # lease release, then the record block frees.  An entry
+                # still parked in the publish queue has no record yet
+                # (remove returns None) — dropping its queue slot below
+                # is its whole un-publication.
                 rec = self.prefix_store.remove(key)
                 if rec is not None:
                     self.astate = ja.set_root(self.astate, self._index_root,
@@ -334,16 +426,14 @@ class ServingEngine:
                 self.astate = self._free(state=self.astate,
                                          offs=jnp.asarray(offs),
                                          mask=jnp.asarray(offs >= 0))
-        self._prefix_cache.clear()
-        self._prefix_tokens.clear()
+        self.prefix_cache.clear()
+        # parked appends for the just-dropped entries must never land
+        self._publish_queue.clear()
 
     # ------------------------------------------------------------------ step
     def step(self) -> dict[int, int]:
         """One decode step for every active lane; returns emitted tokens."""
-        active = np.zeros((self.lanes,), bool)
-        for lane, s in self.sessions.items():
-            if not s.done:
-                active[lane] = True
+        active = self.lane_states.active()
         if not active.any():
             return {}
         # page-boundary lanes need a fresh page before the step — unless
@@ -441,7 +531,7 @@ class ServingEngine:
         self.dstate["block_table"] = \
             self.dstate["block_table"].at[lane].set(-1)
         self.astate = ja.set_root(self.astate, lane, jnp.int32(-1))
-        self.free_lanes.append(lane)
+        self.lane_states.release(lane)
 
     # ------------------------------------------------------------- recovery
     def ref_table(self) -> np.ndarray:
@@ -517,8 +607,12 @@ class ServingEngine:
         # and poison the offset after the span frees and is reallocated.
         # (Exact token sequences die with the cache: re-published entries
         # are named by the record's hash alone.)
-        self._prefix_cache.clear()
-        self._prefix_tokens.clear()
+        self.prefix_cache.clear()
+        # queued-but-unflushed appends die with the process too: they
+        # never became durable, no lease reconstruction references them,
+        # and their cache entries were just cleared — dropping the queue
+        # IS the crash semantics for an un-flushed group commit
+        self._publish_queue.clear()
         spans = list(self.large_spans.values()) + \
             [(off, n_backed) for off, n_backed, _ in
              self.shared_spans.values()]

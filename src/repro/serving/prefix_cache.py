@@ -1,0 +1,61 @@
+"""Transient prefix cache: hash-keyed shared-prompt entries + page refs.
+
+Split out of the engine: this is the RadixAttention-style sharing state.
+Keys are 48-bit prompt hashes (``core.prefix_index.hash_tokens``) so a
+durable index record can name its entry across a crash; the cache itself
+is transient and rebuilt by recovery from surviving records.
+
+``entries`` holds two entry shapes:
+
+  ("span",  off, n_span, full, plen, kv_pos, next_tok, lease_sbs) —
+      span-backed prefixes; the entry owns one *prefix* span lease and
+      (once the group-commit queue flushes) one durable index record;
+  ("pages", pages, plen, kv_pos, next_tok) —
+      page-path prefixes shared via per-page refcounts, transient-only
+      (a crash forgets them — they re-prefill).
+
+``tokens`` maps each hash to the exact published token sequence: a hit
+must never serve another prompt's KV on a 48-bit collision, so hits on
+entries published THIS process verify token equality.  The durable
+record stores only the hash, so entries re-published by recovery match
+by hash alone — the documented residual.
+"""
+
+from __future__ import annotations
+
+from ..core.prefix_index import hash_tokens
+
+
+class PrefixCache:
+    def __init__(self):
+        self.entries: dict[int, tuple] = {}     # hash -> cache entry
+        self.tokens: dict[int, tuple] = {}      # hash -> exact tokens
+        # pages holding a shared prompt prefix are referenced by several
+        # block tables; refcounts enforce the paper's "no block used for
+        # two purposes" discipline — a shared page returns to the
+        # allocator only at refcount zero
+        self.page_refs: dict[int, int] = {}
+
+    def lookup(self, prompt) -> tuple | None:
+        """Collision-safe hit for ``prompt`` (or ``None`` on a miss —
+        including the hash-collision-treated-as-miss case)."""
+        khash = hash_tokens(prompt)
+        hit = self.entries.get(khash)
+        if hit is not None:
+            known = self.tokens.get(khash)
+            if known is not None and known != tuple(prompt):
+                return None              # hash collision: treat as a miss
+        return hit
+
+    def insert(self, key: int, entry: tuple, tokens=None) -> None:
+        self.entries[key] = entry
+        if tokens is not None:
+            self.tokens[key] = tuple(tokens)
+
+    def add_page_ref(self, p: int) -> None:
+        # +1 baseline: the owner's block table is the implicit first ref
+        self.page_refs[p] = self.page_refs.get(p, 1) + 1
+
+    def clear(self) -> None:
+        self.entries.clear()
+        self.tokens.clear()

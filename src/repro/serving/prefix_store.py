@@ -110,10 +110,32 @@ class PrefixStore:
         index fences around; a crash between the two leaves the record
         unreachable and the sweep frees its block.
         """
-        self.words[rec_off] = (self.head, span, int(key), int(n_pages),
-                               int(span_pages), int(next_tok),
-                               int(lease_sbs))
-        self.head = rec_off
+        self.append_batch([dict(rec_off=rec_off, key=key, span=span,
+                                n_pages=n_pages, span_pages=span_pages,
+                                next_tok=next_tok, lease_sbs=lease_sbs)])
+
+    def append_batch(self, payloads: list[dict]) -> None:
+        """Group-commit append: link N freshly allocated record blocks as
+        one chain segment with a single head swing.
+
+        Device mirror of ``PrefixIndex.publish_batch``: every record's
+        fields are written first — the batch chained among itself, the
+        last record pointing at the old head — and only then does
+        ``head`` swing once to the first record.  A crash before the
+        swing leaves the whole segment unreachable (the sweep frees all
+        N blocks and their leases fall back to the roots); after it all
+        N records are published.  Each payload dict carries the same
+        keyword fields ``append`` takes.
+        """
+        if not payloads:
+            return
+        offs = [int(p["rec_off"]) for p in payloads]
+        for i, p in enumerate(payloads):
+            nxt = offs[i + 1] if i + 1 < len(offs) else self.head
+            self.words[offs[i]] = (nxt, int(p["span"]), int(p["key"]),
+                                   int(p["n_pages"]), int(p["span_pages"]),
+                                   int(p["next_tok"]), int(p["lease_sbs"]))
+        self.head = offs[0]
 
     def remove(self, key: int) -> StoreRecord | None:
         """Unlink the record for ``key``; returns it (the caller releases

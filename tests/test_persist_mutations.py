@@ -151,6 +151,98 @@ def test_mutation_free_large_persist():
 
 
 # ---------------------------------------------------------------------------
+# group commit (publish_batch / remove_batch): the relaxed rules have teeth
+# ---------------------------------------------------------------------------
+def _batch_scenario(seed, n=3):
+    """n spans rooted, published in ONE group commit."""
+    r, tr = _heap(seed)
+    idx = PrefixIndex(r)
+    spans = []
+    for i in range(n):
+        p = r.malloc(2 * SB_SIZE - 256)
+        r.set_root(i, p)
+        spans.append(p)
+    items = [(hash_tokens([i + 1]), p, 2, 2) for i, p in enumerate(spans)]
+    return r, tr, idx, items
+
+
+def test_unmutated_batch_scenario_is_clean():
+    r, tr, idx, items = _batch_scenario(31)
+    recs = idx.publish_batch(items)
+    assert all(rec is not None for rec in recs)
+    # the whole batch is on the chain, newest item first
+    assert [rec.key for rec in idx.records()] == [k for k, *_ in items]
+    # batched eviction of a generation: mid-chain + head victims in one call
+    assert idx.remove_batch([items[0][0], items[1][0]]) == 2
+    assert [rec.key for rec in idx.records()] == [items[2][0]]
+    assert idx.remove_batch([items[2][0]]) == 1
+    rep, fired = _rules_fired(r, tr)
+    assert rep.ok, rep
+    assert fired == set()
+    # fences/op reflects the amortization: 3 publishes rode one commit
+    assert rep.diagnostics["notes"]["publish_batch_end"] == 1
+    assert rep.diagnostics["ops"] >= 6        # 3 publishes + 3 removals
+
+
+def test_batch_publish_fences_amortized():
+    """The group commit's whole point: N publishes cost ~3 fences, not 4N."""
+    def publish_fences(batched):
+        from repro.core.prefix_index import REC_BYTES
+        r, tr, idx, items = _batch_scenario(32)
+        r.free(r.malloc(REC_BYTES))   # warm the record class: measure the
+        before = r.mem.n_fence        # protocol, not one-off sb claims
+        if batched:
+            idx.publish_batch(items)
+        else:
+            for it in items:
+                idx.publish(*it)
+        return r.mem.n_fence - before
+    single, batch = publish_fences(False), publish_fences(True)
+    assert single >= 4 * 3                    # ≥4 fences per strict publish
+    assert batch <= 3 + 1                     # shared fences + root swing
+    assert batch * 2 < single
+
+
+def test_mutation_publish_batch_fields_persist():
+    r, tr, idx, items = _batch_scenario(33)
+    with faults.suppress("prefix_index.publish_batch.fields_persist"):
+        idx.publish_batch(items)
+    rep, fired = _rules_fired(r, tr)
+    assert not rep.ok
+    assert "batch-fields-durable-before-seal" in fired, rep
+
+
+def test_mutation_publish_batch_records_persist():
+    r, tr, idx, items = _batch_scenario(34)
+    with faults.suppress("prefix_index.publish_batch.records_persist"):
+        idx.publish_batch(items)
+    rep, fired = _rules_fired(r, tr)
+    assert not rep.ok
+    assert "batch-records-durable-before-root-swing" in fired, rep
+
+
+def test_mutation_set_root_persist_batch():
+    r, tr, idx, items = _batch_scenario(35)
+    with faults.suppress("heap.set_root.persist"):
+        idx.publish_batch(items)
+    rep, fired = _rules_fired(r, tr)
+    assert not rep.ok
+    assert "root-swing-durable-at-batch-end" in fired, rep
+
+
+def test_mutation_remove_batch_unlink_persist():
+    r, tr, idx, items = _batch_scenario(36)
+    idx.publish_batch(items)
+    # victim is mid-chain: its unlink is a predecessor next-word rewrite,
+    # exactly the write the shared fence must cover
+    with faults.suppress("prefix_index.remove_batch.unlink_persist"):
+        assert idx.remove_batch([items[1][0]]) == 1
+    rep, fired = _rules_fired(r, tr)
+    assert not rep.ok
+    assert "unlink-durable-before-lease-release" in fired, rep
+
+
+# ---------------------------------------------------------------------------
 # the wiring has teeth too: a suppressed site makes the crash harness fail
 # ---------------------------------------------------------------------------
 def test_crash_harness_detects_suppressed_site():

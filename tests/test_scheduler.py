@@ -1,0 +1,323 @@
+"""Continuous-batching scheduler, group-commit publish, and the engine
+admission/publish regression fixes that ride along with it.
+
+Engine-level regressions (satellites):
+  * admission past capacity raises the typed ``EngineBusy`` (was a bare
+    ``IndexError`` out of ``free_lanes.pop()``);
+  * a failed span reservation backs the admission out completely — the
+    lane returns to the pool neutralized, not with the failed request's
+    decode state still written into it;
+  * mid-page publishes: the page path rejects them (the old guard was
+    dead code), the span path clamps the boundary token to the
+    *published* prefix instead of the publisher's current token;
+  * record blocks allocate at dedicated ranks past the lane range, so
+    they can never collide with lane 0's slot in the rank-indexed cache;
+  * two records naming the same span at different prefix lengths
+    recover to exactly the pre-crash lease vector.
+"""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core import jax_alloc as ja
+from repro.core.prefix_index import hash_tokens
+from repro.models import transformer as T
+from repro.runtime import make_host_mesh
+from repro.serving.engine import EngineBusy, ServingEngine
+from repro.serving.scheduler import Scheduler
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return make_host_mesh()
+
+
+def _engine(mesh, **kw):
+    cfg = dataclasses.replace(get_smoke_config("qwen2_5_32b"),
+                              page_size=kw.pop("page_size", 8))
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    return ServingEngine(cfg, mesh, params, **kw)
+
+
+def _prompt(seed, n, vocab=512):
+    rng = np.random.default_rng(seed)
+    return [int(t) for t in rng.integers(1, vocab, size=n)]
+
+
+# ---------------------------------------------------------------------------
+# admission (satellite: EngineBusy + failed-reservation backout)
+# ---------------------------------------------------------------------------
+def test_add_request_raises_engine_busy(mesh):
+    eng = _engine(mesh, lanes=2, max_seq=64)
+    eng.add_request([1, 2, 3])
+    eng.add_request([4, 5])
+    with pytest.raises(EngineBusy):
+        eng.add_request([6, 7, 8])          # was: bare IndexError
+    # the failed admission left nothing behind
+    assert len(eng.sessions) == 2 and not eng.free_lanes
+
+
+def test_failed_span_reservation_neutralizes_lane(mesh):
+    import jax.numpy as jnp
+    eng = _engine(mesh, lanes=2, max_seq=64, pages_per_sb=4)
+    # hog most of the arena so the decode-ahead reservation cannot fit
+    eng.astate, hog = eng._alloc_large(state=eng.astate, nwords=jnp.int32(24))
+    assert int(hog) >= 0
+    prompt = _prompt(0, 40)                 # 5 pages > 4 per sb → span path
+    with pytest.raises(MemoryError):
+        eng.add_request(prompt)
+    # the lane is back in the pool EXACTLY once, with no session and
+    # neutral decode state — indistinguishable from never-admitted (the
+    # old path returned it with this request's pos/block-table/cur-token
+    # still written into it)
+    assert sorted(eng.free_lanes) == [0, 1]
+    assert eng.sessions == {} and eng.large_spans == {}
+    for lane in range(2):
+        assert int(np.asarray(eng.dstate["pos"][lane])) == 0
+        assert np.asarray(eng.dstate["block_table"][lane]).max() < 0
+        assert int(eng.cur_tokens[lane]) == 0
+    # once the arena frees, the same request admits cleanly
+    eng.astate = eng._free_large(state=eng.astate, off=jnp.int32(int(hog)),
+                                 n_sbs=jnp.int32(-1))
+    lane = eng.add_request(prompt)
+    assert lane in eng.large_spans and lane in eng.sessions
+    eng.finish(lane)
+
+
+def test_scheduler_wait_queue_is_bounded(mesh):
+    eng = _engine(mesh, lanes=2, max_seq=64)
+    sched = Scheduler(eng, max_waiting=1)
+    sched.submit([1, 2, 3])                 # lane
+    sched.submit([4, 5, 6])                 # lane
+    sched.submit([7, 8, 9])                 # wait queue
+    assert len(sched.waiting) == 1
+    with pytest.raises(EngineBusy):
+        sched.submit([1, 1, 1])             # queue full → shed load
+
+
+# ---------------------------------------------------------------------------
+# continuous batching
+# ---------------------------------------------------------------------------
+def test_scheduler_interleaves_arrivals_and_finishes(mesh):
+    eng = _engine(mesh, lanes=2, max_seq=64)
+    sched = Scheduler(eng, max_waiting=8)
+    prompts = [_prompt(s, 3 + s % 2, vocab=64) for s in range(5)]
+    rids = [sched.submit(p, max_new_tokens=3) for p in prompts]
+    assert len(sched.active) == 2 and len(sched.waiting) == 3
+    results = sched.drain()
+    # every request ran to its token budget on a recycled lane — the
+    # waiting ones were admitted as earlier requests finished, without
+    # draining the whole batch in between
+    assert sorted(results) == sorted(rids)
+    for rid, p in zip(rids, prompts):
+        assert results[rid][:len(p)] == p
+        assert len(results[rid]) == len(p) + 3
+    assert not sched.active and not sched.waiting
+    assert eng.sessions == {} and sorted(eng.free_lanes) == [0, 1]
+    assert ja.live_blocks(eng.astate, eng.acfg)[0] == 0
+
+
+def test_scheduler_group_commit_publish_flow(mesh):
+    """Scheduler-driven serving with publish-on-finish: the first
+    publisher's record dedups later identical publishes, queued arrivals
+    hit the shared prefix, and the publish queue flushes on the
+    scheduler's cadence."""
+    eng = _engine(mesh, lanes=3, max_seq=64, pages_per_sb=2)
+    sched = Scheduler(eng, max_waiting=8, publish_every=4)
+    prompt = _prompt(3, 24)                 # 3 pages > 2 per sb → span path
+    rids = [sched.submit(prompt, share_prefix=True, max_new_tokens=8,
+                         publish=True) for _ in range(4)]
+    results = sched.drain()
+    assert sorted(results) == sorted(rids)
+    for rid in rids:
+        assert results[rid][:24] == prompt
+        assert len(results[rid]) == 32
+    # one durable record: identical re-publishes dedup on the cache key
+    assert len(eng.prefix_store.walk()) == 1
+    assert eng.pending_publishes == 0
+    # the published prefix survives a crash — scheduler traffic produced
+    # a durable, recoverable index
+    stats = eng.crash_and_recover()
+    assert stats["index_records"] == 1
+
+
+# ---------------------------------------------------------------------------
+# group-commit publish: queue → one batched append → one root swing
+# ---------------------------------------------------------------------------
+def test_queue_publish_batches_behind_one_flush(mesh):
+    eng = _engine(mesh, lanes=3, max_seq=64, pages_per_sb=2)
+    p1, p2 = _prompt(4, 24), _prompt(5, 24)
+    a = eng.add_request(p1, share_prefix=True)
+    c = eng.add_request(p2, share_prefix=True)
+    for _ in range(24):
+        eng.step()
+    assert eng.queue_publish(a) and eng.queue_publish(c)
+    # nothing durable yet: both appends are parked in the queue …
+    assert eng.pending_publishes == 2
+    assert eng.prefix_store.walk() == []
+    # … but the transient half is live — a sharer hits BEFORE the flush
+    b = eng.add_request(p1, share_prefix=True)
+    assert b in eng.shared_spans
+    assert int(np.asarray(eng.dstate["pos"][b])) == 24
+    # one flush lands both records as one chain segment
+    assert eng.flush_publishes() == 2
+    assert eng.pending_publishes == 0
+    recs = eng.prefix_store.walk()
+    assert {r.key for r in recs} == {hash_tokens(p1), hash_tokens(p2)}
+    assert len({r.off for r in recs}) == 2
+    assert eng.prefix_store.head == recs[0].off
+    stats = eng.crash_and_recover()
+    assert stats["index_records"] == 2
+
+
+def test_unflushed_publishes_die_with_a_crash(mesh):
+    eng = _engine(mesh, lanes=3, max_seq=64, pages_per_sb=2)
+    prompt = _prompt(6, 24)
+    a = eng.add_request(prompt, share_prefix=True)
+    off, n_span = eng.large_spans[a]
+    head_sb = off // eng.acfg.sb_words
+    ext = ja.span_sbs(eng.acfg, n_span)
+    for _ in range(24):
+        eng.step()
+    assert eng.queue_publish(a)
+    stats = eng.crash_and_recover()         # crash BEFORE any flush
+    # the un-flushed group commit never became durable: no record, no
+    # queue, and the cache's transient lease vanished — only the owner's
+    # reconstructed full-extent lease remains
+    assert stats["index_records"] == 0
+    assert eng.pending_publishes == 0 and eng.prefix_store.walk() == []
+    refs = np.asarray(eng.astate.span_refs)
+    assert refs[head_sb:head_sb + ext].tolist() == [1] * ext
+    # the prompt is a cache miss again — the sharer re-reserves
+    b = eng.add_request(prompt, share_prefix=True)
+    assert b in eng.large_spans and b not in eng.shared_spans
+
+
+# ---------------------------------------------------------------------------
+# satellite: record blocks never collide with lane pages
+# ---------------------------------------------------------------------------
+def test_record_blocks_disjoint_from_lane_zero_pages(mesh):
+    """Record allocation uses dedicated ranks past the lane range — the
+    old path requested rank 0 (lane 0's slot in the rank-indexed block
+    cache).  Interleave lane-0 lazy decode allocation with batched
+    publishes and check no offset is ever handed out twice."""
+    eng = _engine(mesh, lanes=3, max_seq=64, pages_per_sb=2)
+    p1, p2 = _prompt(7, 24), _prompt(8, 24)
+    b = eng.add_request(p1, share_prefix=True)      # lane 2 (span)
+    c = eng.add_request(p2, share_prefix=True)      # lane 1 (span)
+    a = eng.add_request([5, 9, 3])                  # lane 0: lazy pages
+    assert a == 0
+    for _ in range(24):
+        eng.step()
+    assert eng.queue_publish(b) and eng.queue_publish(c)
+    assert eng.flush_publishes() == 2
+    for _ in range(8):
+        eng.step()                          # lane 0 keeps allocating pages
+    assert eng.queue_publish(b)             # longer prefix → new key
+    assert eng.queue_publish(c)
+    assert eng.flush_publishes() == 2
+    rec_offs = [r.off for r in eng.prefix_store.walk()]
+    assert len(rec_offs) == 4
+    lane0 = np.asarray(eng.dstate["block_table"][a])
+    lane0 = lane0[lane0 >= 0].tolist()
+    assert lane0                            # lane 0 really allocated pages
+    span_pages = [off + i for off, n in eng.large_spans.values()
+                  for i in range(n)]
+    everything = rec_offs + lane0 + span_pages
+    assert len(everything) == len(set(everything)), \
+        "an arena offset was handed out twice"
+
+
+# ---------------------------------------------------------------------------
+# satellite: mid-page publish semantics
+# ---------------------------------------------------------------------------
+def test_page_path_rejects_mid_page_publish(mesh):
+    """The old alignment guard was dead (``pos < full*page`` can't hold)
+    and a mid-page publish shipped the publisher's *current* token as
+    the boundary token — sharers would decode garbage.  The page path
+    now shares only page-aligned positions."""
+    eng = _engine(mesh, lanes=4, max_seq=64, page_size=4)
+    prompt = _prompt(9, 10, vocab=64)       # 2 full pages + 2 stragglers
+    a = eng.add_request(prompt)
+    for _ in range(len(prompt)):
+        eng.step()
+    assert int(np.asarray(eng.dstate["pos"][a])) == 10   # mid-page
+    assert eng.queue_publish(a) is False
+    assert eng._prefix_cache == {} and eng.page_refs == {}
+    b = eng.add_request(prompt, share_prefix=True)
+    assert int(np.asarray(eng.dstate["pos"][b])) == 0    # miss — no entry
+    for lane in (a, b):
+        eng.finish(lane)
+
+
+def test_span_path_mid_page_publish_uses_boundary_token(mesh):
+    """The span path already clamps a mid-page publish to whole pages —
+    but it stored the lane's *current* token as the continuation, not
+    the token at the published boundary."""
+    eng = _engine(mesh, lanes=3, max_seq=64, pages_per_sb=2)
+    prompt = _prompt(10, 24)
+    a = eng.add_request(prompt, share_prefix=True)
+    for _ in range(20):
+        eng.step()
+    assert int(np.asarray(eng.dstate["pos"][a])) == 20   # mid page 3
+    assert eng.queue_publish(a)
+    key = hash_tokens(prompt[:16])          # clamped to 2 whole pages
+    entry = eng._prefix_cache[key]
+    assert entry[3] == 2 and entry[4] == 16
+    assert entry[6] == prompt[16]           # boundary token, NOT tokens[20]
+    assert eng._prefix_tokens[key] == tuple(prompt[:16])
+    # a sharer of the 16-token prefix resumes exactly at the boundary
+    b = eng.add_request(prompt[:16], share_prefix=True)
+    assert int(np.asarray(eng.dstate["pos"][b])) == 16
+    assert eng.sessions[b].tokens == prompt[:16] + [prompt[16]]
+    eng.flush_publishes()
+
+
+# ---------------------------------------------------------------------------
+# satellite: two records naming one span, crash-exact lease recovery
+# ---------------------------------------------------------------------------
+def test_double_record_same_span_lease_vector_survives_crash(mesh):
+    eng = _engine(mesh, lanes=3, max_seq=64, pages_per_sb=2)
+    prompt = _prompt(11, 32)                # 4 pages > 2 per sb → span
+    a = eng.add_request(prompt, share_prefix=True)
+    off, n_span = eng.large_spans[a]
+    head_sb = off // eng.acfg.sb_words
+    ext = ja.span_sbs(eng.acfg, n_span)
+    for _ in range(16):
+        eng.step()
+    assert eng.queue_publish(a)             # record 1: 16 tokens, 1 sb lease
+    for _ in range(16):
+        eng.step()
+    assert eng.queue_publish(a)             # record 2: 32 tokens, 2 sb lease
+    assert eng.flush_publishes() == 2
+    recs = eng.prefix_store.walk()
+    assert [r.span for r in recs] == [off, off]          # same span, twice
+    assert sorted(r.lease_sbs for r in recs) == [1, 2]   # different extents
+    # a sharer leases the SHORT prefix — three different lease lengths
+    # now cover one span (owner full-extent, record leases, sharer)
+    b = eng.add_request(prompt[:16], share_prefix=True)
+    assert eng.shared_spans[b] == (off, 2, 1)
+    refs_before = np.asarray(eng.astate.span_refs).copy()
+
+    stats = eng.crash_and_recover()
+    assert stats["index_records"] == 2
+    # acceptance: every reconstructed full-extent lease re-trims to its
+    # recorded length — the vector equals the pre-crash one exactly
+    assert np.asarray(eng.astate.span_refs).tolist() == \
+        refs_before.tolist(), "post-recovery lease vector drifted"
+    # both prefixes stay hittable without re-prefill
+    c = eng.add_request(prompt[:16], share_prefix=True)
+    assert c in eng.shared_spans
+    assert int(np.asarray(eng.dstate["pos"][c])) == 16
+
+    for lane in (a, b, c):
+        eng.finish(lane)
+    eng.drop_prefix_cache()                 # unlinks BOTH records
+    assert eng.prefix_store.walk() == []
+    assert ja.live_blocks(eng.astate, eng.acfg)["large"] == 0
+    assert int(np.asarray(eng.astate.span_refs).sum()) == 0
+    assert refs_before[head_sb] >= 4 and ext == 4        # scenario sanity
