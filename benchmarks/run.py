@@ -135,6 +135,23 @@ def bench_servingchurn(seed=0):
         a.close()
 
 
+def bench_hierprompt(seed=0):
+    """Hierarchical prompts (shared system × per-tenant middle × unique
+    suffix): the extra ``hierprompt_footprint`` rows are
+    ``name,sbs_per_request,fences_per_request`` (not us/ops).  The trie
+    variant longest-prefix-matches the shared pages and leases only
+    their superblocks — per-request footprint ~O(suffix); the flat
+    exact-match baseline misses on every unique suffix and re-prefills
+    the whole prompt — ~O(prompt)."""
+    for label, trie in (("ralloc+trie", True), ("ralloc+flat", False)):
+        a = fresh("ralloc")
+        ops, fpr, spr = workloads.hierprompt(a, seed=seed, use_trie=trie)
+        _row(f"hierprompt[{label}]", ops)
+        print(f"hierprompt_footprint[{label}],{spr:.2f},{fpr:.3f}",
+              flush=True)
+        a.close()
+
+
 def bench_prodcon(pairs=(1,), seed=0):
     for kind in KINDS:
         for p in pairs:
@@ -255,6 +272,18 @@ BENCHES: dict[str, dict] = {
             ("ralloc+groupcommit", lambda a, s: workloads.servingchurn(
                 a, lanes=4, rounds=3, hold_rounds=1, group_commit=4,
                 seed=s))],
+    },
+    "hierprompt": {
+        "full": bench_hierprompt,
+        # partial-prefix hits vs the flat exact-match baseline on the
+        # same hierarchical traffic: the pair is what the baseline gate
+        # trends — a regression that loses partial hits shows up as the
+        # trie round's fences/request and sbs/request drifting up to
+        # the flat round's
+        "smoke": [("ralloc+trie", lambda a, s: workloads.hierprompt(
+            a, tenants=2, reqs=4, seed=s)),
+            ("ralloc+flat", lambda a, s: workloads.hierprompt(
+                a, tenants=2, reqs=4, seed=s, use_trie=False))],
     },
     "prodcon": {
         "full": bench_prodcon,
@@ -399,27 +428,68 @@ def run_smoke(names: list[str], seed: int,
                   f"not ≤ half of strict {fprs['ralloc']:.3f} "
                   f"(publish_batch/remove_batch amortization dead)",
                   flush=True)
+    if "hierprompt" in names:
+        # acceptance gate (ISSUE PR 8): on hierarchical traffic the trie
+        # must at least HALVE per-request superblock footprint vs the
+        # flat exact-match baseline — O(suffix), not O(prompt).  A
+        # weaker ratio means partial-prefix hits quietly died and every
+        # request is re-prefilling its whole prompt again.
+        sbs = {}
+        t0 = time.perf_counter()
+        for label, trie in (("trie", True), ("flat", False)):
+            a = fresh("ralloc", mb=64)
+            try:
+                _, _, sbs[label] = workloads.hierprompt(
+                    a, tenants=2, reqs=4, seed=seed, use_trie=trie)
+            finally:
+                a.close()
+        ok = sbs["trie"] * 2 <= sbs["flat"]
+        record("hierprompt_sanity", "ralloc", ok,
+               time.perf_counter() - t0,
+               sbs_trie=round(sbs["trie"], 3),
+               sbs_flat=round(sbs["flat"], 3))
+        if not ok:
+            print(f"smoke[hierprompt,ralloc] FAILED: trie footprint "
+                  f"{sbs['trie']:.2f} sbs/request is not ≤ half of the "
+                  f"flat baseline's {sbs['flat']:.2f} (partial-prefix "
+                  f"hit path dead)", flush=True)
     if baseline_path:
         import json
         with open(baseline_path) as f:
             base = json.load(f)
-        want = {(b["workload"], b["kind"]): b["fences_per_request"]
-                for b in base.get("results", [])
-                if b.get("fences_per_request") is not None}
+        # gate every derived metric a round shares with its baseline
+        # row (fences_per_request, sbs_*, fences_strict, ...).  Raw
+        # counters and wall-clock are size/timing artifacts, not the
+        # contract — skipped.  ALL out-of-band metrics of a round are
+        # reported in ONE failure, so a multi-metric regression is
+        # diagnosable from a single CI run instead of one gate per fix.
+        ungated = {"workload", "kind", "ok", "error", "seconds",
+                   "n_requests", "n_flush", "n_fence"}
+        want = {(b["workload"], b["kind"]): b
+                for b in base.get("results", [])}
         for row in list(results):
             key = (row["workload"], row["kind"])
-            if row.get("fences_per_request") is None or key not in want:
-                continue
-            w, g = want[key], row["fences_per_request"]
-            if abs(g - w) <= 0.2 * w + 0.05:
+            bad = []
+            for metric, w in want.get(key, {}).items():
+                g = row.get(metric)
+                if (metric in ungated
+                        or not isinstance(w, (int, float))
+                        or not isinstance(g, (int, float))
+                        or isinstance(w, bool) or isinstance(g, bool)):
+                    continue
+                if abs(g - w) > 0.2 * abs(w) + 0.05:
+                    bad.append((metric, g, w))
+            if not bad:
                 continue
             record(f"baseline:{key[0]}", key[1], False, 0.0,
-                   fences_per_request=g, baseline=w)
-            print(f"smoke[{key[0]},{key[1]}] FAILED baseline gate: "
-                  f"{g:.3f} fences/request vs checked-in {w:.3f} (±20%)"
-                  f" — regression, or an intended improvement that "
-                  f"needs benchmarks/baselines/smoke.json updated",
-                  flush=True)
+                   deviations={m: {"got": g, "baseline": w}
+                               for m, g, w in bad})
+            detail = "; ".join(f"{m} {g:.3f} vs checked-in {w:.3f}"
+                               for m, g, w in bad)
+            print(f"smoke[{key[0]},{key[1]}] FAILED baseline gate "
+                  f"(±20%): {detail} — regression, or an intended "
+                  f"improvement that needs "
+                  f"benchmarks/baselines/smoke.json updated", flush=True)
     if json_path:
         import json
         with open(json_path, "w") as f:

@@ -443,6 +443,110 @@ def servingchurn(alloc, lanes=8, rounds=6, group_commit=1, hold_rounds=2,
     return requests / dt, fences / max(requests, 1)
 
 
+def hierprompt(alloc, tenants=3, reqs=4, sys_pages=4, mid_pages=2,
+               uniq_pages=2, page=4, seed=0, use_trie=True):
+    """Hierarchical prompts over the durable prefix trie (ralloc only):
+    every request is *shared system prompt* × *per-tenant middle* ×
+    *unique suffix*, the production shape where exact-whole-prompt
+    caching shares nothing (the unique suffix makes every full-prompt
+    key distinct).
+
+    ``use_trie=True`` serves through ``core.prefix_trie``: the first
+    request of a tenant prefills a full span and publishes its shared
+    prefix (splitting existing edges at the system/middle boundary, so
+    the system prompt itself lands in ONE node all tenants descend
+    from); every later request longest-prefix-matches the shared pages,
+    leases only those superblocks, and allocates just its
+    ``uniq_pages``-page suffix — per-request footprint O(suffix).
+
+    ``use_trie=False`` is the flat exact-match baseline
+    (``core.prefix_index`` keyed by the whole prompt, the pre-trie
+    engine behavior): the unique suffix defeats every lookup, so each
+    request prefills its full span — per-request footprint O(prompt).
+
+    Returns ``(requests_per_sec, fences_per_request,
+    sbs_per_request)`` where ``sbs_per_request`` is the superblocks of
+    *new* prompt state each request had to materialize (leased shared
+    superblocks are free — that is the whole point).
+    """
+    from repro.core.layout import SB_SIZE, SB_WORDS
+    r = alloc.r                         # ralloc-only (durable trie/index)
+    rng = random.Random(seed)
+    shared_pages = sys_pages + mid_pages
+    total_pages = shared_pages + uniq_pages
+    size = total_pages * SB_SIZE - 512  # one page per superblock
+    sys_toks = [rng.randrange(1, 1 << 16) for _ in range(sys_pages * page)]
+    if use_trie:
+        from repro.core.prefix_trie import REC_BYTES, PrefixTrie
+        trie = PrefixTrie(r, page=page, sb_pages=1)
+        idx = None
+    else:
+        from repro.core.prefix_index import (REC_BYTES, PrefixIndex,
+                                             hash_tokens)
+        trie, idx = None, PrefixIndex(r)
+    # warm the record class so its one-off superblock claim doesn't
+    # pollute the fence/footprint comparison between the two variants
+    r.free(r.malloc(REC_BYTES))
+
+    def prefill(head, k):
+        for j in range(k):
+            r.write_word(head + j * SB_WORDS, 0x5EED + j)
+            r.flush_range(head + j * SB_WORDS, 1)
+        r.fence()
+
+    flat_keys: list[int] = []
+    requests = new_sbs = 0
+    fence0 = r.mem.n_fence
+    t0 = time.perf_counter()
+    for t in range(tenants):
+        mid_toks = [rng.randrange(1, 1 << 16)
+                    for _ in range(mid_pages * page)]
+        shared = sys_toks + mid_toks
+        for _ in range(reqs):
+            uniq = [rng.randrange(1, 1 << 16)
+                    for _ in range(uniq_pages * page)]
+            toks = shared + uniq
+            requests += 1
+            node, k = trie.match(shared) if trie is not None else (None, 0)
+            if node is not None and k == shared_pages:
+                # partial hit: lease ONLY the shared superblocks, decode
+                # the suffix on freshly allocated pages of its own
+                alloc.span_acquire(node.span, node.lease_sbs)
+                suffix = alloc.malloc(uniq_pages * SB_SIZE - 512)
+                assert suffix is not None
+                prefill(suffix, uniq_pages)
+                new_sbs += uniq_pages
+                alloc.free(suffix)
+                alloc.span_release(node.span, node.lease_sbs)
+                continue
+            # miss (first request of a tenant, or the flat baseline's
+            # every request): reserve + prefill the FULL prompt span
+            head = alloc.malloc(size)
+            assert head is not None
+            prefill(head, total_pages)
+            new_sbs += total_pages
+            if trie is not None:
+                trie.insert(shared, head)    # splits at sys boundary
+            else:
+                key = hash_tokens(toks)      # whole prompt: never hits
+                idx.publish(key, head, n_pages=shared_pages,
+                            lease_sbs=shared_pages)
+                flat_keys.append(key)
+            # the publisher finishes short: the published prefix lease
+            # pins the shared superblocks, the decode tail frees here
+            alloc.free(head)
+    dt = time.perf_counter() - t0
+    fences = r.mem.n_fence - fence0
+    # teardown outside the timed region (eviction cost is servingchurn's
+    # story, not this workload's)
+    if trie is not None:
+        trie.clear()
+    else:
+        for key in flat_keys:
+            idx.remove(key)
+    return requests / dt, fences / max(requests, 1), new_sbs / requests
+
+
 def prodcon(alloc, n_pairs=1, items=4000, size=64):
     """Producer/consumer via an M&S-style queue: producer allocates,
     consumer frees (paper's Prod-con)."""

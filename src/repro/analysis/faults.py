@@ -33,6 +33,19 @@ SITES = frozenset({
     "heap.set_root.persist",                 # root swing flush+fence
     "ralloc.trim_tail.persist",              # trim's size-record shrink
     "ralloc.free_large.persist",             # span record clears before free
+    "prefix_trie.commit.fields_persist",     # trie batch: the ONE fence all
+    #                                          new node records' non-seal
+    #                                          fields share before any seal
+    "prefix_trie.commit.records_persist",    # trie batch: the ONE fence the
+    #                                          sealed records share before the
+    #                                          root swing / chain relink
+    "prefix_trie.commit.relink_persist",     # split: predecessor next-pointer
+    #                                          splice flush+fence
+    "prefix_trie.split.reparent_persist",    # split: children's parent words
+    #                                          flush+fence before the old
+    #                                          node's block frees
+    "prefix_trie.remove.unlink_persist",     # leaf unlink flush+fence before
+    #                                          its lease drops
 })
 
 _suppressed: set[str] = set()

@@ -33,6 +33,8 @@ from ..core import layout
 from ..core import pptr as pp
 from ..core.atomics import CACHELINE_WORDS
 from ..core.prefix_index import REC_WORDS, TYPENAME as PREFIX_TYPENAME
+from ..core.prefix_trie import (REC_WORDS as TRIE_REC_WORDS,
+                                TYPENAME as TRIE_TYPENAME)
 
 __all__ = [
     "DurabilityShadow",
@@ -361,6 +363,111 @@ def standard_rules(r, *, group_commit: bool = True) -> list[Rule]:
         "span-records-cleared-before-free",
         lambda ev: ev.kind == "note" and ev.label == "span_free",
         span_free_check))
+
+    # --- prefix-trie structural rules (core.prefix_trie): the trie's
+    # insert/split/remove protocol is inherently batched (one field
+    # fence, one seal fence, one swing/relink), so its rules are part of
+    # the base spec.  Rules 5 and 6 above already cover the trie's
+    # "publish_end" and "lease_release" notes — the trie reuses both
+    # labels with the same info shape and the same obligations.
+
+    def is_trie_slot(slot):
+        return r._root_filters.get(slot) == TRIE_TYPENAME
+
+    def _trie_nonseal(rec):
+        # every sealed word plus the chain/parent links — all but the
+        # seal itself (word 2), which the protocol writes after them
+        return (rec, rec + 1, rec + 3, rec + 4, rec + 5, rec + 6, rec + 7)
+
+    # (T1) Every node record's non-seal fields durable before ANY seal
+    # word of the batch is written (note "trie_seal" fires between the
+    # shared field fence and the first seal write).
+    def trie_seal_check(sh, ev):
+        msgs = []
+        for rec in ev.info["records"]:
+            bad = [w for w in _trie_nonseal(rec) if not sh.is_durable(w)]
+            if bad:
+                msgs.append(f"trie record {rec}: words {bad} not durable "
+                            f"at seal time")
+        return msgs
+    rules.append(Rule(
+        "trie-fields-durable-before-seal",
+        lambda ev: ev.kind == "note" and ev.label == "trie_seal",
+        trie_seal_check))
+
+    # (T2) Every new child record fully durable before the single root
+    # swing attaches the segment (note "trie_attach" fires between the
+    # shared seal fence and the swing) — the trie analogue of (4b).
+    def trie_attach_check(sh, ev):
+        msgs = []
+        for rec in ev.info["records"]:
+            bad = [w for w in range(rec, rec + TRIE_REC_WORDS)
+                   if not sh.is_durable(w)]
+            if bad:
+                msgs.append(f"trie attach with record {rec} words {bad} "
+                            f"not durable")
+        return msgs
+    rules.append(Rule(
+        "trie-child-durable-before-parent-swing",
+        lambda ev: ev.kind == "note" and ev.label == "trie_attach",
+        trie_attach_check))
+
+    # (T3) Non-null store to a trie-typed root slot must name a record
+    # all TRIE_REC_WORDS of which are durable — the sized analogue of
+    # (4) for the 8-word trie record.
+    def trie_swing_check(sh, ev):
+        rec = sb_base + ev.value - 1
+        bad = [w for w in range(rec, rec + TRIE_REC_WORDS)
+               if not sh.is_durable(w)]
+        if bad:
+            return [f"trie root swing to record {rec} with non-durable "
+                    f"words {bad}"]
+        return []
+    rules.append(Rule(
+        "trie-record-durable-before-root-swing",
+        lambda ev: (ev.kind == "write" and ev.value
+                    and layout.M_ROOTS <= ev.addr < layout.M_ROOTS
+                    + layout.MAX_ROOTS
+                    and is_trie_slot(ev.addr - layout.M_ROOTS)),
+        trie_swing_check))
+
+    # (T4) Split: BOTH halves fully durable before the single relink
+    # write splices them into the old node's chain position (note
+    # "trie_split_relink" fires between the seal fence and the splice).
+    # A torn splice with a non-durable half would recover a chain whose
+    # covering node is garbage — the child subtree becomes unservable.
+    def trie_split_check(sh, ev):
+        msgs = []
+        for rec in ev.info["records"]:
+            bad = [w for w in range(rec, rec + TRIE_REC_WORDS)
+                   if not sh.is_durable(w)]
+            if bad:
+                msgs.append(f"trie split relink with half {rec} words "
+                            f"{bad} not durable")
+        return msgs
+    rules.append(Rule(
+        "trie-split-halves-durable-before-relink",
+        lambda ev: ev.kind == "note" and ev.label == "trie_split_relink",
+        trie_split_check))
+
+    # (T5) Split: every child's parent word durably points at the new
+    # upper half before the old node's block frees (note "trie_old_free"
+    # fires just before the free).  A freed-and-reused block under a
+    # stale durable parent pointer would mis-shape the recovered tree.
+    def trie_reparent_check(sh, ev):
+        new = ev.info["new"]
+        msgs = []
+        for cp in ev.info["children"]:
+            w = cp + 1
+            if (not sh.is_durable(w)
+                    or pp.decode(w, sh.durable_value(w)) != new):
+                msgs.append(f"old trie node freed with child {cp} parent "
+                            f"word not durably re-pointed at {new}")
+        return msgs
+    rules.append(Rule(
+        "trie-reparent-durable-before-old-free",
+        lambda ev: ev.kind == "note" and ev.label == "trie_old_free",
+        trie_reparent_check))
 
     if not group_commit:
         return rules

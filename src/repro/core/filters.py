@@ -99,7 +99,42 @@ def prefix_index_filter(reader, block_word, size_bytes):
         yield span, None          # span head: traced conservatively
 
 
+def prefix_trie_filter(reader, block_word, size_bytes):
+    """Durable prefix-trie node record (core.prefix_trie):
+    [next: pptr][parent: pptr][seal: key48+checksum16][span: pptr]
+    [end_page][start_page][lease_sbs][fingerprint].
+
+    Word 0 chains to the next record and word 1 to the parent node —
+    both recurse typed (the parent is also on the chain; yielding it
+    only keeps the mark precise, it adds nothing live).  Word 3 is the
+    node's reference to its span head: the mark pass counts it like a
+    root, which is how each node's prefix lease survives a crash —
+    several records may reference the same span (split halves), and the
+    reconstruction counts one full-extent lease per record, which
+    ``prune_torn_nodes`` + ``retrim_after_recovery`` then shrink back.
+    Words 4–7 are plain integers (the fingerprint keeps its top 16 bits
+    zero), so the typed filter and a conservative scan mark the
+    identical live set.
+
+    Same belt-and-suspenders as the flat index: a torn record's span
+    reference is not yielded, its next (and parent) still are.
+    """
+    from .prefix_trie import record_seal_matches
+    nxt = pp.decode(block_word, reader.read_word(block_word))
+    if nxt is not None:
+        yield nxt, "prefix_trie"
+    parent = pp.decode(block_word + 1, reader.read_word(block_word + 1))
+    if parent is not None:
+        yield parent, "prefix_trie"
+    if not record_seal_matches(reader, block_word):
+        return
+    span = pp.decode(block_word + 3, reader.read_word(block_word + 3))
+    if span is not None:
+        yield span, None          # span head: traced conservatively
+
+
 def register_stock_filters(reg: FilterRegistry) -> None:
     reg.register("stack_node", stack_node_filter)
     reg.register("tree_node", tree_node_filter)
     reg.register("prefix_index", prefix_index_filter)
+    reg.register("prefix_trie", prefix_trie_filter)

@@ -221,7 +221,7 @@ def sweep(cfg: ArenaConfig, persistent: dict, marked,
     )
 
 
-def live_record_mask(cfg: ArenaConfig, marked, offs):
+def live_record_mask(cfg: ArenaConfig, marked, offs, seal_ok=None):
     """Which block offsets survived the sweep (their slots are marked).
 
     The serving prefix store (``serving.prefix_store``) filters its
@@ -230,13 +230,23 @@ def live_record_mask(cfg: ArenaConfig, marked, offs):
     and is dropped here — the vectorized mirror of the host GC freeing an
     unreachable ``core.prefix_index`` record.  ``offs`` may contain -1
     (null) entries; they come back False.
+
+    ``seal_ok``, when given, is a bool vector aligned with ``offs``:
+    record ``i`` additionally survives only if ``seal_ok[i]`` — the
+    device mirror of the host's torn-seal prune
+    (``prefix_trie.prune_torn_nodes``), fed from
+    ``PrefixStore.seal_matches``.  A record whose sidecar row tore
+    mid-write is dropped here even though its block is marked.
     """
     offs = jnp.asarray(offs, jnp.int32)
     S = num_slots(cfg)
     slots = jnp.where(offs >= 0, slot_of(cfg, offs), S)
     padded = jnp.concatenate([jnp.asarray(marked, bool),
                               jnp.zeros((1,), bool)])
-    return (offs >= 0) & padded[slots]
+    live = (offs >= 0) & padded[slots]
+    if seal_ok is not None:
+        live = live & jnp.asarray(seal_ok, bool)
+    return live
 
 
 def recover(cfg: ArenaConfig, persistent: dict, ref_table,

@@ -1,0 +1,778 @@
+"""Durable token-radix prefix trie: partial-prefix hits that survive a crash.
+
+``core.prefix_index`` made the prefix cache crash-durable, but kept it
+exact-whole-prompt keyed: two prompts sharing a 2k-token system prompt
+and differing in the last token share nothing.  This module generalizes
+the index chain into a **radix trie over prompt pages**: each node owns
+a page range ``[start_page, end_page)`` of some published prompt and a
+``RangeLeaseTable`` *prefix lease* ``[0, lease_sbs)`` on its span — the
+exact "lease ``[0, k)`` of a longer span" shape the PR-4 lease machinery
+was built for — so a request matching only ``k`` pages of a longer
+published prompt leases just those ``k`` pages' superblocks and decodes
+its suffix on its own pages.
+
+Node semantics (the invariant everything below leans on):
+
+  * A node's **span** is its publisher's own reservation and backs the
+    node's *entire prefix* ``[0, end_page)`` at identity page offsets —
+    page ``j`` of the prefix is span page ``j``.  A deep node is
+    therefore self-contained: serving any boundary ``end_page`` needs
+    only that one span.
+  * A node's **key** is the cumulative 48-bit hash
+    (``prefix_index.hash_tokens``) of the whole prefix up to
+    ``end_page`` — not of the edge alone — so matching a node verifies
+    the full path implicitly, and a mis-parented record (possible only
+    through recovery of a hostile image) can never serve a wrong prefix.
+  * A node's **lease** covers span superblocks ``[0, lease_sbs)`` with
+    ``lease_sbs = ceil(end_page / sb_pages)`` — exactly the
+    superblocks the prefix occupies.  One durable record ⇔ one lease,
+    which is what lets recovery rebuild the lease vector by counting
+    references (nothing extra persisted, same as PR 4/5).
+
+Record layout (``REC_WORDS`` = 8; one ordinary allocator block each,
+linked from a typed root and traced by the registered precise filter
+``filters.prefix_trie_filter``):
+
+    word 0   next record      (chain pptr; rewritten by unlink — unsealed)
+    word 1   parent pptr      (tree shape; rewritten by split re-parent —
+                               unsealed; PPTR_NULL = child of the root)
+    word 2   seal             (key48 | checksum16 << 48, written LAST)
+    word 3   span head        (self-relative pptr)
+    word 4   end_page
+    word 5   start_page
+    word 6   lease_sbs
+    word 7   fingerprint      (edge-first token low32 | prefix-last token
+                               low16 << 32; top 16 bits zero) — lets even a
+                               *recovered* node (whose exact tokens died
+                               with the crash) verify a cheap token
+                               fingerprint before serving, closing the
+                               PR-5 "recovered entries match by hash
+                               alone" residual.
+
+Persist protocol — the group-commit discipline of ``publish_batch``
+(NVTraverse: only the destination write needs its own fence) applied to
+every structural operation:
+
+  * **insert / insert_batch**: leases acquired, one content fence, all N
+    new records' non-seal fields + ONE flush+fence
+    (``prefix_trie.commit.fields_persist``), all N seals + ONE
+    flush+fence (``.records_persist``), ONE root swing attaches the
+    chain segment.  Crash anywhere ⇒ either none of the batch is
+    reachable (GC frees the blocks, leases fall back to the roots) or
+    all of it is.
+  * **split** of node X ``[s, e)`` at page ``m``: two new records — M
+    ``[s, m)`` and X' ``[m, e)``, ``M.next = X'``,
+    ``X'.next = X.next``, ``X'.parent = M`` — go through the same
+    fields-fence / seal-fence pair, then ONE relink write splices the
+    pair in X's chain position (predecessor next-pointer, or the root
+    swing when X was the head; ``.relink_persist``), X's children
+    re-parent to X' behind one fence (``.reparent_persist``), and only
+    then does X's lease drop and its block free.  Either crash side is
+    consistent: before the relink the new pair is unreachable; after
+    it, X is — the GC frees whichever side lost.
+  * **remove** (leaf only): durable unlink (``.unlink_persist``) strictly
+    before the lease release — a linked record always implies a live
+    span, same as the flat index.
+
+Recovery: ``recovery.recover`` prunes torn-seal nodes durably *before*
+the mark pass and applies the **recoverability criterion** to their
+children — a node is recoverable iff valid records cover its whole
+ancestry ``[0, start_page)``; a child whose boundary some surviving
+record still covers is durably re-parented to it (safe: navigation is
+by cumulative hash, the parent pointer is only shape), anything else is
+durably dropped with its descendants.  Surviving nodes re-publish with
+zero re-prefill and ``retrim_after_recovery`` shrinks each one's
+reconstructed full-extent lease back to its recorded ``lease_sbs``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator
+
+from ..analysis.faults import is_suppressed
+from . import pptr as pp
+from .layout import MAX_ROOTS, WORD
+from .prefix_index import _KEY_MASK, hash_tokens
+
+TYPENAME = "prefix_trie"
+REC_WORDS = 8
+REC_BYTES = REC_WORDS * WORD
+#: default root slot — one below the flat index's (``MAX_ROOTS - 1``).
+PREFIX_TRIE_ROOT = MAX_ROOTS - 2
+
+_M32 = 0xFFFFFFFF
+_M64 = 0xFFFFFFFFFFFFFFFF
+
+
+def page_hashes(tokens, page: int) -> list[int]:
+    """Cumulative 48-bit prefix hash at every whole-page boundary:
+    ``out[j] == hash_tokens(tokens[:(j + 1) * page])`` — one pass."""
+    h = 0xCBF29CE484222325
+    out: list[int] = []
+    for j in range((len(tokens) // page) * page):
+        h ^= int(tokens[j]) & _M64
+        h = (h * 0x100000001B3) & _M64
+        if (j + 1) % page == 0:
+            out.append(h & _KEY_MASK)
+    return out
+
+
+def fingerprint(first_tok: int, last_tok: int) -> int:
+    """Pack the edge's first token (low 32 bits) and the prefix's last
+    token (low 16 bits) into one 48-bit word.  Keeping the top 16 bits
+    zero means the word can never carry the pptr tag pattern — no
+    remap, and the round-trip through a recovered record is exact."""
+    return (int(first_tok) & _M32) | ((int(last_tok) & 0xFFFF) << 32)
+
+
+def _record_checksum(span_word: int, end_page: int, start_page: int,
+                     lease_sbs: int, fprint: int, key48: int) -> int:
+    """16-bit content checksum over the sealed fields (words 3–7 + key).
+
+    Words 0 (next) and 1 (parent) are excluded: a neighbour's unlink
+    rewrites next in place, and a split re-parents children in place —
+    neither must stale a live record's seal.  Same nonzero seed and
+    tag-remap guarantees as ``prefix_index._record_checksum``.
+    """
+    h = 0x9E3779B97F4A7C15
+    for v in (span_word, end_page, start_page, lease_sbs, fprint, key48):
+        h ^= int(v) & _M64
+        h = (h * 0x100000001B3) & _M64
+    c = (h ^ (h >> 16) ^ (h >> 32) ^ (h >> 48)) & 0xFFFF
+    if c == pp.PPTR_TAG:
+        c ^= 0x5A5A
+    return c
+
+
+def record_seal_matches(reader, rec: int) -> bool:
+    """Checksum-only validity (caller bounds-checks ``rec``)."""
+    w3 = int(reader.read_word(rec + 3))
+    w2 = int(reader.read_word(rec + 2)) & _M64
+    if pp.decode(rec + 3, w3) is None:
+        return False
+    return (w2 >> 48) == _record_checksum(
+        w3, int(reader.read_word(rec + 4)), int(reader.read_word(rec + 5)),
+        int(reader.read_word(rec + 6)), int(reader.read_word(rec + 7)),
+        w2 & _KEY_MASK)
+
+
+def record_is_valid(r, rec: int) -> bool:
+    heap = r.heap
+    if not (heap.in_sb_region(rec) and heap.in_sb_region(rec + REC_WORDS - 1)):
+        return False
+    return record_seal_matches(r, rec)
+
+
+@dataclasses.dataclass(frozen=True)
+class TrieRecord:
+    """One decoded durable trie-node record."""
+    ptr: int                 # record block word address
+    key: int                 # cumulative 48-bit hash of [0, end_page)
+    parent: int | None       # parent record address (None = root child)
+    span: int | None         # span head block address
+    end_page: int
+    start_page: int
+    lease_sbs: int
+    fprint: int
+
+
+def iter_nodes(r, slot: int = PREFIX_TRIE_ROOT) -> Iterator[TrieRecord]:
+    """Walk the node chain from root ``slot`` (cycle-safe); torn records
+    are skipped, never yielded — same contract as
+    ``prefix_index.iter_records``."""
+    rec = r.heap.get_root(slot)
+    seen: set[int] = set()
+    while rec is not None and rec not in seen:
+        seen.add(rec)
+        if not (r.heap.in_sb_region(rec)
+                and r.heap.in_sb_region(rec + REC_WORDS - 1)):
+            break
+        if record_seal_matches(r, rec):
+            yield TrieRecord(
+                ptr=rec,
+                key=int(r.read_word(rec + 2)) & _KEY_MASK,
+                parent=pp.decode(rec + 1, r.read_word(rec + 1)),
+                span=pp.decode(rec + 3, r.read_word(rec + 3)),
+                end_page=int(r.read_word(rec + 4)),
+                start_page=int(r.read_word(rec + 5)),
+                lease_sbs=int(r.read_word(rec + 6)),
+                fprint=int(r.read_word(rec + 7)) & _M64,
+            )
+        rec = pp.decode(rec, r.read_word(rec))
+
+
+def _unlink(r, slot: int, prev: int | None, nxt: int | None) -> None:
+    """One durable chain unlink (root swing or predecessor rewrite)."""
+    if prev is None:
+        r.heap.set_root(slot, nxt)                    # durable flush+fence
+    else:
+        r.mem.write(prev, pp.PPTR_NULL if nxt is None
+                    else pp.encode(prev, nxt))
+        r.mem.flush(prev)
+        r.mem.fence()
+
+
+def prune_torn_nodes(r, slot: int = PREFIX_TRIE_ROOT) -> int:
+    """Durably drop every node recovery must not trust; returns the
+    number pruned.  Runs *before* the mark pass.
+
+    Two passes:
+
+    1. **Torn seals** — unlinked exactly like
+       ``prefix_index.prune_torn_records`` (a torn record's span pptr
+       never reaches the tracer; its block, unreachable, is swept).
+    2. **Recoverability criterion** for everything that survived pass 1:
+       a node is servable only if valid records cover its whole ancestry
+       ``[0, start_page)`` — serving concatenates the ancestor page
+       ranges up to the node's start.  Fixpoint from the root boundary:
+       keep a node iff ``start_page == 0`` or some *kept* node's
+       ``end_page`` equals its ``start_page``.  A kept node whose
+       durable parent pointer dangles (its parent was pruned in pass 1,
+       e.g. the mid-split torn half) is durably **re-parented** to a
+       covering survivor — safe, because navigation matches cumulative
+       hashes and the parent word is only shape — while uncovered nodes
+       (and, transitively, their subtrees) are durably dropped: their
+       prefix pages cannot be reassembled, so a lease on them would pin
+       superblocks nobody can ever serve.
+    """
+    heap = r.heap
+    pruned = 0
+    # -- pass 1: torn seals --------------------------------------------------
+    prev = None
+    rec = heap.get_root(slot)
+    seen: set[int] = set()
+    while rec is not None and rec not in seen:
+        seen.add(rec)
+        in_bounds = (heap.in_sb_region(rec)
+                     and heap.in_sb_region(rec + REC_WORDS - 1))
+        if in_bounds and record_seal_matches(r, rec):
+            prev, rec = rec, pp.decode(rec, r.read_word(rec))
+            continue
+        pruned += 1
+        nxt = pp.decode(rec, r.read_word(rec)) if in_bounds else None
+        _unlink(r, slot, prev, nxt)
+        rec = nxt
+    # -- pass 2: coverage fixpoint ------------------------------------------
+    recs = list(iter_nodes(r, slot))
+    by_ptr = {n.ptr: n for n in recs}
+    kept: set[int] = set()
+    boundaries: set[int] = {0}
+    changed = True
+    while changed:
+        changed = False
+        for n in recs:
+            if n.ptr in kept or n.start_page not in boundaries:
+                continue
+            kept.add(n.ptr)
+            boundaries.add(n.end_page)
+            changed = True
+    # drop uncovered nodes durably (unlink before anything else — the
+    # same remove discipline; the block and, if nothing else references
+    # it, the span are reclaimed by the sweep that follows)
+    if len(kept) != len(recs):
+        prev = None
+        rec = heap.get_root(slot)
+        seen = set()
+        while rec is not None and rec not in seen:
+            seen.add(rec)
+            nxt = pp.decode(rec, r.read_word(rec))
+            if rec in kept or rec not in by_ptr:
+                prev = rec
+            else:
+                pruned += 1
+                _unlink(r, slot, prev, nxt)
+            rec = nxt
+    # re-parent kept nodes whose durable parent is gone or mismatched
+    dirty: list[int] = []
+    for ptr in kept:
+        n = by_ptr[ptr]
+        ok = (n.start_page == 0 and n.parent is None) or (
+            n.parent in kept
+            and by_ptr[n.parent].end_page == n.start_page)
+        if ok:
+            continue
+        new_parent = None
+        if n.start_page > 0:
+            new_parent = next(
+                (q for q in kept
+                 if by_ptr[q].end_page == n.start_page and q != ptr), None)
+        r.mem.write(ptr + 1, pp.PPTR_NULL if new_parent is None
+                    else pp.encode(ptr + 1, new_parent))
+        dirty.append(ptr + 1)
+    if dirty:
+        for w in dirty:
+            r.mem.flush(w)
+        r.mem.fence()
+    return pruned
+
+
+def retrim_after_recovery(r, slot: int = PREFIX_TRIE_ROOT
+                          ) -> tuple[int, int]:
+    """Shrink each surviving node's reconstructed full-extent lease back
+    to its recorded superblock count; returns ``(records, trimmed)``.
+
+    Several nodes may lease the same span (a split leaves both halves on
+    it): each durable record produced one full-extent lease in the mark
+    pass, and ``span_trim`` releases exactly one lease's tail — the
+    per-record loop is order-independent.
+    """
+    n = trimmed = 0
+    for rec in iter_nodes(r, slot):
+        n += 1
+        if rec.span is None or rec.lease_sbs < 1:
+            continue
+        try:
+            ext = r.span_extent(rec.span)
+        except ValueError:          # defensive: never reachable by design
+            continue
+        if rec.lease_sbs < ext:
+            r.span_trim(rec.span, rec.lease_sbs)
+            trimmed += 1
+    return n, trimmed
+
+
+# ---------------------------------------------------------------------------
+# Transient tree + the write protocol
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class TrieNode:
+    """Transient mirror of one durable node.
+
+    ``tokens``/``page_keys`` exist only for nodes published this
+    process: per-page cumulative hashes enable mid-edge partial matching
+    and splits.  Recovered nodes carry neither (both died with the
+    crash) and match all-or-nothing at node granularity — full-key plus
+    token fingerprint — the documented residual of page-key transience.
+    """
+    ptr: int                     # durable record address
+    key: int
+    span: int
+    start_page: int
+    end_page: int
+    lease_sbs: int
+    first_tok: int
+    last_tok: int
+    parent: "TrieNode | None" = None
+    children: list = dataclasses.field(default_factory=list)
+    tokens: tuple | None = None          # full prefix tokens [0, end_page)
+    page_keys: list | None = None        # cum. hash per page of the edge
+
+
+class PrefixTrie:
+    """Host-side durable token-radix prefix trie over one ``Ralloc``
+    heap.  ``page`` is tokens per page, ``sb_pages`` pages per
+    superblock (``lease_sbs = ceil(end_page / sb_pages)``)."""
+
+    def __init__(self, r, slot: int = PREFIX_TRIE_ROOT, *, page: int = 4,
+                 sb_pages: int = 1):
+        self.r = r
+        self.slot = slot
+        self.page = int(page)
+        self.sb_pages = int(sb_pages)
+        self.roots: list[TrieNode] = []
+        self._by_ptr: dict[int, TrieNode] = {}
+        # (re)register the typed root — filter functions are
+        # re-registered every execution, never persisted (paper §4.5.1)
+        r.get_root(slot, TYPENAME)
+        self._rebuild()
+
+    # ----------------------------------------------------------------- reads
+    def nodes(self) -> list[TrieNode]:
+        out: list[TrieNode] = []
+        stack = list(self.roots)
+        while stack:
+            n = stack.pop()
+            out.append(n)
+            stack.extend(n.children)
+        return out
+
+    def _lease_for(self, end_page: int) -> int:
+        return -(-int(end_page) // self.sb_pages)
+
+    def _fp_ok(self, node: TrieNode, tokens) -> bool:
+        return (int(tokens[node.start_page * self.page]) & _M32
+                == node.first_tok
+                and int(tokens[node.end_page * self.page - 1]) & 0xFFFF
+                == node.last_tok)
+
+    def match(self, tokens) -> tuple[TrieNode | None, int]:
+        """Longest-prefix match: ``(node, pages)`` where ``pages`` whole
+        pages of ``tokens`` are covered and ``node`` contains the last
+        matched page (``pages < node.end_page`` ⇒ the match ends
+        mid-edge and a split would materialize the boundary).
+        ``(None, 0)`` when nothing matches."""
+        tokens = tuple(int(t) for t in tokens)
+        n = len(tokens) // self.page
+        if n == 0:
+            return None, 0
+        hs = page_hashes(tokens, self.page)
+        best: TrieNode | None = None
+        depth = 0
+        children = self.roots
+        while depth < n:
+            stepped = False
+            for c in children:
+                if c.start_page != depth:
+                    continue
+                if c.page_keys is not None:
+                    edge = c.end_page - c.start_page
+                    i = 0
+                    while (i < edge and depth + i < n
+                           and c.page_keys[i] == hs[depth + i]):
+                        i += 1
+                    if i == 0:
+                        continue
+                    # exact-token guard: a 48-bit page-hash collision
+                    # must read as a miss, never serve foreign KV
+                    a = depth * self.page
+                    b = (depth + i) * self.page
+                    if tokens[a:b] != c.tokens[a:b]:
+                        continue
+                    if i < edge:
+                        return c, depth + i          # mid-edge partial
+                    best, depth, stepped = c, depth + i, True
+                    break
+                # recovered node: all-or-nothing — cumulative key plus
+                # token fingerprint (satellite: even recovered entries
+                # verify tokens cheaply before serving)
+                if (n >= c.end_page and hs[c.end_page - 1] == c.key
+                        and self._fp_ok(c, tokens)):
+                    best, depth, stepped = c, c.end_page, True
+                    break
+            if not stepped:
+                break
+            children = best.children
+        return best, depth
+
+    def lookup(self, tokens) -> tuple[TrieNode | None, int]:
+        """Serving-path alias for :meth:`match` (read-only: a mid-edge
+        result is reported, not split)."""
+        return self.match(tokens)
+
+    # ---------------------------------------------------------------- writes
+    def insert(self, tokens, span_ptr: int) -> TrieNode | None:
+        """Publish ``tokens``' whole-page prefix backed by ``span_ptr``
+        (the publisher's own span, holding the full prefix at identity
+        offsets).  Splits the trie as needed, then commits ONE new node
+        covering the unmatched page range.  Returns the deepest node
+        covering the prompt (existing or new), or None when the heap
+        cannot place the record (the publish then simply doesn't happen
+        — nothing transient leaks)."""
+        out = self.insert_batch([(tokens, span_ptr)])
+        return out[0]
+
+    def insert_batch(self, items) -> list[TrieNode | None]:
+        """Group-commit insert: N publishes share ONE field fence, ONE
+        seal fence and ONE root swing (splits they require commit first,
+        each its own small batch).  Arena pressure degrades the whole
+        batch (None per item) — record blocks either all place or the
+        trie is left untouched."""
+        results: list[TrieNode | None] = []
+        news: list[TrieNode] = []
+        for tokens, span_ptr in items:
+            tokens = tuple(int(t) for t in tokens)
+            n = len(tokens) // self.page
+            if n == 0:
+                results.append(None)
+                continue
+            node, k = self.match(tokens)
+            if k == n:
+                results.append(node)           # already fully covered
+                continue
+            if node is not None and k < node.end_page:
+                mid = self.split(node, k)
+                if mid is None:                # degrade to a boundary hit
+                    while node is not None and node.end_page > k:
+                        node = node.parent
+                    k = node.end_page if node is not None else 0
+                else:
+                    node = mid
+            hs = page_hashes(tokens, self.page)
+            new = TrieNode(
+                ptr=-1, key=hs[n - 1], span=int(span_ptr), start_page=k,
+                end_page=n, lease_sbs=self._lease_for(n),
+                first_tok=int(tokens[k * self.page]) & _M32,
+                last_tok=int(tokens[n * self.page - 1]) & 0xFFFF,
+                parent=node, tokens=tokens[:n * self.page],
+                page_keys=hs[k:n])
+            news.append(new)
+            results.append(new)
+        if news and not self._commit_new(news):
+            results = [None if isinstance(x, TrieNode) and x.ptr < 0 else x
+                       for x in results]
+        return results
+
+    def _commit_new(self, news: list[TrieNode]) -> bool:
+        """The insert commit: attach ``news`` (parents before children)
+        as one chain segment.  See the module docstring for the fence
+        ordering."""
+        r = self.r
+        for nd in news:
+            r.span_acquire(nd.span, nd.lease_sbs)
+        # content fence: the published pages' application flushes become
+        # durable before the trie can claim the prefix exists
+        r.fence()
+        recs = [r.malloc(REC_BYTES) for _ in news]
+        if any(rec is None for rec in recs):
+            for rec in recs:
+                if rec is not None:
+                    r.free(rec)
+            for nd in news:
+                r.span_release(nd.span, nd.lease_sbs)
+            return False
+        head = r.heap.get_root(self.slot)
+        for nd, rec in zip(news, recs):
+            nd.ptr = rec
+        seals = []
+        for i, (nd, rec) in enumerate(zip(news, recs)):
+            nxt = recs[i + 1] if i + 1 < len(recs) else head
+            r.write_word(rec, pp.PPTR_NULL if nxt is None
+                         else pp.encode(rec, nxt))
+            # a batch-internal parent already has its ptr (parents
+            # precede children in ``news``)
+            par = nd.parent.ptr if nd.parent is not None else None
+            r.write_word(rec + 1, pp.PPTR_NULL if par is None
+                         else pp.encode(rec + 1, par))
+            span_word = pp.encode(rec + 3, nd.span)
+            r.write_word(rec + 3, span_word)
+            r.write_word(rec + 4, nd.end_page)
+            r.write_word(rec + 5, nd.start_page)
+            r.write_word(rec + 6, nd.lease_sbs)
+            fp = fingerprint(nd.first_tok, nd.last_tok)
+            r.write_word(rec + 7, fp)
+            cksum = _record_checksum(span_word, nd.end_page, nd.start_page,
+                                     nd.lease_sbs, fp, nd.key)
+            seals.append((rec, nd.key | (cksum << 48)))
+        if not is_suppressed("prefix_trie.commit.fields_persist"):
+            for rec in recs:
+                r.flush_range(rec, REC_WORDS)
+            r.fence()              # the ONE fence N field groups share
+        r.mem.note("trie_seal", records=list(recs))
+        for rec, seal in seals:
+            r.write_word(rec + 2, seal)
+        if not is_suppressed("prefix_trie.commit.records_persist"):
+            for rec, _ in seals:
+                r.flush_range(rec + 2, 1)
+            r.fence()              # the ONE fence N sealed records share
+        r.mem.note("trie_attach", records=list(recs), slot=self.slot)
+        r.set_root(self.slot, recs[0], TYPENAME)   # single swing (f+f)
+        r.mem.note("publish_end", record=recs[0], slot=self.slot)
+        # transient attach
+        for nd in news:
+            self._by_ptr[nd.ptr] = nd
+            if nd.parent is None:
+                self.roots.append(nd)
+            else:
+                nd.parent.children.append(nd)
+        return True
+
+    def split(self, node: TrieNode, pages: int) -> TrieNode | None:
+        """Materialize interior boundary ``pages`` of ``node`` as an
+        explicit node: X ``[s, e)`` becomes M ``[s, pages)`` + X'
+        ``[pages, e)`` on the same span, spliced into X's chain position
+        with ONE relink write.  Returns M, or None when the heap cannot
+        place the pair (no split happens — callers fall back to the
+        deepest existing boundary).  Only in-process nodes split:
+        recovered nodes have no page keys to split an edge by."""
+        r = self.r
+        if node.tokens is None or node.page_keys is None:
+            raise ValueError("cannot split a recovered node (no page keys)")
+        if not (node.start_page < pages < node.end_page):
+            raise ValueError(
+                f"split boundary {pages} outside ({node.start_page}, "
+                f"{node.end_page})")
+        m_lease = self._lease_for(pages)
+        # record ⇔ lease stays 1:1: both new leases up front, the old
+        # record's lease drops at the end (net: the span gains M's)
+        r.span_acquire(node.span, m_lease)
+        r.span_acquire(node.span, node.lease_sbs)
+        r.fence()
+        m_rec = r.malloc(REC_BYTES)
+        x_rec = r.malloc(REC_BYTES) if m_rec is not None else None
+        if m_rec is None or x_rec is None:
+            if m_rec is not None:
+                r.free(m_rec)
+            r.span_release(node.span, m_lease)
+            r.span_release(node.span, node.lease_sbs)
+            return None
+        old = node.ptr
+        old_next = pp.decode(old, r.read_word(old))
+        par = node.parent.ptr if node.parent is not None else None
+        tok = node.tokens
+        pg = self.page
+        cut = pages - node.start_page
+        m_key = node.page_keys[cut - 1]
+        m_fp = fingerprint(tok[node.start_page * pg], tok[pages * pg - 1])
+        x_fp = fingerprint(tok[pages * pg], tok[node.end_page * pg - 1])
+        # M fields
+        r.write_word(m_rec, pp.encode(m_rec, x_rec))
+        r.write_word(m_rec + 1, pp.PPTR_NULL if par is None
+                     else pp.encode(m_rec + 1, par))
+        m_span_word = pp.encode(m_rec + 3, node.span)
+        r.write_word(m_rec + 3, m_span_word)
+        r.write_word(m_rec + 4, pages)
+        r.write_word(m_rec + 5, node.start_page)
+        r.write_word(m_rec + 6, m_lease)
+        r.write_word(m_rec + 7, m_fp)
+        # X' fields
+        r.write_word(x_rec, pp.PPTR_NULL if old_next is None
+                     else pp.encode(x_rec, old_next))
+        r.write_word(x_rec + 1, pp.encode(x_rec + 1, m_rec))
+        x_span_word = pp.encode(x_rec + 3, node.span)
+        r.write_word(x_rec + 3, x_span_word)
+        r.write_word(x_rec + 4, node.end_page)
+        r.write_word(x_rec + 5, pages)
+        r.write_word(x_rec + 6, node.lease_sbs)
+        r.write_word(x_rec + 7, x_fp)
+        if not is_suppressed("prefix_trie.commit.fields_persist"):
+            r.flush_range(m_rec, REC_WORDS)
+            r.flush_range(x_rec, REC_WORDS)
+            r.fence()              # both halves' fields: ONE fence
+        r.mem.note("trie_seal", records=[m_rec, x_rec])
+        m_ck = _record_checksum(m_span_word, pages, node.start_page,
+                                m_lease, m_fp, m_key)
+        x_ck = _record_checksum(x_span_word, node.end_page, pages,
+                                node.lease_sbs, x_fp, node.key)
+        r.write_word(m_rec + 2, m_key | (m_ck << 48))
+        r.write_word(x_rec + 2, node.key | (x_ck << 48))
+        if not is_suppressed("prefix_trie.commit.records_persist"):
+            r.flush_range(m_rec + 2, 1)
+            r.flush_range(x_rec + 2, 1)
+            r.fence()              # both seals: ONE fence
+        r.mem.note("trie_split_relink", records=[m_rec, x_rec], old=old,
+                   slot=self.slot)
+        # the ONE relink write replacing X with the pair
+        prev = self._chain_pred(old)
+        if prev is None:
+            r.set_root(self.slot, m_rec, TYPENAME)
+        else:
+            r.write_word(prev, pp.encode(prev, m_rec))
+            if not is_suppressed("prefix_trie.commit.relink_persist"):
+                r.flush_range(prev, 1)
+                r.fence()
+        # X's children re-parent to X' — durable before X's block can be
+        # freed and reused (a reused block under a stale parent pointer
+        # would corrupt the recovered tree's shape)
+        child_ptrs = [c.ptr for c in node.children if c.ptr >= 0]
+        for cp in child_ptrs:
+            r.write_word(cp + 1, pp.encode(cp + 1, x_rec))
+        if child_ptrs and not is_suppressed(
+                "prefix_trie.split.reparent_persist"):
+            for cp in child_ptrs:
+                r.flush_range(cp + 1, 1)
+            r.fence()
+        r.mem.note("trie_old_free", old=old, new=x_rec,
+                   children=list(child_ptrs), slot=self.slot)
+        r.mem.note("lease_release", record=old, slot=self.slot)
+        r.span_release(node.span, node.lease_sbs)
+        r.free(old)
+        # transient restructure: node becomes X', M takes its place
+        m = TrieNode(
+            ptr=m_rec, key=m_key, span=node.span,
+            start_page=node.start_page, end_page=pages, lease_sbs=m_lease,
+            first_tok=int(tok[node.start_page * pg]) & _M32,
+            last_tok=int(tok[pages * pg - 1]) & 0xFFFF,
+            parent=node.parent, tokens=tok[:pages * pg],
+            page_keys=node.page_keys[:cut])
+        sibs = (self.roots if node.parent is None else node.parent.children)
+        sibs[sibs.index(node)] = m
+        del self._by_ptr[old]
+        node.ptr = x_rec
+        node.start_page = pages
+        node.first_tok = int(tok[pages * pg]) & _M32
+        node.page_keys = node.page_keys[cut:]
+        node.parent = m
+        m.children.append(node)
+        self._by_ptr[m_rec] = m
+        self._by_ptr[x_rec] = node
+        return m
+
+    def remove(self, node: TrieNode) -> bool:
+        """Evict a leaf: durable unlink strictly before the lease drops,
+        then the block frees.  Interior nodes refuse (their children's
+        ancestry would become unservable)."""
+        if node.children:
+            raise ValueError("remove: node has children (leaves only)")
+        r = self.r
+        if node.ptr < 0 or node.ptr not in self._by_ptr:
+            return False
+        nxt = pp.decode(node.ptr, r.read_word(node.ptr))
+        prev = self._chain_pred(node.ptr)
+        if prev is None:
+            r.set_root(self.slot, nxt, TYPENAME)
+        else:
+            r.write_word(prev, pp.PPTR_NULL if nxt is None
+                         else pp.encode(prev, nxt))
+            if not is_suppressed("prefix_trie.remove.unlink_persist"):
+                r.flush_range(prev, 1)
+                r.fence()
+        r.mem.note("lease_release", record=node.ptr, slot=self.slot)
+        r.span_release(node.span, node.lease_sbs)
+        r.free(node.ptr)
+        del self._by_ptr[node.ptr]
+        sibs = (self.roots if node.parent is None else node.parent.children)
+        sibs.remove(node)
+        node.ptr = -1
+        return True
+
+    def clear(self) -> int:
+        """Remove every node, leaves inward; returns the count."""
+        n = 0
+        while True:
+            leaves = [nd for nd in self.nodes() if not nd.children]
+            if not leaves:
+                return n
+            for leaf in leaves:
+                self.remove(leaf)
+                n += 1
+
+    # -------------------------------------------------------------- plumbing
+    def _chain_pred(self, target: int) -> int | None:
+        """Durable-chain predecessor of record ``target`` (None = head)."""
+        r = self.r
+        prev = None
+        rec = r.heap.get_root(self.slot)
+        seen: set[int] = set()
+        while rec is not None and rec not in seen:
+            if rec == target:
+                return prev
+            seen.add(rec)
+            prev, rec = rec, pp.decode(rec, r.read_word(rec))
+        raise ValueError(f"record {target} not on the chain")
+
+    def _rebuild(self) -> None:
+        """Transient tree from the durable records (post-recovery or
+        fresh attach).  ``prune_torn_nodes`` has already repaired parent
+        pointers durably; the coverage fallback here is defense in
+        depth.  Recovered nodes carry no tokens/page keys."""
+        self.roots = []
+        self._by_ptr = {}
+        recs = list(iter_nodes(self.r, self.slot))
+        nodes: dict[int, TrieNode] = {}
+        for rec in recs:
+            nodes[rec.ptr] = TrieNode(
+                ptr=rec.ptr, key=rec.key, span=rec.span,
+                start_page=rec.start_page, end_page=rec.end_page,
+                lease_sbs=rec.lease_sbs,
+                first_tok=int(rec.fprint) & _M32,
+                last_tok=(int(rec.fprint) >> 32) & 0xFFFF)
+        by_rec = {rec.ptr: rec for rec in recs}
+        for rec in recs:
+            nd = nodes[rec.ptr]
+            par = rec.parent
+            if (par is not None and par in nodes and par != rec.ptr
+                    and by_rec[par].end_page == rec.start_page):
+                nd.parent = nodes[par]
+            elif rec.start_page > 0:
+                cover = next((p for p, q in by_rec.items()
+                              if q.end_page == rec.start_page
+                              and p != rec.ptr), None)
+                nd.parent = nodes[cover] if cover is not None else None
+                if nd.parent is None:
+                    continue           # unservable orphan: not attached
+            if nd.parent is None:
+                self.roots.append(nd)
+            else:
+                nd.parent.children.append(nd)
+            self._by_ptr[rec.ptr] = nd

@@ -150,6 +150,17 @@ def recover(r) -> dict:
         for slot in index_slots:
             index_pruned += prune_torn_records(r, slot)
 
+    # same step for prefix-trie roots, plus the recoverability criterion:
+    # children of pruned nodes are durably re-parented to a surviving
+    # covering node or dropped with their subtrees (core.prefix_trie).
+    trie_slots = sorted(i for i, t in r._root_filters.items()
+                        if t == "prefix_trie")
+    trie_pruned = 0
+    if trie_slots:
+        from .prefix_trie import prune_torn_nodes
+        for slot in trie_slots:
+            trie_pruned += prune_torn_nodes(r, slot)
+
     # step 5: mark (+ span-refcount reconstruction, same pass)
     span_refs: dict[int, int] = {}
     visited = trace(r, span_refs)
@@ -239,6 +250,13 @@ def recover(r) -> dict:
             n, k = retrim_after_recovery(r, slot)
             index_records += n
             index_retrims += k
+    trie_records = trie_retrims = 0
+    if trie_slots:
+        from .prefix_trie import retrim_after_recovery as trie_retrim
+        for slot in trie_slots:
+            n, k = trie_retrim(r, slot)
+            trie_records += n
+            trie_retrims += k
 
     # step 10: write back all three regions, fence
     m.drain()
@@ -251,6 +269,9 @@ def recover(r) -> dict:
         "index_records": index_records,
         "index_retrims": index_retrims,
         "index_pruned": index_pruned,
+        "trie_records": trie_records,
+        "trie_retrims": trie_retrims,
+        "trie_pruned": trie_pruned,
         "partial_superblocks": n_partial,
         "full_superblocks": n_full,
         "large_blocks": len(large_heads),

@@ -41,11 +41,12 @@ import numpy as np
 from ..core import jax_alloc as ja
 from ..core import jax_recovery as jr
 from ..core.prefix_index import hash_tokens
+from ..core.prefix_trie import fingerprint, page_hashes
 from ..models.config import ModelConfig
 from . import decode as dec
 from .lane_state import LaneStates, Session, reset_lane
-from .prefix_cache import PrefixCache
 from .prefix_store import PrefixStore
+from .prefix_trie_cache import CacheNode, PrefixTrieCache
 from .scheduler import EngineBusy, PendingPublish
 
 __all__ = ["ServingEngine", "Session", "EngineBusy", "PAGE_CLS"]
@@ -93,9 +94,12 @@ class ServingEngine:
         self.dstate = dec.make_dstate(cfg, batch=lanes, max_seq=max_seq,
                                       pages_per_shard=int(num_sbs
                                                           * pages_per_sb) + 1)
-        # prefix sharing (RadixAttention-style) — transient entries,
-        # page refcounts and exact-token collision guard
-        self.prefix_cache = PrefixCache()
+        # prefix sharing (RadixAttention-style) — the trie cache keeps
+        # the flat exact-match dict API (entries / tokens / page_refs /
+        # lookup) and adds longest-prefix-match over published prompts:
+        # a request matching k pages of a longer prompt leases only
+        # those k pages' superblocks (serving.prefix_trie_cache)
+        self.prefix_cache = PrefixTrieCache(page=cfg.page_size)
         # durable prefix index: span-path entries additionally own one
         # record block reachable from roots[_index_root], which is what
         # lets crash_and_recover re-publish them instead of re-prefilling
@@ -167,7 +171,27 @@ class ServingEngine:
         n_prompt_pages = min(-(-len(prompt) // self.cfg.page_size),
                              table_width)
         hit = self.prefix_cache.lookup(prompt) if share_prefix else None
-        if (self.cfg.attn_layers > 0 and hit is None
+        # longest-prefix match when the exact entry misses: a request
+        # matching k whole pages of a published prompt leases only those
+        # k pages' superblocks and decodes its suffix on its own lazily-
+        # allocated pages.  A mid-edge match first materializes the
+        # boundary as a trie split (durable when the node has a record).
+        pnode, pk = None, 0
+        if share_prefix and hit is None and self.cfg.attn_layers > 0:
+            pnode, pk = self.prefix_cache.match_partial(prompt)
+            if pnode is not None and pk * self.cfg.page_size >= len(prompt):
+                pnode, pk = None, 0    # no suffix left: only the exact
+                #                        entry may serve the whole prompt
+            elif pnode is not None and pk < pnode.end_page:
+                m = self._split_node(pnode, pk)
+                if m is None:          # no record blocks: fall back to
+                    #                    the deepest existing boundary
+                    pnode, pk = self.prefix_cache.deepest_boundary(pnode, pk)
+                else:
+                    pnode = m
+            if pnode is None:
+                pk = 0
+        if (self.cfg.attn_layers > 0 and hit is None and pnode is None
                 and n_prompt_pages > self.acfg.sb_words):
             n_ahead = min(-(-self.max_seq // self.cfg.page_size), table_width)
             try:
@@ -212,6 +236,30 @@ class ServingEngine:
             # sampled by the publisher — it is part of the prefix
             self.sessions[lane].tokens = list(prompt) + [next_tok]
             self.cur_tokens[lane] = next_tok
+        elif pnode is not None and pk > 0:
+            # partial hit at a trie-node boundary: the node's span backs
+            # the whole prefix [0, pk) at identity offsets, so ONE
+            # acquire_span of the node's lease (= exactly the matched
+            # pages' superblocks) makes this an ordinary shared-span
+            # lane; the un-matched prompt suffix replays teacher-forced
+            # on the lane's own lazily-allocated pages
+            off, lease_sbs = pnode.span, pnode.lease_sbs
+            self.astate, _ = self._acquire_span(
+                state=self.astate, off=jnp.int32(off),
+                n_sbs=jnp.int32(lease_sbs))
+            self.shared_spans[lane] = (off, pk, lease_sbs)
+            self.lane_states.partial_hits[lane] = pk
+            pages = off + np.arange(pk, dtype=np.int32)
+            bt = np.asarray(self.dstate["block_table"]).copy()
+            bt[lane, :pk] = pages
+            self.dstate["block_table"] = jnp.asarray(bt)
+            kv = np.asarray(self.dstate["kv_pos"]).copy()
+            page = self.cfg.page_size
+            kv[lane, :pk] = np.arange(pk * page,
+                                      dtype=np.int32).reshape(pk, page)
+            self.dstate["kv_pos"] = jnp.asarray(kv)
+            self.dstate["pos"] = self.dstate["pos"].at[lane].set(pk * page)
+            self.cur_tokens[lane] = prompt[pk * page]
         # the allocator root for this lane points at its page table
         self.astate = ja.set_root(self.astate, lane, jnp.int32(lane))
         return lane
@@ -250,6 +298,108 @@ class ServingEngine:
                                         need=jnp.asarray(need))
         return [int(o) for o in
                 np.asarray(offs)[self.lanes:self.lanes + n]]
+
+    def _split_node(self, node: CacheNode, k: int) -> CacheNode | None:
+        """Materialize page boundary ``k`` inside in-process trie node
+        ``node`` (X ``[s, e)`` → M ``[s, k)`` + X' ``[k, e)``, same
+        span).  Returns M, or None when the arena cannot place the two
+        record blocks a durable split needs (nothing changes then — the
+        caller serves the deepest existing boundary instead).
+
+        Device mirror of ``core.prefix_trie.PrefixTrie.split``, ordering
+        included: both new records land (``PrefixStore.split`` splices
+        them into X's chain position), children re-parent, and only then
+        does the old record's lease drop and its block free.  Leases
+        stay record ⇔ lease 1:1: M's new lease and X''s replacement are
+        acquired up front, X's old lease releases at the end.  A node
+        still parked in the publish queue has no record yet: its queue
+        entry is replaced by two pending publishes and the split stays
+        transient until the next flush."""
+        if node.page_keys is None or node.tokens is None:
+            return None                # recovered node: no page keys
+        m_rec = x_rec = -1
+        if node.rec_off >= 0:
+            m_rec, x_rec = self._alloc_blocks(2)
+            if m_rec < 0 or x_rec < 0:
+                live = np.full((self.acfg.cache_cap,), -1, np.int32)
+                live[:2] = (m_rec, x_rec)
+                if (live >= 0).any():
+                    self.astate = self._free(state=self.astate,
+                                             offs=jnp.asarray(live),
+                                             mask=jnp.asarray(live >= 0))
+                return None
+        m_lease = -(-k // self.acfg.sb_words)
+        old_key, old_lease = node.key, node.lease_sbs
+        old_rec = node.rec_off
+        self.astate, _ = self._acquire_span(
+            state=self.astate, off=jnp.int32(node.span),
+            n_sbs=jnp.int32(m_lease))
+        self.astate, _ = self._acquire_span(
+            state=self.astate, off=jnp.int32(node.span),
+            n_sbs=jnp.int32(node.lease_sbs))
+        old_entry = self._prefix_cache.get(old_key)
+        span_pages = old_entry[2] if old_entry is not None else node.end_page
+        m = self.prefix_cache.split_transient(node, k)
+        m.lease_sbs = m_lease
+        m.rec_off = m_rec
+        page = self.cfg.page_size
+        kvp = np.arange(k * page, dtype=np.int32).reshape(k, page)
+        self.prefix_cache.insert(
+            m.key,
+            ("span", node.span, span_pages, k, k * page, kvp, m.next_tok,
+             m_lease),
+            tokens=m.tokens)
+        if old_rec >= 0:
+            par = (self.prefix_cache.nodes[m.parent].rec_off
+                   if m.parent >= 0 and m.parent in self.prefix_cache.nodes
+                   else -1)
+            self.prefix_store.split(
+                old_rec,
+                dict(rec_off=m_rec, key=m.key, span=node.span, n_pages=k,
+                     span_pages=span_pages, next_tok=m.next_tok,
+                     lease_sbs=m_lease, parent=par, start_page=m.start_page,
+                     fprint=m.fprint),
+                dict(rec_off=x_rec, key=node.key, span=node.span,
+                     n_pages=node.end_page, span_pages=span_pages,
+                     next_tok=node.next_tok, lease_sbs=node.lease_sbs,
+                     parent=m_rec, start_page=k, fprint=node.fprint))
+            node.rec_off = x_rec
+            for ck in node.children:
+                child = self.prefix_cache.nodes.get(ck)
+                if child is not None and child.rec_off >= 0:
+                    self.prefix_store.reparent(child.rec_off, x_rec)
+            self.astate = ja.set_root(self.astate, self._index_root,
+                                      jnp.int32(self.prefix_store.head))
+        else:
+            # queued-only node: swap its parked publish for the pair (M
+            # first — flush resolves X''s parent_key through it)
+            for i, p in enumerate(self._publish_queue):
+                if p.key == old_key:
+                    self._publish_queue[i:i + 1] = [
+                        PendingPublish(
+                            key=m.key, span=node.span, n_pages=k,
+                            span_pages=span_pages, next_tok=m.next_tok,
+                            lease_sbs=m_lease, start_page=m.start_page,
+                            parent_key=m.parent, fprint=m.fprint),
+                        PendingPublish(
+                            key=node.key, span=node.span,
+                            n_pages=node.end_page, span_pages=span_pages,
+                            next_tok=node.next_tok,
+                            lease_sbs=node.lease_sbs, start_page=k,
+                            parent_key=m.key, fprint=node.fprint)]
+                    break
+        # old record's lease drops last (a linked record always implied
+        # a live span); its block frees after the relink, never before
+        self.astate = self._free_large(state=self.astate,
+                                       off=jnp.int32(node.span),
+                                       n_sbs=jnp.int32(old_lease))
+        if old_rec >= 0:
+            offs = np.full((self.acfg.cache_cap,), -1, np.int32)
+            offs[0] = old_rec
+            self.astate = self._free(state=self.astate,
+                                     offs=jnp.asarray(offs),
+                                     mask=jnp.asarray(offs >= 0))
+        return m
 
     # -------------------------------------------------------------- publish
     def queue_publish(self, lane: int) -> bool:
@@ -318,6 +468,29 @@ class ServingEngine:
                 ("span", off, n_span, full, full * page, kv[:full].copy(),
                  next_tok, lease_sbs),
                 tokens=s.tokens[:full * page])
+            # attach the prefix into the trie: the deepest existing
+            # boundary becomes the parent (a mid-edge match materializes
+            # it as a split first); the new node's edge covers [k, full)
+            # but its span still backs the whole [0, full) prefix.
+            # k < full always: a boundary AT full would mean this exact
+            # prefix is already published, caught by the dedupe above.
+            toks = tuple(int(t) for t in s.tokens[:full * page])
+            parent, k = self.prefix_cache.match_partial(toks)
+            if parent is not None and k < parent.end_page:
+                m = self._split_node(parent, k)
+                if m is None:
+                    parent, k = self.prefix_cache.deepest_boundary(parent, k)
+                else:
+                    parent = m
+            if parent is None:
+                k = 0
+            node = CacheNode(
+                key=key, span=off, start_page=k, end_page=full,
+                lease_sbs=lease_sbs, next_tok=next_tok,
+                fprint=fingerprint(toks[k * page], toks[full * page - 1]),
+                parent=(parent.key if parent is not None else -1),
+                tokens=toks, page_keys=page_hashes(toks, page)[k:])
+            self.prefix_cache.insert_node(node)
             # the durable index record (one ordinary arena block) parks in
             # the group-commit queue: flush_publishes appends the whole
             # batch behind a single root swing, mirroring the host
@@ -326,7 +499,8 @@ class ServingEngine:
             # so the prefix is hittable without re-prefill.
             self._publish_queue.append(PendingPublish(
                 key=key, span=off, n_pages=full, span_pages=n_span,
-                next_tok=next_tok, lease_sbs=lease_sbs))
+                next_tok=next_tok, lease_sbs=lease_sbs,
+                start_page=k, parent_key=node.parent, fprint=node.fprint))
             return True
         bt = np.asarray(self.dstate["block_table"][lane])
         if pos != full * page:
@@ -361,15 +535,35 @@ class ServingEngine:
             batch = self._publish_queue[:self.publish_capacity]
             del self._publish_queue[:len(batch)]
             recs = self._alloc_blocks(len(batch))
-            payloads = [dict(rec_off=rec, key=p.key, span=p.span,
-                             n_pages=p.n_pages, span_pages=p.span_pages,
-                             next_tok=p.next_tok, lease_sbs=p.lease_sbs)
-                        for rec, p in zip(recs, batch) if rec >= 0]
+            rec_of: dict[int, int] = {}     # key -> record landed this batch
+            payloads = []
+            for rec, p in zip(recs, batch):
+                if rec < 0:
+                    continue
+                # parent record offset resolves NOW: the parent either
+                # landed earlier in this very batch (queued splits put M
+                # before X') or already owns a record from a prior flush;
+                # a parent that missed its block degrades to -1 and the
+                # recovery coverage pass re-links by page boundary
+                par = -1
+                if p.parent_key >= 0:
+                    par = rec_of.get(p.parent_key, -1)
+                    if par < 0:
+                        pn = self.prefix_cache.nodes.get(p.parent_key)
+                        par = pn.rec_off if pn is not None else -1
+                payloads.append(dict(
+                    rec_off=rec, key=p.key, span=p.span,
+                    n_pages=p.n_pages, span_pages=p.span_pages,
+                    next_tok=p.next_tok, lease_sbs=p.lease_sbs,
+                    parent=par, start_page=p.start_page, fprint=p.fprint))
+                rec_of[p.key] = rec
             if payloads:
                 self.prefix_store.append_batch(payloads)
                 self.astate = ja.set_root(
                     self.astate, self._index_root,
                     jnp.int32(self.prefix_store.head))
+                for q in payloads:
+                    self.prefix_cache.set_rec(q["key"], q["rec_off"])
                 appended += len(payloads)
         return appended
 
@@ -490,6 +684,7 @@ class ServingEngine:
         pages = bt[bt >= 0].astype(np.int32)
         span = self.large_spans.pop(lane, None)
         shared = self.shared_spans.pop(lane, None)
+        self.lane_states.partial_hits.pop(lane, None)
         if span is not None:
             # the prompt's page table is one large span: free_large drops
             # the owner's full-extent lease — superblocks nobody else
@@ -585,6 +780,47 @@ class ServingEngine:
         superblock count, so the decode-ahead tail frees immediately
         after recovery instead of waiting for the reserver to
         re-finish."""
+        # torn / unrecoverable-orphan pre-prune, BEFORE the mark pass
+        # (host ordering: prune_torn_nodes runs before recover's trace).
+        # A torn record's span reference would otherwise phantom-lease
+        # the span, and its marked block would leak as owned-by-nobody.
+        recs0 = self.prefix_store.walk()
+        trie_pruned = 0
+        if recs0:
+            by_off = {r.off: r for r in recs0}
+            keep = {r.off for r in recs0
+                    if self.prefix_store.seal_matches(r.off)}
+            # recoverability: a node is servable iff kept records cover
+            # [0, start_page) contiguously — fixpoint from boundary 0
+            bounds, grew = {0}, True
+            while grew:
+                grew = False
+                for off in keep:
+                    r = by_off[off]
+                    if r.start_page in bounds and r.n_pages not in bounds:
+                        bounds.add(r.n_pages)
+                        grew = True
+            keep = {off for off in keep
+                    if by_off[off].start_page in bounds}
+            if len(keep) < len(recs0):
+                self.prefix_store.prune(
+                    np.asarray([r.off in keep for r in recs0], bool))
+                trie_pruned = len(recs0) - len(keep)
+            # survivors with dangling parents re-parent to ANY kept
+            # record ending at their start page (navigation is by
+            # cumulative hash — the parent field is only trie shape)
+            for r in self.prefix_store.walk():
+                if r.start_page == 0:
+                    if r.parent != -1:
+                        self.prefix_store.reparent(r.off, -1)
+                    continue
+                if (r.parent in keep and r.parent != r.off
+                        and by_off[r.parent].n_pages == r.start_page):
+                    continue
+                cover = next((o for o in keep if o != r.off
+                              and by_off[o].n_pages == r.start_page), None)
+                self.prefix_store.reparent(
+                    r.off, cover if cover is not None else -1)
         persistent = ja.persistent_snapshot(self.astate)
         roots = np.full((self.lanes + 1,), -1, np.int32)
         bt = np.asarray(self.dstate["block_table"])
@@ -631,9 +867,12 @@ class ServingEngine:
         # became durable is unmarked — pruned, exactly like the host GC
         # frees an unreachable core.prefix_index record)
         recs = self.prefix_store.walk()
+        seal_ok = np.asarray([self.prefix_store.seal_matches(r.off)
+                              for r in recs] + [True], bool)
         live = jr.live_record_mask(self.acfg, marked,
                                    np.asarray([r.off for r in recs]
-                                              + [-1], np.int32))
+                                              + [-1], np.int32),
+                                   seal_ok=jnp.asarray(seal_ok))
         survivors = self.prefix_store.prune(np.asarray(live)[:len(recs)])
         page = self.cfg.page_size
         for rec in survivors:
@@ -649,6 +888,10 @@ class ServingEngine:
                 n_keep=jnp.int32(rec.lease_sbs), n_held=jnp.int32(-1))
         self.astate = ja.set_root(self.astate, self._index_root,
                                   jnp.int32(self.prefix_store.head))
+        # rebuild the trie shape from the surviving records (token-less
+        # nodes: they match all-or-nothing, key + fingerprint) so
+        # longest-prefix partial hits work immediately after recovery
+        self.prefix_cache.rebuild_from_records(survivors)
         # live sharers' prefix leases were also rebuilt full-extent;
         # their true lengths survive in shared_spans — re-trim them too,
         # so the post-recovery lease vector equals the pre-crash one
@@ -659,4 +902,5 @@ class ServingEngine:
                     n_keep=jnp.int32(lease_sbs), n_held=jnp.int32(-1))
         return {"marked": int(np.asarray(marked).sum()),
                 "live_before": live_before, "live_after": live_after,
-                "index_records": len(survivors)}
+                "index_records": len(survivors),
+                "trie_pruned": trie_pruned}

@@ -34,9 +34,17 @@ class LaneStates:
     covers) free right then, not at the last holder's exit.
 
     ``shared_spans``: lanes that *acquired* a prefix lease on another
-    lane's published span (shared-prefix hits): lane ->
-    (off, n_backed_pages, lease_sbs); finish releases exactly that
-    prefix range.
+    lane's published span (shared-prefix hits — exact whole-prompt hits
+    AND longest-prefix partial hits alike; a partial hit leases the
+    matched trie node's span prefix and decodes its suffix on its own
+    lazily-allocated pages): lane -> (off, n_backed_pages, lease_sbs);
+    finish releases exactly that prefix range.
+
+    ``partial_hits``: the subset of shared-span lanes admitted through a
+    *partial* (longest-prefix) trie match: lane -> matched whole pages.
+    Pure observability — the span bookkeeping above is authoritative for
+    every release path — but it is what the hierprompt benchmark and the
+    trie serving tests read to assert O(suffix) footprints.
     """
 
     def __init__(self, lanes: int):
@@ -45,6 +53,7 @@ class LaneStates:
         self.free_lanes: list[int] = list(range(lanes))
         self.large_spans: dict[int, tuple[int, int]] = {}
         self.shared_spans: dict[int, tuple[int, int, int]] = {}
+        self.partial_hits: dict[int, int] = {}
         self.cur_tokens = np.zeros((lanes,), np.int32)
 
     def acquire(self) -> int | None:

@@ -38,16 +38,25 @@ class PendingPublish:
     """One span-path publication parked in the group-commit queue.
 
     The transient half already happened at queue time — cache entry
-    inserted, prefix lease acquired — so sharers can hit immediately;
-    only the durable record append waits for the batch flush, exactly
-    like ``PrefixIndex.publish_batch`` chains records behind one fence
-    and one root swing."""
+    inserted, trie node attached, prefix lease acquired — so sharers can
+    hit immediately; only the durable record append waits for the batch
+    flush, exactly like ``PrefixTrie._commit_new`` chains records behind
+    one fence and one root swing.
+
+    The trie fields (``start_page`` / ``parent_key`` / ``fprint``)
+    default to the flat depth-1 shape: the node covers ``[0, n_pages)``
+    under the root.  ``parent_key`` is the parent *node key* — the
+    record offset is resolved at flush time (the parent may itself still
+    be parked earlier in the queue)."""
     key: int
     span: int
     n_pages: int
     span_pages: int
     next_tok: int
     lease_sbs: int
+    start_page: int = 0
+    parent_key: int = -1
+    fprint: int = 0
 
 
 @dataclasses.dataclass

@@ -243,6 +243,95 @@ def test_mutation_remove_batch_unlink_persist():
 
 
 # ---------------------------------------------------------------------------
+# prefix trie (core.prefix_trie): every structural fence has teeth
+# ---------------------------------------------------------------------------
+def _trie_heap(seed):
+    from repro.core.prefix_trie import PrefixTrie
+    r, tr = _heap(seed)
+    return r, tr, PrefixTrie(r, page=4, sb_pages=1)
+
+
+def _pages(n, start=0):
+    return list(range(start * 1000, start * 1000 + n * 4))
+
+
+def test_unmutated_trie_scenario_is_clean():
+    r, tr, trie = _trie_heap(41)
+    a = _pages(6)
+    trie.insert(a, r.malloc(6 * SB_SIZE - 256))          # insert commit
+    b = a[:16] + _pages(3, start=7)                      # shares 4 pages
+    trie.insert(b, r.malloc(7 * SB_SIZE - 256))          # split + insert
+    leaf = next(n for n in trie.nodes()
+                if not n.children and n.ptr != r.heap.get_root(trie.slot))
+    trie.remove(leaf)                                    # mid-chain unlink
+    rep, fired = _rules_fired(r, tr)
+    assert rep.ok, rep
+    assert fired == set()
+
+
+def test_mutation_trie_fields_persist():
+    r, tr, trie = _trie_heap(42)
+    with faults.suppress("prefix_trie.commit.fields_persist"):
+        trie.insert(_pages(3), r.malloc(3 * SB_SIZE - 256))
+    rep, fired = _rules_fired(r, tr)
+    assert not rep.ok
+    assert "trie-fields-durable-before-seal" in fired, rep
+
+
+def test_mutation_trie_records_persist():
+    r, tr, trie = _trie_heap(43)
+    with faults.suppress("prefix_trie.commit.records_persist"):
+        trie.insert(_pages(3), r.malloc(3 * SB_SIZE - 256))
+    rep, fired = _rules_fired(r, tr)
+    assert not rep.ok
+    assert "trie-record-durable-before-root-swing" in fired, rep
+
+
+def test_mutation_trie_relink_persist():
+    # the split victim must NOT be the chain head: a head split relinks
+    # through set_root (its own internal durable site) and the
+    # predecessor-rewrite fence under test is never reached
+    r, tr, trie = _trie_heap(44)
+    a = _pages(6)
+    trie.insert(a, r.malloc(6 * SB_SIZE - 256))
+    trie.insert(_pages(3, start=5), r.malloc(3 * SB_SIZE - 256))
+    c = a[:16] + _pages(3, start=9)              # mid-edge: splits A at 4
+    with faults.suppress("prefix_trie.commit.relink_persist"):
+        trie.insert(c, r.malloc(7 * SB_SIZE - 256))
+    rep, fired = _rules_fired(r, tr)
+    assert not rep.ok
+    assert "unlink-durable-before-lease-release" in fired, rep
+
+
+def test_mutation_trie_reparent_persist():
+    r, tr, trie = _trie_heap(45)
+    a = _pages(6)
+    trie.insert(a, r.malloc(6 * SB_SIZE - 256))
+    d = a + _pages(2, start=5)                   # child of A at page 6
+    trie.insert(d, r.malloc(8 * SB_SIZE - 256))
+    c = a[:16] + _pages(3, start=9)              # splits A at 4 → D reparents
+    with faults.suppress("prefix_trie.split.reparent_persist"):
+        trie.insert(c, r.malloc(7 * SB_SIZE - 256))
+    rep, fired = _rules_fired(r, tr)
+    assert not rep.ok
+    assert "trie-reparent-durable-before-old-free" in fired, rep
+
+
+def test_mutation_trie_remove_unlink_persist():
+    r, tr, trie = _trie_heap(46)
+    trie.insert(_pages(3), r.malloc(3 * SB_SIZE - 256))
+    trie.insert(_pages(3, start=5), r.malloc(3 * SB_SIZE - 256))
+    # a mid-chain leaf: the head's unlink would go through set_root
+    leaf = next(n for n in trie.nodes()
+                if not n.children and n.ptr != r.heap.get_root(trie.slot))
+    with faults.suppress("prefix_trie.remove.unlink_persist"):
+        trie.remove(leaf)
+    rep, fired = _rules_fired(r, tr)
+    assert not rep.ok
+    assert "unlink-durable-before-lease-release" in fired, rep
+
+
+# ---------------------------------------------------------------------------
 # the wiring has teeth too: a suppressed site makes the crash harness fail
 # ---------------------------------------------------------------------------
 def test_crash_harness_detects_suppressed_site():

@@ -1,0 +1,200 @@
+"""Engine-level prefix-trie serving: longest-prefix partial hits, durable
+splits, device record seals, and crash recovery with zero re-prefill.
+
+The acceptance bar (ISSUE PR 8): a request matching k pages of a longer
+published prompt leases only those k pages' superblocks; a crash over a
+populated trie re-publishes every surviving node and the post-recovery
+lease vector equals the pre-crash trimmed one; a record with ONE torn
+sidecar word is pruned (with its unservable descendants) instead of
+re-leasing its span.
+"""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core import jax_alloc as ja
+from repro.core import jax_recovery as jr
+from repro.models import transformer as T
+from repro.runtime import make_host_mesh
+from repro.serving.engine import ServingEngine
+from repro.serving.prefix_store import F_KEY, F_SEAL, _SEALED
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return make_host_mesh()
+
+
+def _engine(mesh, lanes=3, pages_per_sb=2, max_seq=64):
+    cfg = dataclasses.replace(get_smoke_config("qwen2_5_32b"), page_size=8)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, ServingEngine(cfg, mesh, params, lanes=lanes,
+                              max_seq=max_seq, pages_per_sb=pages_per_sb)
+
+
+def _publish_owner(cfg, eng, prompt):
+    lane = eng.add_request(prompt, share_prefix=True)
+    for _ in range(len(prompt)):
+        eng.step()
+    eng.publish_prefix(lane)
+    return lane
+
+
+def test_partial_hit_leases_only_matched_superblocks(mesh):
+    cfg, eng = _engine(mesh)
+    rng = np.random.default_rng(3)
+    prompt = [int(t) for t in rng.integers(1, cfg.vocab_size, size=40)]
+    a = _publish_owner(cfg, eng, prompt)
+    off, n_span = eng.large_spans[a]
+    full = len(prompt) // cfg.page_size                  # 5 pages
+    assert len(eng.prefix_cache.nodes) == 1
+
+    # B shares 2 of 5 pages: mid-edge match → durable split → B leases
+    # ONLY ceil(2 pages / sb) superblocks, not the prefix's 3
+    p2 = prompt[:16] + [int(t)
+                        for t in rng.integers(1, cfg.vocab_size, size=20)]
+    b = eng.add_request(p2, share_prefix=True)
+    m_lease = -(-2 // eng.acfg.sb_words)
+    assert eng.shared_spans[b] == (off, 2, m_lease)
+    assert eng.lane_states.partial_hits[b] == 2
+    assert b not in eng.large_spans                      # no reservation
+    # the split is durable: M [0,2) + X' [2,5), both with records
+    shapes = sorted((n.start_page, n.end_page, n.lease_sbs)
+                    for n in eng.prefix_cache.nodes.values())
+    full_lease = -(-full // eng.acfg.sb_words)
+    assert shapes == [(0, 2, m_lease), (2, 5, full_lease)]
+    assert all(n.rec_off >= 0 for n in eng.prefix_cache.nodes.values())
+    assert len(eng.prefix_store.walk()) == 2
+    # the matched pages serve from the span; pos starts past them
+    bt_b = np.asarray(eng.dstate["block_table"][b])
+    assert bt_b[:2].tolist() == [off, off + 1]
+    assert int(np.asarray(eng.dstate["pos"][b])) == 2 * cfg.page_size
+
+    # suffix replays teacher-forced on B's OWN lazily-allocated pages,
+    # never inside the still-leased prefix superblocks
+    for _ in range(len(p2) - 2 * cfg.page_size + 4):
+        eng.step()
+    assert eng.sessions[b].tokens[:len(p2)] == p2
+    bt_b = np.asarray(eng.dstate["block_table"][b])
+    own = bt_b[bt_b >= 0][2:]
+    leased = full_lease * eng.acfg.sb_words
+    assert own.size
+    assert not set(own.tolist()) & set(range(off, off + leased))
+    # per-request footprint: O(matched prefix) sbs leased, not O(prompt)
+    assert m_lease < full_lease
+
+
+def test_trie_publish_attaches_children_and_survives_crash(mesh):
+    cfg, eng = _engine(mesh)
+    rng = np.random.default_rng(5)
+    prompt = [int(t) for t in rng.integers(1, cfg.vocab_size, size=40)]
+    a = _publish_owner(cfg, eng, prompt)
+    off, _ = eng.large_spans[a]
+    full = len(prompt) // cfg.page_size
+
+    # partial sharer forces the durable split M [0,2) + X' [2,5)
+    p2 = prompt[:16] + [int(t)
+                        for t in rng.integers(1, cfg.vocab_size, size=20)]
+    b = eng.add_request(p2, share_prefix=True)
+    # a NEW span owner extending A attaches as a child of X' at page 5
+    pe = prompt + [int(t) for t in rng.integers(1, cfg.vocab_size, size=16)]
+    e = eng.add_request(pe, share_prefix=False)
+    off2, _ = eng.large_spans[e]
+    for _ in range(len(pe)):
+        eng.step()
+    eng.publish_prefix(e)
+    child = [n for n in eng.prefix_cache.nodes.values() if n.start_page == 5]
+    assert len(child) == 1 and child[0].span == off2
+    parent = eng.prefix_cache.nodes[child[0].parent]
+    assert (parent.start_page, parent.end_page) == (2, 5)
+    eng.finish(e)
+
+    # ---- crash over the populated trie --------------------------------
+    pre = np.asarray(eng.astate.span_refs).copy()
+    stats = eng.crash_and_recover()
+    assert stats["index_records"] == 3          # M, X', E-child
+    assert stats["trie_pruned"] == 0
+    # acceptance: post-recovery lease vector EQUALS the pre-crash one
+    assert (np.asarray(eng.astate.span_refs) == pre).all()
+    # the trie shape rebuilt token-less, parents linked
+    shapes = sorted((n.start_page, n.end_page)
+                    for n in eng.prefix_cache.nodes.values())
+    assert shapes == [(0, 2), (2, 5), (5, 7)]
+
+    # zero re-prefill: exact hit on the recovered deep node
+    c = eng.add_request(prompt, share_prefix=True)
+    assert c in eng.shared_spans and c not in eng.large_spans
+    assert int(np.asarray(eng.dstate["pos"][c])) == full * cfg.page_size
+    eng.finish(c)
+    # partial hits clamp to recovered node boundaries (all-or-nothing:
+    # token-less nodes have no page keys to split by)
+    p3 = prompt[:16] + [int(t)
+                        for t in rng.integers(1, cfg.vocab_size, size=24)]
+    d = eng.add_request(p3, share_prefix=True)
+    assert eng.shared_spans[d][1] == 2
+    eng.finish(d)
+
+
+def test_torn_sidecar_word_prunes_record_and_descendants(mesh):
+    """Satellite: tear ONE sealed word of a mid node's device record —
+    the seal mismatch must prune it (live_record_mask drops it) AND the
+    coverage pass must drop its now-unservable descendants, while an
+    independent root-range node survives untouched."""
+    # max_seq 96 keeps owner lanes alive through both publish loops
+    cfg, eng = _engine(mesh, max_seq=96)
+    rng = np.random.default_rng(7)
+    prompt = [int(t) for t in rng.integers(1, cfg.vocab_size, size=40)]
+    a = _publish_owner(cfg, eng, prompt)
+    off, _ = eng.large_spans[a]
+    p2 = prompt[:16] + [int(t)
+                        for t in rng.integers(1, cfg.vocab_size, size=20)]
+    b = eng.add_request(p2, share_prefix=True)   # split: M [0,2) + X' [2,5)
+    other = [int(t) for t in rng.integers(1, cfg.vocab_size, size=24)]
+    o = _publish_owner(cfg, eng, other)          # independent [0,3) node
+
+    xp = next(n for n in eng.prefix_cache.nodes.values()
+              if (n.start_page, n.end_page) == (2, 5))
+    eng.prefix_store.words[xp.rec_off][F_KEY] ^= 1       # tear one word
+    assert not eng.prefix_store.seal_matches(xp.rec_off)
+
+    stats = eng.crash_and_recover()
+    # X' torn; nothing else covers boundary 2... M [0,2) still serves,
+    # but no descendant of X' existed — pruned exactly 1
+    assert stats["trie_pruned"] == 1
+    assert stats["index_records"] == 2           # M + the independent node
+    shapes = sorted((n.start_page, n.end_page)
+                    for n in eng.prefix_cache.nodes.values())
+    assert shapes == [(0, 2), (0, 3)]
+    # the torn record's span survives only through its OTHER leases
+    # (owner lane a + M's record + sharer b) — X''s phantom lease is
+    # gone: the vector holds exactly what the remaining holders justify
+    head_sb = off // eng.acfg.sb_words
+    assert int(eng.astate.span_refs[head_sb]) == 3
+
+
+def test_live_record_mask_seal_gate():
+    """Unit: seal_ok gates live_record_mask independently of marks."""
+    cfg = ja.ArenaConfig(num_sbs=4, sb_words=4, class_words=(1,),
+                         cache_cap=8)
+    marked = np.zeros(jr.num_slots(cfg), bool)
+    marked[[1, 2]] = True
+    offs = np.asarray([1, 2, -1], np.int32)
+    live = np.asarray(jr.live_record_mask(cfg, marked, offs))
+    assert live.tolist() == [True, True, False]
+    live = np.asarray(jr.live_record_mask(
+        cfg, marked, offs, seal_ok=np.asarray([True, False, True])))
+    assert live.tolist() == [True, False, False]
+
+
+def test_sealed_fields_cover_the_record_content():
+    from repro.serving import prefix_store as ps
+    # every content field is sealed; chain/shape fields are not
+    assert set(_SEALED) == {ps.F_SPAN, ps.F_KEY, ps.F_PAGES,
+                            ps.F_SPAN_PAGES, ps.F_TOK, ps.F_LEASE,
+                            ps.F_START, ps.F_FPRINT}
+    assert ps.F_NEXT not in _SEALED and ps.F_PARENT not in _SEALED
+    assert F_SEAL not in _SEALED
