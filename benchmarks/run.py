@@ -152,6 +152,25 @@ def bench_hierprompt(seed=0):
         a.close()
 
 
+def bench_idxscale(seed=0):
+    """Placement-index scaling (device run table + bucketed prefix
+    chains): the ``idxscale_dev`` row is
+    ``name,us_small,us_big,scale_ratio`` across a 16× ``num_sbs``
+    growth (flat ratio = O(buckets) placement); the ``idxscale_walk``
+    row is ``name,walk_steps_per_lookup,max_chain`` (bucketed walks
+    stay ≤ records/buckets + 1; one chain would average records/2)."""
+    a = fresh("ralloc")
+    ops, m = workloads.idxscale(a, num_sbs=(64, 1024), rounds=120,
+                                prompts=32, n_buckets=8, seed=seed)
+    _row("idxscale[ralloc]", ops)
+    print(f"idxscale_dev[ralloc],{m['dev_alloc_us_small']:.1f},"
+          f"{m['dev_alloc_us_big']:.1f},{m['dev_scale_ratio']:.2f}",
+          flush=True)
+    print(f"idxscale_walk[ralloc],{m['walk_steps_per_lookup']:.2f},"
+          f"{m['max_chain']}", flush=True)
+    a.close()
+
+
 def bench_prodcon(pairs=(1,), seed=0):
     for kind in KINDS:
         for p in pairs:
@@ -284,6 +303,14 @@ BENCHES: dict[str, dict] = {
             a, tenants=2, reqs=4, seed=s)),
             ("ralloc+flat", lambda a, s: workloads.hierprompt(
                 a, tenants=2, reqs=4, seed=s, use_trie=False))],
+    },
+    "idxscale": {
+        "full": bench_idxscale,
+        # the smoke round is host-only (num_sbs=() skips the device
+        # sweep — that runs once in the sanity gate below); its row
+        # pins the bucketed publish/lookup path's fences_per_request
+        "smoke": [("ralloc", lambda a, s: workloads.idxscale(
+            a, num_sbs=(), prompts=24, n_buckets=8, seed=s)[0])],
     },
     "prodcon": {
         "full": bench_prodcon,
@@ -453,6 +480,40 @@ def run_smoke(names: list[str], seed: int,
                   f"{sbs['trie']:.2f} sbs/request is not ≤ half of the "
                   f"flat baseline's {sbs['flat']:.2f} (partial-prefix "
                   f"hit path dead)", flush=True)
+    if "idxscale" in names:
+        # acceptance gate (ISSUE 9): device large-object placement cost
+        # must stay ~flat across a 16× num_sbs growth (the O(buckets)
+        # bucket table, not a per-call suffix-min scan — that scaled
+        # with the arena), and a bucketed prefix lookup must walk at
+        # most records/buckets + 1 records.  Timing metrics are
+        # reported but deliberately absent from the checked-in baseline
+        # row (CI timing noise is not the contract; the walk lengths
+        # are deterministic and gated).
+        a = fresh("ralloc", mb=64)
+        t0 = time.perf_counter()
+        try:
+            _, m = workloads.idxscale(a, num_sbs=(64, 1024), rounds=40,
+                                      prompts=24, n_buckets=8, seed=seed)
+            ok = (m["dev_scale_ratio"] <= 4.0
+                  and m["walk_steps_per_lookup"] <= m["chain_bound"])
+            record("idxscale_sanity", "ralloc", ok,
+                   time.perf_counter() - t0,
+                   walk_steps_per_lookup=round(m["walk_steps_per_lookup"],
+                                               3),
+                   max_chain=m["max_chain"],
+                   chain_bound=round(m["chain_bound"], 2),
+                   dev_alloc_us_small=round(m["dev_alloc_us_small"], 2),
+                   dev_alloc_us_big=round(m["dev_alloc_us_big"], 2),
+                   dev_scale_ratio=round(m["dev_scale_ratio"], 2))
+            if not ok:
+                print(f"smoke[idxscale,ralloc] FAILED: "
+                      f"dev_scale_ratio {m['dev_scale_ratio']:.2f} > 4 "
+                      f"(placement cost grew with num_sbs) or walk "
+                      f"{m['walk_steps_per_lookup']:.2f} > "
+                      f"{m['chain_bound']:.2f} records/lookup (bucketed "
+                      f"chains degenerated to one list)", flush=True)
+        finally:
+            a.close()
     if baseline_path:
         import json
         with open(baseline_path) as f:

@@ -547,6 +547,89 @@ def hierprompt(alloc, tenants=3, reqs=4, sys_pages=4, mid_pages=2,
     return requests / dt, fences / max(requests, 1), new_sbs / requests
 
 
+def idxscale(alloc, num_sbs=(64, 1024), spans_per_arena=12, rounds=60,
+             prompts=32, n_buckets=8, seed=0):
+    """Placement-index scaling microbench (device run table + bucketed
+    prefix chains).
+
+    Two sweeps, one per index:
+
+    1. *device*: for each arena size in ``num_sbs``, pre-fragment the
+       free set (claim spans, free alternating ones) so every placement
+       reads the free-run index, then time a steady alloc_large /
+       free_large cycle.  With the O(buckets) bucket table the us/op
+       stays ~flat as ``num_sbs`` grows; the retired per-call suffix-min
+       scan grew with the arena.
+    2. *host*: publish ``prompts`` records into a ``n_buckets``-bucketed
+       ``PrefixIndex`` and look every key up — the measured
+       ``walk_steps / lookups`` must stay ≤ records/buckets + 1, where a
+       single chain averages records/2.
+
+    Returns ``(lookups_per_sec, metrics)`` — metrics carries
+    ``dev_alloc_us_small`` / ``dev_alloc_us_big`` / ``dev_scale_ratio``
+    (empty ``num_sbs`` skips the device sweep: ratio 1.0) and
+    ``walk_steps_per_lookup`` / ``max_chain`` / ``chain_bound``.
+    """
+    import functools
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import jax_alloc as ja
+    from repro.core.layout import SB_SIZE
+    from repro.core.prefix_index import PrefixIndex, hash_tokens, iter_records
+
+    timings: dict[int, float] = {}
+    for n in num_sbs:
+        cfg = ja.ArenaConfig(num_sbs=n, sb_words=32, class_words=(8,),
+                             cache_cap=16)
+        al = jax.jit(functools.partial(ja.alloc_large, cfg=cfg))
+        fl = jax.jit(functools.partial(ja.free_large, cfg=cfg))
+        st = ja.init_state(cfg)
+        offs = []
+        for _ in range(spans_per_arena):
+            st, off = al(state=st, nwords=jnp.int32(2 * cfg.sb_words))
+            offs.append(int(off))
+        for off in offs[::2]:
+            st = fl(state=st, off=jnp.int32(off))
+        # warm-up claims one freed run (and compiles both kernels)
+        st, off = al(state=st, nwords=jnp.int32(2 * cfg.sb_words))
+        st = fl(state=st, off=jnp.int32(off))
+        jax.block_until_ready(st.run_len)
+        t0 = time.perf_counter()
+        for _ in range(rounds):
+            st, off = al(state=st, nwords=jnp.int32(2 * cfg.sb_words))
+            st = fl(state=st, off=jnp.int32(off))
+        jax.block_until_ready(st.run_len)
+        timings[n] = (time.perf_counter() - t0) / (2 * rounds) * 1e6
+
+    r = alloc.r                         # ralloc-only (typed roots)
+    idx = PrefixIndex(r, n_buckets=n_buckets)
+    keys = [hash_tokens([seed, i]) for i in range(prompts)]
+    for k in keys:
+        # one span per published prompt, through the metered adapter so
+        # fences/request normalizes per publish
+        idx.publish(k, alloc.malloc(SB_SIZE), n_pages=1, lease_sbs=1)
+    idx.lookups = idx.walk_steps = 0
+    t0 = time.perf_counter()
+    for k in keys:
+        assert idx.lookup(k) is not None
+    dt = max(time.perf_counter() - t0, 1e-9)
+    walk = idx.walk_steps / idx.lookups
+    max_chain = max(len(list(iter_records(r, s))) for s in idx.slots)
+    small, big = (timings[num_sbs[0]], timings[num_sbs[-1]]) \
+        if timings else (0.0, 0.0)
+    metrics = {
+        "dev_alloc_us_small": small,
+        "dev_alloc_us_big": big,
+        "dev_scale_ratio": (big / small) if small else 1.0,
+        "walk_steps_per_lookup": walk,
+        "max_chain": max_chain,
+        "chain_bound": prompts / n_buckets + 1,
+    }
+    return prompts / dt, metrics
+
+
 def prodcon(alloc, n_pairs=1, items=4000, size=64):
     """Producer/consumer via an M&S-style queue: producer allocates,
     consumer frees (paper's Prod-con)."""

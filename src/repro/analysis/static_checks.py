@@ -1,6 +1,6 @@
 """Static repo-invariant lint (AST pass).
 
-Three rules, each converting a documented-but-honor-system invariant of
+Four rules, each converting a documented-but-honor-system invariant of
 this codebase into a machine check:
 
 ``NVM001`` — no direct ``.nvm[...]`` stores outside ``core/atomics.py``.
@@ -24,6 +24,14 @@ this codebase into a machine check:
     classic drive-by — a new durable-field write added without any
     persistence thought at all.
 
+``TRN001`` — the free-run index arrays (``run_len`` / ``run_start`` /
+    ``run_bucket_min``) must never be named in a flush-like call.  They
+    are *transient* placement indexes — pure functions of the persistent
+    class records, rebuilt from scratch by recovery's sweep — and the
+    paper's "pay almost nothing for persistence" claim rests on exactly
+    that: flushing one would silently promote it to durable state and
+    reopen a write-back cost the design already eliminated.
+
 Used by ``tools/lint_persist.py`` (CLI, wired into tier-1 CI) and the
 unit tests.
 """
@@ -38,7 +46,9 @@ PERSIST_FIELDS = frozenset({"M_ROOTS", "M_DIRTY", "M_USED_SBS",
                             "D_SIZE_CLASS", "D_BLOCK_SIZE"})
 WRITE_METHODS = frozenset({"write", "write_word", "write_block"})
 FLUSH_METHODS = frozenset({"flush", "flush_range", "fence", "persist",
-                           "_persist", "drain", "set_root"})
+                           "_persist", "drain", "set_root", "set_roots"})
+TRANSIENT_INDEX_FIELDS = frozenset({"run_len", "run_start",
+                                    "run_bucket_min"})
 DEFER_ANNOTATION = "persist: deferred"
 
 
@@ -175,6 +185,18 @@ def check_source(path_label: str, text: str, *,
                 meth = _called_method(call)
                 if meth in FLUSH_METHODS:
                     scope.has_flush = True
+                    # TRN001: transient index arrays named in a flush
+                    named = set()
+                    for a in list(call.args) + [k.value
+                                                for k in call.keywords]:
+                        named |= _attr_names(a)
+                    hit = sorted(named & TRANSIENT_INDEX_FIELDS)
+                    if hit:
+                        findings.append(Finding(
+                            path_label, call.lineno, "TRN001",
+                            f"transient index field(s) {', '.join(hit)} "
+                            f"named in {meth}() — the free-run index is "
+                            "rebuilt by recovery, never flushed"))
                 if meth in WRITE_METHODS and call.args:
                     # only the *target* expression (first arg) counts —
                     # a value that mentions a layout constant is not a

@@ -116,6 +116,22 @@ class PersistentHeap:
             self.mem.flush(layout.M_ROOTS + i)
             self.mem.fence()
 
+    def set_roots(self, pairs) -> None:
+        """Batched root swing: write and flush every ``(i, block_word)``
+        pair, then ONE fence — the group-commit form of ``set_root``
+        (NVTraverse: only the destination writes need ordering, and they
+        can share it).  Atomicity is per slot: a crash mid-batch lands a
+        prefix of the swings, each individually consistent."""
+        for i, block_word in pairs:
+            assert 0 <= i < layout.MAX_ROOTS
+            off = (0 if block_word is None
+                   else block_word - self.config.sb_base + 1)
+            self.mem.write(layout.M_ROOTS + i, off)
+        if not is_suppressed("heap.set_root.persist"):
+            for i, _ in pairs:
+                self.mem.flush(layout.M_ROOTS + i)
+            self.mem.fence()
+
     def get_root(self, i: int) -> int | None:
         off = self.mem.read(layout.M_ROOTS + i)
         return None if off == 0 else self.config.sb_base + off - 1

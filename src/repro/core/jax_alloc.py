@@ -60,6 +60,9 @@ FREE_CLS = -1
 LARGE_CLS = -2        # head superblock of a multi-superblock object
 LARGE_CONT = -3       # continuation superblock of a large span
 
+# Empty-bucket sentinel of the free-run index (``run_bucket_min``).
+RUN_INF = 2**31 - 1
+
 
 @dataclasses.dataclass(frozen=True)
 class ArenaConfig:
@@ -69,6 +72,7 @@ class ArenaConfig:
     class_words: tuple[int, ...]       # block size (words) per size class
     cache_cap: int = 1024              # rank-indexed block cache capacity
     expand_sbs: int = 8                # watermark expansion increment
+    run_buckets: int = 16              # free-run index size buckets
 
     @property
     def num_classes(self) -> int:
@@ -110,6 +114,17 @@ class AllocState(NamedTuple):
     #                            broadcast over the span's persisted
     #                            extent; mirror of core.spans
     #                            RangeLeaseTable)
+    run_len: jax.Array         # T i32[num_sbs] free-run length at each
+    #                            run *start*, 0 elsewhere
+    run_start: jax.Array       # T i32[num_sbs] per free superblock, the
+    #                            start of its maximal run; -1 if not free
+    run_bucket_min: jax.Array  # T i32[run_buckets] leftmost run start
+    #                            per length bucket (exact lengths
+    #                            1..B-1, overflow bucket B-1 for >= B);
+    #                            RUN_INF = empty.  The device mirror of
+    #                            the host core.spans.FreeRunIndex — all
+    #                            three arrays are transient, rebuilt by
+    #                            jax_recovery.sweep, never persisted.
 
 
 def init_state(cfg: ArenaConfig, max_roots: int = 64) -> AllocState:
@@ -131,7 +146,143 @@ def init_state(cfg: ArenaConfig, max_roots: int = 64) -> AllocState:
         alloc_count=jnp.int32(0),
         free_count=jnp.int32(0),
         span_refs=jnp.zeros((n,), jnp.int32),
+        run_len=jnp.zeros((n,), jnp.int32),
+        run_start=jnp.full((n,), -1, jnp.int32),
+        run_bucket_min=jnp.full((cfg.run_buckets,), RUN_INF, jnp.int32),
     )
+
+
+# ---------------------------------------------------------------------------
+# free-run index
+# ---------------------------------------------------------------------------
+# The device mirror of the host ``core.spans.FreeRunIndex``: best-fit
+# large-object placement reads O(run_buckets) bucket heads instead of
+# running an O(num_sbs)-lane suffix-min scan per call.  The index is a
+# pure function of the persistent fields — free ⟺ ``sb_class == FREE_CLS``
+# below the watermark — so it is transient by construction (NVTraverse:
+# only the destination write needs durability) and ``jax_recovery.sweep``
+# rebuilds it with ``free_run_table`` after a crash.  Normal operation
+# maintains ``run_len``/``run_start`` incrementally (elementwise range
+# updates, no scan); the bucket heads are re-derived from ``run_len`` in
+# one fused scatter-min pass per free-set transition.
+
+
+def free_run_table(free_mask, num_sbs: int):
+    """Canonical run scan: ``(run_len, run_start)`` from a free mask.
+
+    One suffix-min ``associative_scan`` finds the first non-free index at
+    or after every lane; a cummax propagates run-start ids to members.
+    This is the single source of truth for "maximal contiguous free
+    runs" on the device — the from-scratch recompute that recovery uses
+    and that the incremental index is property-tested against.
+    """
+    free_mask = free_mask.astype(bool)
+    ids = jnp.arange(num_sbs, dtype=jnp.int32)
+    nonfree_at = jnp.where(free_mask, jnp.int32(num_sbs), ids)
+    next_nonfree = lax.associative_scan(jnp.minimum, nonfree_at,
+                                        reverse=True)
+    prev_free = jnp.concatenate([jnp.zeros((1,), bool), free_mask[:-1]])
+    is_start = free_mask & ~prev_free
+    start_at = lax.associative_scan(
+        jnp.maximum, jnp.where(is_start, ids, jnp.int32(-1)))
+    run_len = jnp.where(is_start, next_nonfree - ids, 0)
+    run_start = jnp.where(free_mask, start_at, jnp.int32(-1))
+    return run_len, run_start
+
+
+def _bucket_mins(cfg: ArenaConfig, run_len):
+    """Leftmost run start per length bucket, in one scatter-min pass."""
+    ids = jnp.arange(cfg.num_sbs, dtype=jnp.int32)
+    is_start = run_len > 0
+    b = jnp.where(is_start, jnp.minimum(run_len, cfg.run_buckets) - 1,
+                  jnp.int32(cfg.run_buckets))
+    mins = jnp.full((cfg.run_buckets + 1,), RUN_INF, jnp.int32)
+    mins = mins.at[b].min(jnp.where(is_start, ids, RUN_INF))
+    return mins[:cfg.run_buckets]
+
+
+def _runs_add_range(cfg: ArenaConfig, rl, rs, a, b, enable):
+    """Run-table update: contiguous ``[a, b)`` joins the free set.
+
+    Merges with the run ending at ``a-1`` and the run starting at ``b``
+    (both optional).  ``enable`` false (or an empty range) is a no-op —
+    callers pass their op's validity mask.
+    """
+    n = cfg.num_sbs
+    ids = jnp.arange(n, dtype=jnp.int32)
+    a = jnp.asarray(a, jnp.int32)
+    b = jnp.asarray(b, jnp.int32)
+    left = jnp.where(a > 0, rs[jnp.clip(a - 1, 0, n - 1)], jnp.int32(-1))
+    start = jnp.where(left >= 0, left, a)
+    right_len = jnp.where(b < n, rl[jnp.clip(b, 0, n - 1)], jnp.int32(0))
+    end = b + right_len
+    member = (ids >= start) & (ids < end)
+    rl2 = jnp.where(ids == start, end - start, jnp.where(member, 0, rl))
+    rs2 = jnp.where(member, start, rs)
+    enable = enable & (b > a)
+    return jnp.where(enable, rl2, rl), jnp.where(enable, rs2, rs)
+
+
+def _runs_remove_range(cfg: ArenaConfig, rl, rs, a, b, enable):
+    """Run-table update: ``[a, b)`` leaves the free set.
+
+    Precondition: the range lies inside one maximal run (always true for
+    the two callers — a best-fit claim starts at a run start, a stack
+    pop is a single member).  The run splits into left ``[start, a)``
+    and right ``[b, end)`` remainders, either possibly empty.
+    """
+    n = cfg.num_sbs
+    ids = jnp.arange(n, dtype=jnp.int32)
+    a = jnp.asarray(a, jnp.int32)
+    b = jnp.asarray(b, jnp.int32)
+    start = jnp.maximum(rs[jnp.clip(a, 0, n - 1)], 0)
+    end = start + rl[jnp.clip(start, 0, n - 1)]
+    member = (ids >= start) & (ids < end)
+    rl2 = jnp.where(ids == start, a - start,
+                    jnp.where(ids == b, end - b,
+                              jnp.where(member, 0, rl)))
+    rs2 = jnp.where((ids >= a) & (ids < b), -1,
+                    jnp.where((ids >= b) & (ids < end), b, rs))
+    enable = enable & (b > a)
+    return jnp.where(enable, rl2, rl), jnp.where(enable, rs2, rs)
+
+
+def _with_runs(st: "AllocState", cfg: ArenaConfig, rl, rs) -> "AllocState":
+    """Install updated run tables and refresh the bucket heads."""
+    return st._replace(run_len=rl, run_start=rs,
+                       run_bucket_min=_bucket_mins(cfg, rl))
+
+
+def rebuild_run_index(state: "AllocState", cfg: ArenaConfig) -> "AllocState":
+    """From-scratch index rebuild off the persistent class records.
+
+    Used by ``jax_recovery.sweep`` and by the rare bulk free-set
+    transition (a cache spill retiring FULL→EMPTY superblocks), where
+    incremental maintenance would have to splice an arbitrary scatter of
+    singletons.
+    """
+    ids = jnp.arange(cfg.num_sbs, dtype=jnp.int32)
+    free_sb = (state.sb_class == FREE_CLS) & (ids < state.used_sbs)
+    rl, rs = free_run_table(free_sb, cfg.num_sbs)
+    return _with_runs(state, cfg, rl, rs)
+
+
+def scan_best_fit(state: "AllocState", cfg: ArenaConfig, nsb):
+    """Test oracle: the original full-scan best-fit placement.
+
+    Returns ``(has_run, best_len, best_first)`` — smallest free run that
+    fits ``nsb`` superblocks, leftmost on ties.  ``alloc_large`` must
+    place identically through the bucket index; the differential and
+    property suites assert exactly that.
+    """
+    ids = jnp.arange(cfg.num_sbs, dtype=jnp.int32)
+    free_sb = (state.sb_class == FREE_CLS) & (ids < state.used_sbs)
+    run_len, _ = free_run_table(free_sb, cfg.num_sbs)
+    cand = (run_len > 0) & (run_len >= nsb)
+    has_run = cand.any()
+    best_len = jnp.min(jnp.where(cand, run_len, jnp.int32(cfg.num_sbs + 1)))
+    best_first = jnp.argmax(cand & (run_len == best_len)).astype(jnp.int32)
+    return has_run, best_len, best_first
 
 
 # ---------------------------------------------------------------------------
@@ -161,6 +312,9 @@ def _expand(st: AllocState, cfg: ArenaConfig):
     mask = jnp.arange(cfg.num_sbs) < k
     fs, ft = _push_many(st.free_stack, st.free_top,
                         jnp.where(mask, ids, -1), mask)
+    rl, rs = _runs_add_range(cfg, st.run_len, st.run_start,
+                             st.used_sbs, st.used_sbs + k, k > 0)
+    st = _with_runs(st, cfg, rl, rs)
     return st._replace(free_stack=fs, free_top=ft,
                        used_sbs=st.used_sbs + k), k > 0
 
@@ -218,6 +372,9 @@ def _refill_step(st: AllocState, cfg: ArenaConfig, cls: int):
             fs, ft = _push_many(s.free_stack, s.free_top,
                                 jnp.full((cfg.num_sbs,), sb, jnp.int32),
                                 jnp.arange(cfg.num_sbs) < 1)
+            rl, rs = _runs_add_range(cfg, s.run_len, s.run_start,
+                                     sb, sb + 1, jnp.bool_(True))
+            s = _with_runs(s, cfg, rl, rs)
             return s._replace(free_stack=fs, free_top=ft,
                               sb_class=s.sb_class.at[sb].set(-1))
         return lax.cond(count >= total, retire,
@@ -226,6 +383,9 @@ def _refill_step(st: AllocState, cfg: ArenaConfig, cls: int):
     def from_free(st):
         sb = st.free_stack[st.free_top - 1]
         st = st._replace(free_top=st.free_top - 1)
+        rl, rs = _runs_remove_range(cfg, st.run_len, st.run_start,
+                                    sb, sb + 1, jnp.bool_(True))
+        st = _with_runs(st, cfg, rl, rs)
         bw = cfg.class_words[cls]
         # (re)initialize the superblock for this class — the persistent
         # fields (class, block size) change here and only here
@@ -313,9 +473,12 @@ def _spill(st: AllocState, cfg: ArenaConfig, cls: int):
     fs, ft = _push_many(st.free_stack, st.free_top, ids, to_free)
     # FULL→EMPTY superblocks retire immediately (class reset)
     sb_class = jnp.where(to_free, -1, st.sb_class)
-    return st._replace(partial_stack=st.partial_stack.at[cls].set(ps),
-                       partial_top=st.partial_top.at[cls].set(pt),
-                       free_stack=fs, free_top=ft, sb_class=sb_class)
+    st = st._replace(partial_stack=st.partial_stack.at[cls].set(ps),
+                     partial_top=st.partial_top.at[cls].set(pt),
+                     free_stack=fs, free_top=ft, sb_class=sb_class)
+    # retired superblocks are an arbitrary scatter — rebuild the run index
+    return lax.cond(to_free.any(),
+                    lambda s: rebuild_run_index(s, cfg), lambda s: s, st)
 
 
 def free(state: AllocState, cfg: ArenaConfig, cls: int, offs, mask):
@@ -351,40 +514,53 @@ def span_sbs(cfg: ArenaConfig, nwords):
 def alloc_large(state: AllocState, cfg: ArenaConfig, nwords):
     """Contiguous multi-superblock allocation (paper §4.4 large path).
 
-    Placement is a *best-fit* search over freed contiguous runs: a
-    vectorized run-length scan over ``sb_class == FREE_CLS`` finds every
-    maximal run of free superblocks below the watermark and claims the
-    smallest run ≥ the request (leftmost on ties) — the identical rule
-    the host allocator applies in ``Ralloc._claim_free_run``, so host
-    and device place spans identically given identical free sets.  Only
-    when no run fits does the span fall back to expanding the watermark.
-    Without the free-run search, every span would consume fresh
-    watermark forever and alloc/free cycles of large objects would
-    deterministically exhaust the arena even when it is entirely free.
-    Returns (state, off) where ``off`` is the word offset of the span
-    start, or -1 when neither placement fits.  jit-compatible;
-    ``nwords`` may be a traced scalar.
+    Placement is a *best-fit* search over freed contiguous runs: the
+    smallest run ≥ the request wins, leftmost on ties — the identical
+    rule the host allocator applies in ``Ralloc._claim_free_run``, so
+    host and device place spans identically given identical free sets.
+    The search reads the transient free-run index instead of scanning:
+    exact length buckets resolve in O(run_buckets) (the smallest
+    eligible non-empty bucket is the best fit — every overflow run is
+    longer), and only an overflow-bucket hit or an oversized request
+    falls back to one masked min-reduction over the maintained
+    ``run_len`` table (a single fused pass; the old suffix-min
+    ``associative_scan`` survives solely as the ``scan_best_fit`` test
+    oracle).  Only when no run fits does the span fall back to
+    expanding the watermark.  Without the free-run search, every span
+    would consume fresh watermark forever and alloc/free cycles of
+    large objects would deterministically exhaust the arena even when
+    it is entirely free.  Returns (state, off) where ``off`` is the
+    word offset of the span start, or -1 when neither placement fits.
+    jit-compatible; ``nwords`` may be a traced scalar.
     """
     nwords = jnp.asarray(nwords, jnp.int32)
     nsb = span_sbs(cfg, nwords)
     ids = jnp.arange(cfg.num_sbs, dtype=jnp.int32)
+    nfit = jnp.int32(cfg.num_sbs + 1)
 
-    # best-fit over maximal runs of free superblocks below the watermark
-    # (free ⟺ class FREE_CLS & in use ⟺ member of the free stack:
-    # retired and never-initialized superblocks only).  A suffix-min
-    # scan over the indices of non-free superblocks yields the free-run
-    # length starting at every id; candidates are run *starts* whose run
-    # fits, ranked by (length, id).
-    free_sb = (state.sb_class == FREE_CLS) & (ids < state.used_sbs)
-    nonfree_at = jnp.where(free_sb, jnp.int32(cfg.num_sbs), ids)
-    next_nonfree = lax.associative_scan(jnp.minimum, nonfree_at,
-                                        reverse=True)
-    run_len = next_nonfree - ids          # free-run length starting at id
-    prev_free = jnp.concatenate([jnp.zeros((1,), bool), free_sb[:-1]])
-    cand = free_sb & ~prev_free & (run_len >= nsb)
-    has_run = cand.any()
-    best_len = jnp.min(jnp.where(cand, run_len, jnp.int32(cfg.num_sbs + 1)))
-    best_first = jnp.argmax(cand & (run_len == best_len)).astype(jnp.int32)
+    # O(buckets) placement: exact buckets hold lengths 1..B-1, so the
+    # smallest eligible non-empty one *is* the best fit and its head the
+    # leftmost such run.
+    bidx = jnp.arange(cfg.run_buckets - 1, dtype=jnp.int32)
+    exact = (bidx + 1 >= nsb) & \
+        (state.run_bucket_min[:cfg.run_buckets - 1] < RUN_INF)
+    best_exact_len = jnp.min(jnp.where(exact, bidx + 1, nfit))
+    exact_hit = best_exact_len <= cfg.num_sbs
+
+    def from_bucket(_):
+        b = jnp.clip(best_exact_len - 1, 0, cfg.run_buckets - 1)
+        return best_exact_len, state.run_bucket_min[b]
+
+    def from_reduce(_):
+        fit = state.run_len >= nsb
+        ln = jnp.min(jnp.where(fit, state.run_len, nfit))
+        first = jnp.min(jnp.where(fit & (state.run_len == ln), ids,
+                                  jnp.int32(cfg.num_sbs)))
+        return ln, first
+
+    best_len, best_first = lax.cond(exact_hit, from_bucket, from_reduce,
+                                    None)
+    has_run = best_len <= cfg.num_sbs
     wm_ok = state.used_sbs + nsb <= cfg.num_sbs
     ok = (nwords > 0) & (has_run | wm_ok)
     first = jnp.where(has_run, best_first, state.used_sbs)
@@ -407,6 +583,10 @@ def alloc_large(state: AllocState, cfg: ArenaConfig, nwords):
     new_stack = jnp.full_like(stack, -1).at[
         jnp.where(keep, pos, dump)].set(jnp.where(keep, stack, -1))
     new_stack = new_stack.at[dump].set(-1)
+    # claimed range leaves the free-run index (split at the run start)
+    rl, rs = _runs_remove_range(cfg, state.run_len, state.run_start,
+                                first, first + nsb, ok & has_run)
+    state = _with_runs(state, cfg, rl, rs)
     state = state._replace(
         sb_class=sb_class,
         sb_block_words=sb_block_words,
@@ -485,6 +665,13 @@ def _lease_release(state: AllocState, cfg: ArenaConfig, sb, a, b, valid):
     sbw = jnp.where(freed, 0, state.sb_block_words)
     sbw = sbw.at[sb].set(jnp.where(
         trimmed, jnp.minimum(sbw[sb], new_ext * cfg.sb_words), sbw[sb]))
+    # the freed range is contiguous (whole remainder or a tail suffix);
+    # splice it into the free-run index
+    fa = jnp.min(jnp.where(freed, ids, jnp.int32(cfg.num_sbs)))
+    fb = jnp.max(jnp.where(freed, ids + 1, jnp.int32(0)))
+    rl, rs = _runs_add_range(cfg, state.run_len, state.run_start,
+                             fa, fb, freed.any())
+    state = _with_runs(state, cfg, rl, rs)
     return state._replace(
         sb_class=jnp.where(freed, FREE_CLS, state.sb_class),
         sb_block_words=sbw,
@@ -569,10 +756,11 @@ def free_runs(state: AllocState, cfg: ArenaConfig) -> list[tuple[int, int]]:
     the two to pin down placement equivalence.
     """
     import numpy as np
-    from .layout import contiguous_runs
-    used = int(state.used_sbs)
-    ids = np.nonzero(np.asarray(state.sb_class)[:used] == FREE_CLS)[0]
-    return contiguous_runs(ids.tolist())
+    ids = jnp.arange(cfg.num_sbs, dtype=jnp.int32)
+    free_sb = (state.sb_class == FREE_CLS) & (ids < state.used_sbs)
+    run_len = np.asarray(free_run_table(free_sb, cfg.num_sbs)[0])
+    starts = np.nonzero(run_len > 0)[0]
+    return [(int(s), int(run_len[s])) for s in starts]
 
 
 def live_blocks(state: AllocState, cfg: ArenaConfig):

@@ -32,7 +32,8 @@ import jax.numpy as jnp
 from jax import lax
 
 from .jax_alloc import (FREE_CLS, LARGE_CLS, LARGE_CONT, AllocState,
-                        ArenaConfig, init_state, span_sbs)
+                        ArenaConfig, init_state, rebuild_run_index,
+                        span_sbs)
 
 
 def slot_of(cfg: ArenaConfig, off):
@@ -205,7 +206,7 @@ def sweep(cfg: ArenaConfig, persistent: dict, marked,
     free_stack, free_top = _compact(empty, n + 1)
 
     st = init_state(cfg, max_roots=persistent["roots"].shape[0])
-    return st._replace(
+    st = st._replace(
         sb_class=new_class,
         sb_block_words=jnp.where(empty, 0, persistent["sb_block_words"]),
         used_sbs=used,
@@ -219,6 +220,9 @@ def sweep(cfg: ArenaConfig, persistent: dict, marked,
         partial_top=jnp.stack(partial_tops),
         span_refs=span_refs,
     )
+    # the transient free-run index is a pure function of the recovered
+    # class records — rebuild it with the canonical scan
+    return rebuild_run_index(st, cfg)
 
 
 def live_record_mask(cfg: ArenaConfig, marked, offs, seal_ok=None):

@@ -91,10 +91,30 @@ TYPENAME = "prefix_index"
 REC_WORDS = 5
 REC_BYTES = REC_WORDS * WORD
 #: default root slot — the top of the root table, far from the low slots
-#: tests and the crash harness hand out sequentially.
+#: tests and the crash harness hand out sequentially.  With bucketing
+#: (``PrefixIndex(n_buckets=k)``) this is bucket 0's slot and buckets
+#: 1..k-1 descend from it; the reserved range below (down to
+#: ``PREFIX_INDEX_ROOT - PREFIX_INDEX_MAX_BUCKETS + 1``) keeps them
+#: clear of the trie root and the low harness slots.
 PREFIX_INDEX_ROOT = MAX_ROOTS - 1
+#: ceiling on bucket fan-out — sizes the reserved root-slot range.
+PREFIX_INDEX_MAX_BUCKETS = 16
 
 _KEY_MASK = (1 << 48) - 1
+
+
+def bucket_slots(slot: int, n_buckets: int) -> tuple[int, ...]:
+    """Root slots of a bucketed chain set: bucket ``b`` lives at
+    ``slot - b``.  Every slot registers under the same ``TYPENAME``, so
+    recovery's typed-root discovery prunes and re-trims each bucket
+    without knowing about bucketing at all."""
+    if not 1 <= n_buckets <= PREFIX_INDEX_MAX_BUCKETS:
+        raise ValueError(f"n_buckets {n_buckets} outside "
+                         f"[1, {PREFIX_INDEX_MAX_BUCKETS}]")
+    if slot - (n_buckets - 1) < 0:
+        raise ValueError(f"bucket range underflows the root table "
+                         f"(slot {slot}, {n_buckets} buckets)")
+    return tuple(slot - b for b in range(n_buckets))
 
 
 def hash_tokens(tokens) -> int:
@@ -166,21 +186,41 @@ class PrefixRecord:
     lease_sbs: int           # the cache lease's superblock count
 
 
-def iter_records(r, slot: int = PREFIX_INDEX_ROOT) -> Iterator[PrefixRecord]:
-    """Walk the record chain from root ``slot`` (cycle-safe).
+def walk_chain(r, slot: int, rec_words: int = REC_WORDS,
+               seal_fn=record_seal_matches):
+    """The one low-level chain walk every traversal shares (cycle-safe).
 
-    Torn/corrupt records are skipped, never yielded: traversal continues
-    through an in-bounds invalid record's next pointer and truncates at
-    an out-of-bounds one (its memory cannot be read, let alone trusted).
+    Yields ``(prev, rec, nxt, valid)`` per visited record: ``prev`` is
+    the chain predecessor (last *visited* record, None at the head),
+    ``nxt`` the decoded next pointer (None at an out-of-bounds record —
+    its memory cannot be read, let alone trusted), and ``valid`` whether
+    the record is in bounds with a matching seal.  ``lookup``, ``remove``,
+    ``remove_batch``, ``iter_records``, the recovery prune and the trie's
+    node iteration all drive this single generator — with bucketed roots
+    each bucket chain is just another ``slot``.
     """
-    rec = r.heap.get_root(slot)
+    heap = r.heap
+    prev = None
+    rec = heap.get_root(slot)
     seen: set[int] = set()
     while rec is not None and rec not in seen:
         seen.add(rec)
-        if not (r.heap.in_sb_region(rec)
-                and r.heap.in_sb_region(rec + REC_WORDS - 1)):
-            break
-        if record_seal_matches(r, rec):
+        in_bounds = (heap.in_sb_region(rec)
+                     and heap.in_sb_region(rec + rec_words - 1))
+        nxt = pp.decode(rec, r.read_word(rec)) if in_bounds else None
+        yield prev, rec, nxt, in_bounds and seal_fn(r, rec)
+        prev, rec = rec, nxt
+
+
+def iter_records(r, slot: int = PREFIX_INDEX_ROOT) -> Iterator[PrefixRecord]:
+    """Walk the record chain from root ``slot``.
+
+    Torn/corrupt records are skipped, never yielded: traversal continues
+    through an in-bounds invalid record's next pointer and truncates at
+    an out-of-bounds one.
+    """
+    for _prev, rec, _nxt, valid in walk_chain(r, slot):
+        if valid:
             yield PrefixRecord(
                 ptr=rec,
                 key=int(r.read_word(rec + 2)) & _KEY_MASK,
@@ -188,7 +228,6 @@ def iter_records(r, slot: int = PREFIX_INDEX_ROOT) -> Iterator[PrefixRecord]:
                 n_pages=int(r.read_word(rec + 3)),
                 lease_sbs=int(r.read_word(rec + 4)),
             )
-        rec = pp.decode(rec, r.read_word(rec))
 
 
 def prune_torn_records(r, slot: int = PREFIX_INDEX_ROOT) -> int:
@@ -204,26 +243,21 @@ def prune_torn_records(r, slot: int = PREFIX_INDEX_ROOT) -> int:
     m = r.mem
     heap = r.heap
     pruned = 0
-    prev = None                    # last valid record kept on the chain
-    rec = heap.get_root(slot)
-    seen: set[int] = set()
-    while rec is not None and rec not in seen:
-        seen.add(rec)
-        in_bounds = (heap.in_sb_region(rec)
-                     and heap.in_sb_region(rec + REC_WORDS - 1))
-        if in_bounds and record_seal_matches(r, rec):
-            prev, rec = rec, pp.decode(rec, r.read_word(rec))
+    kept = None                    # last valid record kept on the chain
+    for _prev, rec, nxt, valid in walk_chain(r, slot):
+        if valid:
+            kept = rec
             continue
         pruned += 1
-        nxt = pp.decode(rec, r.read_word(rec)) if in_bounds else None
-        if prev is None:
+        # the unlink rewrites ``kept``'s next (or the root) only — the
+        # walker's already-decoded ``nxt`` is unaffected
+        if kept is None:
             heap.set_root(slot, nxt)              # durable flush + fence
         else:
-            m.write(prev, pp.PPTR_NULL if nxt is None
-                    else pp.encode(prev, nxt))
-            m.flush(prev)
+            m.write(kept, pp.PPTR_NULL if nxt is None
+                    else pp.encode(kept, nxt))
+            m.flush(kept)
             m.fence()
-        rec = nxt
     return pruned
 
 
@@ -254,22 +288,49 @@ def retrim_after_recovery(r, slot: int = PREFIX_INDEX_ROOT
 
 
 class PrefixIndex:
-    """Host-side durable prefix index over one ``Ralloc`` heap."""
+    """Host-side durable prefix index over one ``Ralloc`` heap.
 
-    def __init__(self, r, slot: int = PREFIX_INDEX_ROOT):
+    ``n_buckets > 1`` hash-buckets the durable chains by the 48-bit key:
+    bucket ``key % n_buckets`` owns root slot ``slot - bucket``
+    (``bucket_slots``), so ``lookup``/``remove``/``remove_batch`` walk
+    O(records / n_buckets) records instead of one long chain.  The
+    record format, persist ordering and fence counts are unchanged —
+    bucketing only splits *where* the chains hang, and every bucket root
+    registers under the same ``TYPENAME`` so recovery prunes and
+    re-trims them without modification.  Group commits still spend ≈3
+    fences per batch: the root swing covers all touched buckets with one
+    batched ``set_roots`` (crash atomicity of a multi-bucket batch is
+    accordingly per-bucket — a crash mid-swing can land a prefix of the
+    buckets, each of which is individually consistent).
+    """
+
+    def __init__(self, r, slot: int = PREFIX_INDEX_ROOT,
+                 n_buckets: int = 1):
         self.r = r
         self.slot = slot
-        # (re)register the typed root: filter functions are re-registered
+        self.n_buckets = int(n_buckets)
+        self.slots = bucket_slots(slot, self.n_buckets)
+        #: lookup instrumentation: records visited / lookups served —
+        #: the idxscale workload reports ``walk_steps / lookups``.
+        self.lookups = 0
+        self.walk_steps = 0
+        # (re)register the typed roots: filter functions are re-registered
         # every execution, never persisted (paper §4.5.1)
-        r.get_root(slot, TYPENAME)
+        for s in self.slots:
+            r.get_root(s, TYPENAME)
+
+    def _slot_of(self, key: int) -> int:
+        return self.slots[(int(key) & _KEY_MASK) % self.n_buckets]
 
     # ----------------------------------------------------------------- reads
     def records(self) -> list[PrefixRecord]:
-        return list(iter_records(self.r, self.slot))
+        return [rec for s in self.slots for rec in iter_records(self.r, s)]
 
     def lookup(self, key: int) -> PrefixRecord | None:
         key &= _KEY_MASK
-        for rec in iter_records(self.r, self.slot):
+        self.lookups += 1
+        for rec in iter_records(self.r, self._slot_of(key)):
+            self.walk_steps += 1
             if rec.key == key:
                 return rec
         return None
@@ -290,6 +351,7 @@ class PrefixIndex:
         r = self.r
         if lease_sbs < 1:
             raise ValueError(f"publish with an empty lease ({lease_sbs} sbs)")
+        slot = self._slot_of(key)
         r.span_acquire(span_ptr, lease_sbs)
         # persist boundary: published contents (the application flushed
         # them) become durable before the index can claim they exist
@@ -298,7 +360,7 @@ class PrefixIndex:
         if rec is None:
             r.span_release(span_ptr, lease_sbs)
             return None
-        head = r.heap.get_root(self.slot)
+        head = r.heap.get_root(slot)
         r.write_word(rec, pp.PPTR_NULL if head is None
                      else pp.encode(rec, head))
         span_word = pp.encode(rec + 1, span_ptr)
@@ -316,8 +378,8 @@ class PrefixIndex:
         if not is_suppressed("prefix_index.publish.record_persist"):
             r.flush_range(rec + 2, 1)
             r.fence()                # sealed record durable BEFORE reachable
-        r.set_root(self.slot, rec, TYPENAME)     # atomic swing (flush+fence)
-        r.mem.note("publish_end", record=rec, slot=self.slot)
+        r.set_root(slot, rec, TYPENAME)          # atomic swing (flush+fence)
+        r.mem.note("publish_end", record=rec, slot=slot)
         return rec
 
     def publish_batch(self, items) -> list:
@@ -361,19 +423,26 @@ class PrefixIndex:
         batch = [(rec, it) for rec, it in zip(recs, items) if rec is not None]
         if not batch:
             return recs
-        head = r.heap.get_root(self.slot)
+        # partition by bucket: each bucket's new records chain among
+        # themselves, the last pointing at that bucket's old head
+        groups: dict[int, list[tuple[int, tuple]]] = {}
+        for rec, it in batch:
+            groups.setdefault(self._slot_of(it[0]), []).append((rec, it))
         seals = []
-        for i, (rec, (key48, span_ptr, n_pages, lease_sbs)) in \
-                enumerate(batch):
-            nxt = batch[i + 1][0] if i + 1 < len(batch) else head
-            r.write_word(rec, pp.PPTR_NULL if nxt is None
-                         else pp.encode(rec, nxt))
-            span_word = pp.encode(rec + 1, span_ptr)
-            r.write_word(rec + 1, span_word)
-            r.write_word(rec + 3, n_pages)
-            r.write_word(rec + 4, lease_sbs)
-            cksum = _record_checksum(span_word, n_pages, lease_sbs, key48)
-            seals.append((rec, key48 | (cksum << 48)))
+        for slot, grp in groups.items():
+            head = r.heap.get_root(slot)
+            for i, (rec, (key48, span_ptr, n_pages, lease_sbs)) in \
+                    enumerate(grp):
+                nxt = grp[i + 1][0] if i + 1 < len(grp) else head
+                r.write_word(rec, pp.PPTR_NULL if nxt is None
+                             else pp.encode(rec, nxt))
+                span_word = pp.encode(rec + 1, span_ptr)
+                r.write_word(rec + 1, span_word)
+                r.write_word(rec + 3, n_pages)
+                r.write_word(rec + 4, lease_sbs)
+                cksum = _record_checksum(span_word, n_pages, lease_sbs,
+                                         key48)
+                seals.append((rec, key48 | (cksum << 48)))
         if not is_suppressed("prefix_index.publish_batch.fields_persist"):
             for rec, _ in batch:
                 r.flush_range(rec, REC_WORDS)
@@ -385,11 +454,16 @@ class PrefixIndex:
             for rec, _ in seals:
                 r.flush_range(rec + 2, 1)
             r.fence()                  # the ONE fence N sealed records share
-        r.mem.note("batch_root", records=[rec for rec, _ in batch],
-                   slot=self.slot)
-        r.set_root(self.slot, batch[0][0], TYPENAME)   # single swing
-        r.mem.note("publish_batch_end", records=[rec for rec, _ in batch],
-                   slot=self.slot)
+        for slot, grp in groups.items():
+            r.mem.note("batch_root", records=[rec for rec, _ in grp],
+                       slot=slot)
+        # one batched swing covers every touched bucket: all root words
+        # written + flushed behind a single fence (still 3 fences/batch)
+        r.set_roots([(slot, grp[0][0]) for slot, grp in groups.items()],
+                    TYPENAME)
+        for slot, grp in groups.items():
+            r.mem.note("publish_batch_end",
+                       records=[rec for rec, _ in grp], slot=slot)
         return recs
 
     def remove_batch(self, keys) -> int:
@@ -405,42 +479,44 @@ class PrefixIndex:
         want = {int(k) & _KEY_MASK for k in keys}
         if not want:
             return 0
-        chain: list[tuple[int, int | None]] = []   # (rec, next) in order
-        victims: list[tuple[int, int | None, int]] = []
-        rec = r.heap.get_root(self.slot)
-        seen: set[int] = set()
-        while rec is not None and rec not in seen:
-            seen.add(rec)
-            nxt = pp.decode(rec, r.read_word(rec))
-            if (record_is_valid(r, rec)
-                    and (int(r.read_word(rec + 2)) & _KEY_MASK) in want):
-                victims.append((rec, pp.decode(rec + 1, r.read_word(rec + 1)),
-                                int(r.read_word(rec + 4))))
-            else:
-                chain.append((rec, nxt))
-            rec = nxt
+        # only buckets owning a wanted key need their chain walked
+        touched = sorted({self._slot_of(k) for k in want}, reverse=True)
+        dirty: list[int] = []
+        swings: list[tuple[int, int | None]] = []
+        victims: list[tuple[int, int | None, int, int]] = []
+        for slot in touched:
+            chain: list[tuple[int, int | None]] = []   # (rec, next) kept
+            for _prev, rec, nxt, valid in walk_chain(r, slot):
+                if (valid and (int(r.read_word(rec + 2)) & _KEY_MASK)
+                        in want):
+                    victims.append(
+                        (rec, pp.decode(rec + 1, r.read_word(rec + 1)),
+                         int(r.read_word(rec + 4)), slot))
+                else:
+                    chain.append((rec, nxt))
+            # rewire the survivors around the victims: every predecessor
+            # whose successor changed gets one next-pointer write, and
+            # all those writes (across buckets) share one flush+fence
+            for i, (surv, old_nxt) in enumerate(chain):
+                new_nxt = chain[i + 1][0] if i + 1 < len(chain) else None
+                if new_nxt != old_nxt:
+                    r.write_word(surv, pp.PPTR_NULL if new_nxt is None
+                                 else pp.encode(surv, new_nxt))
+                    dirty.append(surv)
+            new_head = chain[0][0] if chain else None
+            if new_head != r.heap.get_root(slot):
+                swings.append((slot, new_head))    # head victims fold
         if not victims:
             return 0
-        # rewire the survivors around the victims: every predecessor
-        # whose successor changed gets one next-pointer write, and all
-        # those writes share one flush+fence
-        dirty: list[int] = []
-        for i, (surv, old_nxt) in enumerate(chain):
-            new_nxt = chain[i + 1][0] if i + 1 < len(chain) else None
-            if new_nxt != old_nxt:
-                r.write_word(surv, pp.PPTR_NULL if new_nxt is None
-                             else pp.encode(surv, new_nxt))
-                dirty.append(surv)
         if dirty and not is_suppressed(
                 "prefix_index.remove_batch.unlink_persist"):
             for w in dirty:
                 r.flush_range(w, 1)
             r.fence()                  # the ONE fence N unlinks share
-        new_head = chain[0][0] if chain else None
-        if new_head != r.heap.get_root(self.slot):
-            r.set_root(self.slot, new_head, TYPENAME)   # head victims fold
-        for rec, span, lease in victims:
-            r.mem.note("lease_release", record=rec, slot=self.slot)
+        if swings:
+            r.set_roots(swings, TYPENAME)          # ≤ 1 swing fence total
+        for rec, span, lease, slot in victims:
+            r.mem.note("lease_release", record=rec, slot=slot)
             if span is not None and lease >= 1:
                 r.span_release(span, lease)
             r.free(rec)
@@ -452,32 +528,28 @@ class PrefixIndex:
         no record carries the key."""
         r = self.r
         key &= _KEY_MASK
-        prev = None
-        rec = r.heap.get_root(self.slot)
-        seen: set[int] = set()
-        while rec is not None and rec not in seen:
-            seen.add(rec)
-            nxt = pp.decode(rec, r.read_word(rec))
-            if (record_is_valid(r, rec)
+        slot = self._slot_of(key)
+        for prev, rec, nxt, valid in walk_chain(r, slot):
+            if not (valid
                     and (int(r.read_word(rec + 2)) & _KEY_MASK) == key):
-                # unlink durable BEFORE the lease drops: a linked record
-                # must always imply a live span
-                if prev is None:
-                    r.set_root(self.slot, nxt, TYPENAME)
-                else:
-                    r.write_word(prev, pp.PPTR_NULL if nxt is None
-                                 else pp.encode(prev, nxt))
-                    if not is_suppressed("prefix_index.remove.unlink_persist"):
-                        r.flush_range(prev, 1)
-                        r.fence()
-                span = pp.decode(rec + 1, r.read_word(rec + 1))
-                lease = int(r.read_word(rec + 4))
-                r.mem.note("lease_release", record=rec, slot=self.slot)
-                if span is not None and lease >= 1:
-                    r.span_release(span, lease)
-                r.free(rec)
-                return True
-            prev, rec = rec, nxt
+                continue
+            # unlink durable BEFORE the lease drops: a linked record
+            # must always imply a live span
+            if prev is None:
+                r.set_root(slot, nxt, TYPENAME)
+            else:
+                r.write_word(prev, pp.PPTR_NULL if nxt is None
+                             else pp.encode(prev, nxt))
+                if not is_suppressed("prefix_index.remove.unlink_persist"):
+                    r.flush_range(prev, 1)
+                    r.fence()
+            span = pp.decode(rec + 1, r.read_word(rec + 1))
+            lease = int(r.read_word(rec + 4))
+            r.mem.note("lease_release", record=rec, slot=slot)
+            if span is not None and lease >= 1:
+                r.span_release(span, lease)
+            r.free(rec)
+            return True
         return False
 
     def clear(self) -> int:

@@ -93,13 +93,17 @@ from typing import Iterator
 from ..analysis.faults import is_suppressed
 from . import pptr as pp
 from .layout import MAX_ROOTS, WORD
-from .prefix_index import _KEY_MASK, hash_tokens
+from .prefix_index import (_KEY_MASK, PREFIX_INDEX_MAX_BUCKETS, hash_tokens,
+                           walk_chain)
 
 TYPENAME = "prefix_trie"
 REC_WORDS = 8
 REC_BYTES = REC_WORDS * WORD
-#: default root slot — one below the flat index's (``MAX_ROOTS - 1``).
-PREFIX_TRIE_ROOT = MAX_ROOTS - 2
+#: default root slot — directly below the flat index's reserved bucket
+#: range (``PREFIX_INDEX_ROOT`` down to ``PREFIX_INDEX_ROOT -
+#: PREFIX_INDEX_MAX_BUCKETS + 1``), still far above the low slots tests
+#: and the crash harness hand out sequentially.
+PREFIX_TRIE_ROOT = MAX_ROOTS - 1 - PREFIX_INDEX_MAX_BUCKETS
 
 _M32 = 0xFFFFFFFF
 _M64 = 0xFFFFFFFFFFFFFFFF
@@ -178,17 +182,12 @@ class TrieRecord:
 
 
 def iter_nodes(r, slot: int = PREFIX_TRIE_ROOT) -> Iterator[TrieRecord]:
-    """Walk the node chain from root ``slot`` (cycle-safe); torn records
-    are skipped, never yielded — same contract as
-    ``prefix_index.iter_records``."""
-    rec = r.heap.get_root(slot)
-    seen: set[int] = set()
-    while rec is not None and rec not in seen:
-        seen.add(rec)
-        if not (r.heap.in_sb_region(rec)
-                and r.heap.in_sb_region(rec + REC_WORDS - 1)):
-            break
-        if record_seal_matches(r, rec):
+    """Walk the node chain from root ``slot``; torn records are skipped,
+    never yielded — the trie drives the same ``prefix_index.walk_chain``
+    generator as the flat index, with its own record width and seal."""
+    for _prev, rec, _nxt, valid in walk_chain(r, slot, REC_WORDS,
+                                              record_seal_matches):
+        if valid:
             yield TrieRecord(
                 ptr=rec,
                 key=int(r.read_word(rec + 2)) & _KEY_MASK,
@@ -199,7 +198,6 @@ def iter_nodes(r, slot: int = PREFIX_TRIE_ROOT) -> Iterator[TrieRecord]:
                 lease_sbs=int(r.read_word(rec + 6)),
                 fprint=int(r.read_word(rec + 7)) & _M64,
             )
-        rec = pp.decode(rec, r.read_word(rec))
 
 
 def _unlink(r, slot: int, prev: int | None, nxt: int | None) -> None:
@@ -239,20 +237,14 @@ def prune_torn_nodes(r, slot: int = PREFIX_TRIE_ROOT) -> int:
     heap = r.heap
     pruned = 0
     # -- pass 1: torn seals --------------------------------------------------
-    prev = None
-    rec = heap.get_root(slot)
-    seen: set[int] = set()
-    while rec is not None and rec not in seen:
-        seen.add(rec)
-        in_bounds = (heap.in_sb_region(rec)
-                     and heap.in_sb_region(rec + REC_WORDS - 1))
-        if in_bounds and record_seal_matches(r, rec):
-            prev, rec = rec, pp.decode(rec, r.read_word(rec))
+    kept_prev = None               # last valid record kept on the chain
+    for _prev, rec, nxt, valid in walk_chain(r, slot, REC_WORDS,
+                                             record_seal_matches):
+        if valid:
+            kept_prev = rec
             continue
         pruned += 1
-        nxt = pp.decode(rec, r.read_word(rec)) if in_bounds else None
-        _unlink(r, slot, prev, nxt)
-        rec = nxt
+        _unlink(r, slot, kept_prev, nxt)
     # -- pass 2: coverage fixpoint ------------------------------------------
     recs = list(iter_nodes(r, slot))
     by_ptr = {n.ptr: n for n in recs}
@@ -730,15 +722,10 @@ class PrefixTrie:
     # -------------------------------------------------------------- plumbing
     def _chain_pred(self, target: int) -> int | None:
         """Durable-chain predecessor of record ``target`` (None = head)."""
-        r = self.r
-        prev = None
-        rec = r.heap.get_root(self.slot)
-        seen: set[int] = set()
-        while rec is not None and rec not in seen:
+        for prev, rec, _nxt, _valid in walk_chain(
+                self.r, self.slot, REC_WORDS, record_seal_matches):
             if rec == target:
                 return prev
-            seen.add(rec)
-            prev, rec = rec, pp.decode(rec, r.read_word(rec))
         raise ValueError(f"record {target} not on the chain")
 
     def _rebuild(self) -> None:

@@ -324,6 +324,13 @@ class Ralloc:
         self._root_filters[i] = typename
         self.heap.set_root(i, ptr)
 
+    def set_roots(self, pairs, typename: str | None = None) -> None:
+        """Swing several typed roots behind one shared fence."""
+        pairs = list(pairs)
+        for i, _ in pairs:
+            self._root_filters[i] = typename
+        self.heap.set_roots(pairs)
+
     def get_root(self, i: int, typename: str | None = None) -> int | None:
         """Retrieve root ``i`` and (re)register its filter type (paper §4.5.1)."""
         self._root_filters[i] = typename

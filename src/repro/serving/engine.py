@@ -56,7 +56,8 @@ PAGE_CLS = 0
 
 class ServingEngine:
     def __init__(self, cfg: ModelConfig, mesh, params, *, lanes: int = 8,
-                 max_seq: int = 512, pages_per_sb: int = 16):
+                 max_seq: int = 512, pages_per_sb: int = 16,
+                 prefix_buckets: int = 4):
         self.cfg = cfg
         self.mesh = mesh
         self.params = params
@@ -71,10 +72,13 @@ class ServingEngine:
         self.acfg = ja.ArenaConfig(num_sbs=num_sbs, sb_words=pages_per_sb,
                                    class_words=(1,),
                                    cache_cap=max(64, 2 * lanes))
-        # root slots: one per lane (page tables) + one for the durable
-        # prefix index's record chain (serving.prefix_store)
+        # root slots: one per lane (page tables) + one per hash bucket of
+        # the durable prefix index's record chains (serving.prefix_store) —
+        # bucket b's chain head mirrors into roots[lanes + b]
         self._index_root = lanes
-        self.astate = ja.init_state(self.acfg, max_roots=lanes + 1)
+        self.prefix_buckets = prefix_buckets
+        self.astate = ja.init_state(self.acfg,
+                                    max_roots=lanes + prefix_buckets)
         self._alloc = jax.jit(functools.partial(ja.alloc, cfg=self.acfg,
                                                 cls=PAGE_CLS))
         self._free = jax.jit(functools.partial(ja.free, cfg=self.acfg,
@@ -103,11 +107,19 @@ class ServingEngine:
         # durable prefix index: span-path entries additionally own one
         # record block reachable from roots[_index_root], which is what
         # lets crash_and_recover re-publish them instead of re-prefilling
-        self.prefix_store = PrefixStore(jr.num_slots(self.acfg))
+        self.prefix_store = PrefixStore(jr.num_slots(self.acfg),
+                                        n_buckets=prefix_buckets)
         # group-commit queue: transiently-published span entries whose
         # durable record append waits for the next flush_publishes
         self._publish_queue: list[PendingPublish] = []
         self.publish_capacity = max(4, lanes)    # records per group commit
+
+    def _mirror_index_roots(self) -> None:
+        """Mirror every prefix-chain bucket head into its root slot
+        (bucket b -> roots[lanes + b]); pure state update, no fence."""
+        for b, head in enumerate(self.prefix_store.heads):
+            self.astate = ja.set_root(self.astate, self._index_root + b,
+                                      jnp.int32(head))
 
     # ------------------------------------------- component-state delegation
     @property
@@ -368,8 +380,7 @@ class ServingEngine:
                 child = self.prefix_cache.nodes.get(ck)
                 if child is not None and child.rec_off >= 0:
                     self.prefix_store.reparent(child.rec_off, x_rec)
-            self.astate = ja.set_root(self.astate, self._index_root,
-                                      jnp.int32(self.prefix_store.head))
+            self._mirror_index_roots()
         else:
             # queued-only node: swap its parked publish for the pair (M
             # first — flush resolves X''s parent_key through it)
@@ -559,9 +570,7 @@ class ServingEngine:
                 rec_of[p.key] = rec
             if payloads:
                 self.prefix_store.append_batch(payloads)
-                self.astate = ja.set_root(
-                    self.astate, self._index_root,
-                    jnp.int32(self.prefix_store.head))
+                self._mirror_index_roots()
                 for q in payloads:
                     self.prefix_cache.set_rec(q["key"], q["rec_off"])
                 appended += len(payloads)
@@ -591,8 +600,7 @@ class ServingEngine:
                 # is its whole un-publication.
                 rec = self.prefix_store.remove(key)
                 if rec is not None:
-                    self.astate = ja.set_root(self.astate, self._index_root,
-                                              jnp.int32(self.prefix_store.head))
+                    self._mirror_index_roots()
                 # free_large releases the cache's prefix lease: a
                 # transient decrement while holders remain, the actual
                 # free of whatever range the cache was last to lease
@@ -822,13 +830,14 @@ class ServingEngine:
                 self.prefix_store.reparent(
                     r.off, cover if cover is not None else -1)
         persistent = ja.persistent_snapshot(self.astate)
-        roots = np.full((self.lanes + 1,), -1, np.int32)
+        roots = np.full((self.lanes + self.prefix_buckets,), -1, np.int32)
         bt = np.asarray(self.dstate["block_table"])
         for lane, s in self.sessions.items():
             pages = bt[lane][bt[lane] >= 0]
             if pages.size:
                 roots[lane] = int(pages[0])
-        roots[self._index_root] = self.prefix_store.head
+        for b, head in enumerate(self.prefix_store.heads):
+            roots[self._index_root + b] = head
         persistent["roots"] = jnp.asarray(roots)
         new_state, marked = jr.recover(self.acfg, persistent,
                                        jnp.asarray(self.ref_table()))
@@ -886,8 +895,7 @@ class ServingEngine:
             self.astate, _ = self._trim_large(
                 state=self.astate, off=jnp.int32(rec.span),
                 n_keep=jnp.int32(rec.lease_sbs), n_held=jnp.int32(-1))
-        self.astate = ja.set_root(self.astate, self._index_root,
-                                  jnp.int32(self.prefix_store.head))
+        self._mirror_index_roots()
         # rebuild the trie shape from the surviving records (token-less
         # nodes: they match all-or-nothing, key + fingerprint) so
         # longest-prefix partial hits work immediately after recovery

@@ -105,17 +105,37 @@ class StoreRecord:
 
 
 class PrefixStore:
-    """Durable record table + chain head for one device arena.
+    """Durable record table + chain heads for one device arena.
 
-    ``words`` and ``head`` are the durable state (they survive a crash
-    like the decode state's block tables do); the engine mirrors
-    ``head`` into its dedicated allocator root so the mark pass starts
-    from it.
+    ``words`` and ``heads`` are the durable state (they survive a crash
+    like the decode state's block tables do); the engine mirrors every
+    head into its own dedicated allocator root so the mark pass starts
+    from all of them.  ``n_buckets > 1`` hash-buckets the chains by the
+    48-bit key (device mirror of the host ``PrefixIndex`` bucketing):
+    ``lookup``-style walks — ``remove``, the split predecessor search —
+    touch O(records / n_buckets) rows, and each bucket's head swings
+    independently.  The single-bucket default is the historical one-chain
+    layout, bit-for-bit.
     """
 
-    def __init__(self, num_slots: int):
+    def __init__(self, num_slots: int, n_buckets: int = 1):
+        if n_buckets < 1:
+            raise ValueError(f"n_buckets {n_buckets} < 1")
         self.words = np.full((num_slots, REC_FIELDS), -1, np.int64)
-        self.head = -1
+        self.n_buckets = int(n_buckets)
+        self.heads = [-1] * self.n_buckets
+
+    def _bucket(self, key: int) -> int:
+        return int(key) % self.n_buckets
+
+    @property
+    def head(self) -> int:
+        """Bucket 0's chain head (the whole chain when unbucketed)."""
+        return self.heads[0]
+
+    @head.setter
+    def head(self, rec: int) -> None:
+        self.heads[0] = int(rec)
 
     # ---------------------------------------------------------------- reads
     def _decode(self, rec: int) -> StoreRecord:
@@ -127,16 +147,20 @@ class PrefixStore:
             parent=int(w[F_PARENT]), start_page=int(w[F_START]),
             fprint=int(w[F_FPRINT]))
 
-    def walk(self) -> list[StoreRecord]:
-        """Decode the chain from ``head`` (cycle-safe); torn records are
-        still yielded — recovery prunes them by ``seal_ok`` mask."""
+    def _walk_bucket(self, b: int) -> list[StoreRecord]:
         out: list[StoreRecord] = []
-        rec, seen = self.head, set()
+        rec, seen = self.heads[b], set()
         while rec >= 0 and rec not in seen:
             seen.add(rec)
             out.append(self._decode(rec))
             rec = int(self.words[rec][F_NEXT])
         return out
+
+    def walk(self) -> list[StoreRecord]:
+        """Decode every chain, bucket 0 first (cycle-safe); torn records
+        are still yielded — recovery prunes them by ``seal_ok`` mask."""
+        return [r for b in range(self.n_buckets)
+                for r in self._walk_bucket(b)]
 
     def seal_matches(self, rec_off: int) -> bool:
         """True iff the record's seal checksum matches its fields."""
@@ -205,11 +229,19 @@ class PrefixStore:
         """
         if not payloads:
             return
-        offs = [int(p["rec_off"]) for p in payloads]
-        for i, p in enumerate(payloads):
-            nxt = offs[i + 1] if i + 1 < len(offs) else self.head
-            self._fill(offs[i], nxt, p)
-        self.head = offs[0]
+        # partition by bucket; every record's fields land before any
+        # head swings (the device analogue of the host's batched
+        # ``set_roots`` swing after the shared seal fence)
+        groups: dict[int, list[dict]] = {}
+        for p in payloads:
+            groups.setdefault(self._bucket(p["key"]), []).append(p)
+        for b, grp in groups.items():
+            offs = [int(p["rec_off"]) for p in grp]
+            for i, p in enumerate(grp):
+                nxt = offs[i + 1] if i + 1 < len(offs) else self.heads[b]
+                self._fill(offs[i], nxt, p)
+        for b, grp in groups.items():
+            self.heads[b] = int(grp[0]["rec_off"])
 
     def split(self, old_off: int, m_payload: dict, x_payload: dict) -> None:
         """Replace record ``old_off`` with the pair M + X' in its chain
@@ -224,20 +256,48 @@ class PrefixStore:
         old_off = int(old_off)
         m_off = int(m_payload["rec_off"])
         x_off = int(x_payload["rec_off"])
+        ob = self._bucket(self.words[old_off][F_KEY])
+        mb = self._bucket(m_payload["key"])
+        xb = self._bucket(x_payload["key"])
+        if ob == mb == xb:
+            # all three share one chain (always true unbucketed): the
+            # historical single-splice replacement in place
+            old_next = int(self.words[old_off][F_NEXT])
+            self._fill(x_off, old_next, x_payload)
+            self._fill(m_off, x_off, m_payload)
+            prev = self._pred_in_bucket(ob, old_off)
+            if prev < 0:
+                self.heads[ob] = m_off
+            else:
+                self.words[prev][F_NEXT] = m_off
+            self.words[old_off] = -1
+            return
+        # the halves hash to other buckets: publish both at their own
+        # bucket heads (fields before swing, X' before M so M fronts a
+        # shared chain), then unlink the old record from its chain —
+        # the predecessor search runs after the inserts, so a new head
+        # in the old record's bucket is accounted for
+        self._fill(x_off, self.heads[xb], x_payload)
+        self.heads[xb] = x_off
+        self._fill(m_off, self.heads[mb], m_payload)
+        self.heads[mb] = m_off
+        prev = self._pred_in_bucket(ob, old_off)
         old_next = int(self.words[old_off][F_NEXT])
-        self._fill(x_off, old_next, x_payload)
-        self._fill(m_off, x_off, m_payload)
-        prev, rec, seen = -1, self.head, set()
-        while rec >= 0 and rec not in seen and rec != old_off:
+        if prev < 0:
+            self.heads[ob] = old_next
+        else:
+            self.words[prev][F_NEXT] = old_next
+        self.words[old_off] = -1
+
+    def _pred_in_bucket(self, b: int, target: int) -> int:
+        """Chain predecessor of ``target`` in bucket ``b`` (-1 = head)."""
+        prev, rec, seen = -1, self.heads[b], set()
+        while rec >= 0 and rec not in seen and rec != target:
             seen.add(rec)
             prev, rec = rec, int(self.words[rec][F_NEXT])
-        if rec != old_off:
-            raise ValueError(f"split: record {old_off} not on the chain")
-        if prev < 0:
-            self.head = m_off
-        else:
-            self.words[prev][F_NEXT] = m_off
-        self.words[old_off] = -1
+        if rec != target:
+            raise ValueError(f"split: record {target} not on the chain")
+        return prev
 
     def reparent(self, child_off: int, new_parent: int) -> None:
         """Re-point a child record's parent field (unsealed, like host
@@ -246,8 +306,10 @@ class PrefixStore:
 
     def remove(self, key: int) -> StoreRecord | None:
         """Unlink the record for ``key``; returns it (the caller releases
-        the span lease and frees the record block *after* the unlink)."""
-        prev, rec, seen = -1, self.head, set()
+        the span lease and frees the record block *after* the unlink).
+        Only the key's bucket chain is walked."""
+        b = self._bucket(key)
+        prev, rec, seen = -1, self.heads[b], set()
         while rec >= 0 and rec not in seen:
             seen.add(rec)
             w = self.words[rec]
@@ -255,7 +317,7 @@ class PrefixStore:
             if int(w[F_KEY]) == int(key):
                 out = self._decode(rec)
                 if prev < 0:
-                    self.head = nxt
+                    self.heads[b] = nxt
                 else:
                     self.words[prev][F_NEXT] = nxt
                 self.words[rec] = -1
@@ -269,22 +331,29 @@ class PrefixStore:
         surviving records.
 
         ``live_mask`` is ``jax_recovery.live_record_mask(cfg, marked,
-        [r.off for r in walk()], seal_ok=...)`` — by construction an
-        unreachable record can only sit at the chain head, but pruning
-        the whole walk keeps a corrupt image from resurrecting stale
-        entries.  Surviving records whose parent was pruned keep their
-        (now dangling) parent field; the engine's recoverability pass
+        [r.off for r in walk()], seal_ok=...)`` — aligned with ``walk``
+        order, i.e. bucket by bucket.  By construction an unreachable
+        record can only sit at a chain head, but pruning the whole walk
+        keeps a corrupt image from resurrecting stale entries.
+        Surviving records whose parent was pruned keep their (now
+        dangling) parent field; the engine's recoverability pass
         re-parents or drops them.
         """
-        recs = self.walk()
         live = np.asarray(live_mask, bool)
-        keep = [r for r, ok in zip(recs, live) if ok]
-        for r, ok in zip(recs, live):
-            if not ok:
-                self.words[r.off] = -1
-        self.head = keep[0].off if keep else -1
-        for a, b in zip(keep, keep[1:]):
-            self.words[a.off][F_NEXT] = b.off
-        if keep:
-            self.words[keep[-1].off][F_NEXT] = -1
-        return keep
+        keep_all: list[StoreRecord] = []
+        i = 0
+        for b in range(self.n_buckets):
+            recs = self._walk_bucket(b)
+            flags = live[i:i + len(recs)]
+            i += len(recs)
+            keep = [r for r, ok in zip(recs, flags) if ok]
+            for r, ok in zip(recs, flags):
+                if not ok:
+                    self.words[r.off] = -1
+            self.heads[b] = keep[0].off if keep else -1
+            for a, c in zip(keep, keep[1:]):
+                self.words[a.off][F_NEXT] = c.off
+            if keep:
+                self.words[keep[-1].off][F_NEXT] = -1
+            keep_all.extend(keep)
+        return keep_all

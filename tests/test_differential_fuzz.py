@@ -38,6 +38,7 @@ DEV_CFG = ja.ArenaConfig(num_sbs=N_SBS, sb_words=DEV_SB_WORDS,
 
 _alloc_large = jax.jit(functools.partial(ja.alloc_large, cfg=DEV_CFG))
 _free_large = jax.jit(functools.partial(ja.free_large, cfg=DEV_CFG))
+_scan_fit = jax.jit(functools.partial(ja.scan_best_fit, cfg=DEV_CFG))
 
 
 def host_occupancy(r: Ralloc) -> tuple[int, list[str]]:
@@ -91,11 +92,14 @@ def replay(ops):
             dst = _free_large(state=dst, off=jnp.int32(off))
         else:
             ptr = r.malloc(k * SB_SIZE - 256)
+            has, _, first = _scan_fit(state=dst, nsb=jnp.int32(k))
             dst, off = _alloc_large(state=dst,
                                     nwords=jnp.int32(k * DEV_SB_WORDS - 4))
             off = int(off)
             assert (ptr is None) == (off < 0), \
                 f"serveability drift on a {k}-sb request"
+            if bool(has):        # bucket index == retired suffix-min scan
+                assert off == int(first) * DEV_SB_WORDS, "index/scan drift"
             if ptr is None:
                 continue
             assert r.heap.sb_of(ptr) == off // DEV_SB_WORDS, \
@@ -110,6 +114,19 @@ def replay(ops):
 def assert_free_runs_agree(r, dst):
     host_runs = recovery.free_superblock_runs(r)
     assert host_runs == ja.free_runs(dst, DEV_CFG), "free-run drift"
+    # indexed path: the incrementally-maintained run table the device
+    # places through must equal a from-scratch recompute of the free set
+    # it mirrors — at every lock-step checkpoint, including post-recovery
+    ids = jnp.arange(DEV_CFG.num_sbs, dtype=jnp.int32)
+    free = (dst.sb_class == ja.FREE_CLS) & (ids < dst.used_sbs)
+    rl, rs = ja.free_run_table(free, DEV_CFG.num_sbs)
+    np.testing.assert_array_equal(np.asarray(dst.run_len), np.asarray(rl),
+                                  "run_len drift")
+    np.testing.assert_array_equal(np.asarray(dst.run_start), np.asarray(rs),
+                                  "run_start drift")
+    np.testing.assert_array_equal(np.asarray(dst.run_bucket_min),
+                                  np.asarray(ja._bucket_mins(DEV_CFG, rl)),
+                                  "bucket-min drift")
 
 
 @settings(max_examples=12, deadline=None)

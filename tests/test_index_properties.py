@@ -1,0 +1,221 @@
+"""Property tests for the transient placement indexes (device free-run
+table + host hash-bucketed prefix chains).
+
+Both indexes are *transient* — pure functions of persistent state that
+recovery rebuilds — so each has a from-scratch oracle the incremental
+maintenance must match exactly:
+
+* device: after ANY op sequence, ``(run_len, run_start, run_bucket_min)``
+  equals a recompute via ``free_run_table`` from ``(sb_class, used_sbs)``,
+  and ``alloc_large`` places exactly where the retired suffix-min scan
+  (``scan_best_fit``) would;
+* host: bucketed ``PrefixIndex`` lookup agrees with a naive walk over
+  every record and with a model dict, under publish/remove/dup-key mixes.
+
+Deep variants (longer sequences, more examples) run under
+``pytest -m slow``.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                      # container without dev deps
+    from _hypothesis_fallback import given, settings, strategies as st
+
+from repro.core import jax_alloc as ja
+from repro.core import jax_recovery as jr
+from repro.core.layout import SB_SIZE
+from repro.core.prefix_index import PrefixIndex, hash_tokens, iter_records
+from repro.core.ralloc import Ralloc
+
+MB = 1 << 20
+
+# run_buckets=4 with num_sbs=24: runs of length >= 4 land in the overflow
+# bucket, so the masked-reduce fallback path gets constant exercise
+CFG = ja.ArenaConfig(num_sbs=24, sb_words=64, class_words=(8,),
+                     cache_cap=16, expand_sbs=2, run_buckets=4)
+
+ALLOC = jax.jit(functools.partial(ja.alloc, cfg=CFG, cls=0))
+FREE = jax.jit(functools.partial(ja.free, cfg=CFG, cls=0))
+ALLOC_LARGE = jax.jit(functools.partial(ja.alloc_large, cfg=CFG))
+FREE_LARGE = jax.jit(functools.partial(ja.free_large, cfg=CFG))
+TRIM_LARGE = jax.jit(functools.partial(ja.trim_large, cfg=CFG))
+SCAN = jax.jit(functools.partial(ja.scan_best_fit, cfg=CFG))
+
+
+# ------------------------------------------------------------------ oracles
+def assert_index_matches(stt, cfg=CFG):
+    """Incremental run index == from-scratch recompute off persistent
+    fields (the free-set invariant: free <=> FREE_CLS below used_sbs)."""
+    ids = jnp.arange(cfg.num_sbs, dtype=jnp.int32)
+    free = (stt.sb_class == ja.FREE_CLS) & (ids < stt.used_sbs)
+    rl, rs = ja.free_run_table(free, cfg.num_sbs)
+    np.testing.assert_array_equal(np.asarray(stt.run_len), np.asarray(rl))
+    np.testing.assert_array_equal(np.asarray(stt.run_start), np.asarray(rs))
+    np.testing.assert_array_equal(np.asarray(stt.run_bucket_min),
+                                  np.asarray(ja._bucket_mins(cfg, rl)))
+
+
+def run_device_ops(ops, check_every=True):
+    """Interpret (kind, a, b) tuples as allocator ops, asserting the
+    index oracle and the ``scan_best_fit`` placement oracle throughout."""
+    stt = ja.init_state(CFG)
+    small: list[int] = []
+    spans: dict[int, int] = {}             # head word off -> held sbs
+    for kind, a, b in ops:
+        kind %= 5
+        if kind == 0:                                       # small alloc
+            need = jnp.asarray([(a >> i) & 1 for i in range(8)], bool)
+            stt, offs = ALLOC(state=stt, need=need)
+            small += [int(o) for o in np.asarray(offs) if o >= 0]
+        elif kind == 1 and small:                           # small free
+            k = min(len(small), 1 + a % 8)
+            sel = [small.pop(b % len(small)) for _ in range(k)]
+            offs = np.full(8, -1, np.int64)
+            offs[:k] = sel
+            stt = FREE(state=stt, offs=jnp.asarray(offs, jnp.int32),
+                       mask=jnp.asarray(offs >= 0))
+        elif kind == 2:                                     # large alloc
+            nsb = 1 + a % 6
+            nwords = nsb * CFG.sb_words - (b % CFG.sb_words)
+            has, _, first = (bool(v) if i == 0 else int(v)
+                             for i, v in enumerate(SCAN(state=stt, nsb=nsb)))
+            wm_ok = int(stt.used_sbs) + nsb <= CFG.num_sbs
+            stt, off = ALLOC_LARGE(state=stt, nwords=jnp.int32(nwords))
+            off = int(off)
+            if has:                  # indexed placement == scan placement
+                assert off == first * CFG.sb_words
+            elif wm_ok:
+                assert off == int(np.asarray(stt.used_sbs) - nsb) \
+                    * CFG.sb_words
+            else:
+                assert off == -1
+            if off >= 0:
+                spans[off] = nsb
+        elif kind == 3 and spans:                           # large free
+            off = sorted(spans)[a % len(spans)]
+            spans.pop(off)
+            stt = FREE_LARGE(state=stt, off=jnp.int32(off),
+                             n_sbs=jnp.int32(-1))
+        elif kind == 4 and spans:                           # trim
+            cand = [o for o in sorted(spans) if spans[o] > 1]
+            if cand:
+                off = cand[a % len(cand)]
+                n_keep = 1 + b % (spans[off] - 1)
+                stt, ok = TRIM_LARGE(state=stt, off=jnp.int32(off),
+                                     n_keep=jnp.int32(n_keep),
+                                     n_held=jnp.int32(spans[off]))
+                if bool(ok):
+                    spans[off] = n_keep
+        if check_every:
+            assert_index_matches(stt)
+    return stt, spans
+
+
+def recover_and_check(stt, spans):
+    """Crash-recover keeping every live span rooted; the swept state's
+    rebuilt index must satisfy the same oracle, and the next placement
+    must still match the scan."""
+    pers = ja.persistent_snapshot(stt)
+    roots = np.full((int(stt.roots.shape[0]),), -1, np.int32)
+    for i, off in enumerate(sorted(spans)[:roots.shape[0]]):
+        roots[i] = off
+    pers["roots"] = jnp.asarray(roots)
+    refs = np.full((jr.num_slots(CFG), 1), -1, np.int32)
+    st2, _ = jr.recover(CFG, pers, jnp.asarray(refs))
+    assert_index_matches(st2)
+    has, _, first = SCAN(state=st2, nsb=1)
+    st3, off = ALLOC_LARGE(state=st2, nwords=jnp.int32(CFG.sb_words))
+    if bool(has):
+        assert int(off) == int(first) * CFG.sb_words
+    assert_index_matches(st3)
+
+
+# --------------------------------------------- device run-index properties
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 2 ** 16), st.integers(0, 2 ** 16),
+                          st.integers(0, 2 ** 16)),
+                max_size=30))
+def test_run_index_matches_recompute(ops):
+    stt, spans = run_device_ops(ops, check_every=True)
+    recover_and_check(stt, spans)
+
+
+@pytest.mark.slow
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 2 ** 16), st.integers(0, 2 ** 16),
+                          st.integers(0, 2 ** 16)),
+                min_size=20, max_size=120))
+def test_run_index_matches_recompute_deep(ops):
+    stt, spans = run_device_ops(ops, check_every=False)
+    assert_index_matches(stt)
+    recover_and_check(stt, spans)
+
+
+# ------------------------------------------- host bucketed-chain properties
+def run_prefix_ops(ops, n_buckets):
+    r = Ralloc(None, 8 * MB, expand_sbs=1)
+    idx = PrefixIndex(r, n_buckets=n_buckets)
+    spans = [r.malloc(SB_SIZE // 2) for _ in range(4)]
+    model: dict[int, list[int]] = {}       # key -> span stack, newest last
+    for kind, a in ops:
+        key = hash_tokens([a % 12])        # tiny key space: collisions +
+        kind %= 3                          # duplicate keys across buckets
+        if kind == 0:
+            span = spans[a % len(spans)]
+            rec = idx.publish(key, span, n_pages=1 + a % 7, lease_sbs=1)
+            if rec is not None:
+                model.setdefault(key, []).append(span)
+        elif kind == 1:
+            removed = idx.remove(key)
+            assert removed == bool(model.get(key))
+            if removed:
+                model[key].pop()           # remove unlinks newest first
+        else:
+            before = idx.walk_steps
+            rec = idx.lookup(key)
+            if model.get(key):
+                assert rec is not None and rec.span == model[key][-1]
+            else:
+                assert rec is None
+            # bucketed walk never visits more than its own chain
+            chain = len(list(iter_records(r, idx._slot_of(key))))
+            assert idx.walk_steps - before <= chain
+    # every record hangs off the root its key hashes to
+    for s in idx.slots:
+        for rec in iter_records(r, s):
+            assert idx._slot_of(rec.key) == s
+    # final sweep: bucketed lookup == naive walk over ALL records
+    naive: dict[int, object] = {}
+    for rec in idx.records():              # bucket-major, newest first
+        naive.setdefault(rec.key, rec)
+    for k in set(naive) | set(model):
+        got = idx.lookup(k)
+        want = naive.get(k)
+        assert (got is None) == (want is None)
+        if got is not None:
+            assert got.ptr == want.ptr and got.span == want.span
+    assert sum(len(v) for v in model.values()) == len(idx.records())
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 2 ** 16), st.integers(0, 2 ** 16)),
+                max_size=40),
+       st.sampled_from([1, 3, 4]))
+def test_bucketed_lookup_matches_naive_walk(ops, n_buckets):
+    run_prefix_ops(ops, n_buckets)
+
+
+@pytest.mark.slow
+@settings(max_examples=80, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 2 ** 16), st.integers(0, 2 ** 16)),
+                min_size=30, max_size=150),
+       st.sampled_from([2, 5, 8, 16]))
+def test_bucketed_lookup_matches_naive_walk_deep(ops, n_buckets):
+    run_prefix_ops(ops, n_buckets)

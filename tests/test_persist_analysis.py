@@ -280,6 +280,20 @@ def test_static_per001_unflushed_persistent_write():
     assert check_source("x.py", val) == []
 
 
+def test_static_trn001_transient_index_never_flushed():
+    # naming a free-run index array in any flush-like call is the bug:
+    # the index is transient, rebuilt by recovery's sweep
+    bad = "def g(mem, st):\n    mem.flush(st.run_bucket_min)\n"
+    assert [f.code for f in check_source("x.py", bad)] == ["TRN001"]
+    bad_kw = "def g(mem, st):\n    mem.flush_range(base, n=st.run_len)\n"
+    assert [f.code for f in check_source("x.py", bad_kw)] == ["TRN001"]
+    # reading/maintaining the arrays outside persistence calls is fine
+    ok = ("def g(st):\n"
+          "    rl = st.run_len + 1\n"
+          "    return rl, st.run_start, st.run_bucket_min\n")
+    assert check_source("x.py", ok) == []
+
+
 def test_static_lint_current_tree_is_clean():
     findings = check_tree(REPO / "src" / "repro")
     assert findings == [], "\n".join(map(str, findings))

@@ -8,6 +8,8 @@ Checks (see ``repro.analysis.static_checks``):
   SHD001  no jax.sharding.AxisType / shard_map outside src/repro/runtime/
   PER001  persistent-field writes flushed in-function or annotated
           `# persist: deferred`
+  TRN001  transient free-run index arrays (run_len/run_start/
+          run_bucket_min) never named in a flush-like call
 
 Exits 0 iff no findings.
 """
