@@ -21,6 +21,8 @@ import argparse
 import sys
 import time
 
+from repro import obs
+
 from . import apps, recovery_bench, workloads
 from .workloads import KINDS, fresh
 
@@ -357,9 +359,18 @@ def run_smoke(names: list[str], seed: int,
     (``benchmarks/baselines/smoke.json``): every round present in both
     must reproduce its baseline ``fences_per_request`` within ±20% —
     the gate that catches a silently reopened fence pair (regression)
-    or an unrecorded improvement (update the baseline to claim it)."""
+    or an unrecorded improvement (update the baseline to claim it).
+
+    Each workload round additionally runs under a
+    :class:`repro.obs.WasteMonitor` (live persist-lint waste diagnosis:
+    ``redundant_flushes`` / ``empty_fences``, both gated at ~0) and
+    embeds the full ``obs.snapshot()`` as its ``metrics`` field; with
+    ``json_path`` the per-round snapshots + Chrome-trace span events
+    also land in a ``<stem>-metrics.json`` sibling (the CI artifact
+    ``tools/dump_metrics.py`` renders)."""
     failed = 0
     results: list[dict] = []
+    metrics_rounds: list[dict] = []
 
     def record(name, kind, ok, seconds, error=None, **extra):
         nonlocal failed
@@ -375,7 +386,14 @@ def run_smoke(names: list[str], seed: int,
             # the JSON rows stay distinguishable in the artifact
             a = fresh(kind.split("+", 1)[0], mb=64)
             meter = _meter_requests(a)
-            a.mem.reset_counters()
+            # counter resets route through the registry: the heap
+            # registered its n_flush/n_fence/... as named sources, and
+            # obs.reset raises UnknownMetric on a name nothing owns —
+            # the old blind a.mem.reset_counters() could silently reset
+            # the wrong (or no) heap after a refactor
+            obs.reset_all()
+            obs.reset("heap.flush", "heap.fence", "heap.cas", "heap.drain")
+            monitor = obs.attach_waste_monitor(a.mem)
             t0 = time.perf_counter()
             try:
                 fn(a, seed)
@@ -386,14 +404,26 @@ def run_smoke(names: list[str], seed: int,
             else:
                 c = a.counters
                 fpr = (c["fence"] / meter["n"]) if meter["n"] else 0.0
+                diag = monitor.diag
+                snap = obs.snapshot()
+                metrics_rounds.append({
+                    "workload": name, "kind": kind, "snapshot": snap,
+                    "traceEvents":
+                        obs.chrome_trace()["traceEvents"]})
                 record(name, kind, True, time.perf_counter() - t0,
                        n_requests=meter["n"], n_flush=c["flush"],
                        n_fence=c["fence"],
-                       fences_per_request=round(fpr, 3))
+                       fences_per_request=round(fpr, 3),
+                       redundant_flushes=diag["redundant_flushes"],
+                       empty_fences=diag["empty_fences"],
+                       metrics=snap)
                 print(f"smoke[{name},{kind}] ok "
                       f"({time.perf_counter() - t0:.2f}s, "
-                      f"{fpr:.2f} fences/request)", flush=True)
+                      f"{fpr:.2f} fences/request, "
+                      f"{diag['redundant_flushes']} redundant flushes, "
+                      f"{diag['empty_fences']} empty fences)", flush=True)
             finally:
+                a.mem.tracer = None
                 a.close()
     if "sharedprompt" in names:
         # sanity: ralloc's sharedprompt really shares (lease plumbing alive)
@@ -553,10 +583,17 @@ def run_smoke(names: list[str], seed: int,
                   f"benchmarks/baselines/smoke.json updated", flush=True)
     if json_path:
         import json
+        import os
         with open(json_path, "w") as f:
             json.dump({"profile": "smoke", "seed": seed,
                        "failed": failed, "results": results}, f, indent=2)
         print(f"# smoke results written to {json_path}", flush=True)
+        stem, ext = os.path.splitext(json_path)
+        metrics_path = f"{stem}-metrics{ext or '.json'}"
+        with open(metrics_path, "w") as f:
+            json.dump({"profile": "smoke", "seed": seed,
+                       "rounds": metrics_rounds}, f, indent=2)
+        print(f"# per-round metrics written to {metrics_path}", flush=True)
     return 1 if failed else 0
 
 

@@ -14,10 +14,17 @@ import random
 import threading
 import time
 
+from repro import obs
 from repro.core.baselines import make_allocator
 
 FLUSH_NS, FENCE_NS = 150, 100
 KINDS = ("ralloc", "lrmalloc", "makalu_lite", "pmdk_lite")
+
+# Per-request latency distributions for the serving-shaped workloads
+# (cached at import; see repro.obs conventions).  One observation per
+# serve — the smoke snapshot and EXPERIMENTS.md report the percentiles.
+_OBS_CHURN_REQ = obs.histogram("servingchurn.request_seconds")
+_OBS_HIER_REQ = obs.histogram("hierprompt.request_seconds")
 
 
 def fresh(kind: str, mb: int = 256):
@@ -415,6 +422,7 @@ def servingchurn(alloc, lanes=8, rounds=6, group_commit=1, hold_rounds=2,
     for it in range(rounds):
         keys, heads, items = [], [], []
         for lane in range(lanes):
+            t_req = time.perf_counter()
             head = alloc.malloc(size)
             assert head is not None
             for j in range(span_k):
@@ -425,6 +433,7 @@ def servingchurn(alloc, lanes=8, rounds=6, group_commit=1, hold_rounds=2,
             heads.append(head)
             items.append((key, head, span_k, span_k))
             requests += 1
+            _OBS_CHURN_REQ.observe(time.perf_counter() - t_req)
         # publish the generation (the flushed prefill stamps become
         # durable under the publish protocol's own content fence)
         if gc > 1:
@@ -507,6 +516,7 @@ def hierprompt(alloc, tenants=3, reqs=4, sys_pages=4, mid_pages=2,
                     for _ in range(uniq_pages * page)]
             toks = shared + uniq
             requests += 1
+            t_req = time.perf_counter()
             node, k = trie.match(shared) if trie is not None else (None, 0)
             if node is not None and k == shared_pages:
                 # partial hit: lease ONLY the shared superblocks, decode
@@ -518,6 +528,7 @@ def hierprompt(alloc, tenants=3, reqs=4, sys_pages=4, mid_pages=2,
                 new_sbs += uniq_pages
                 alloc.free(suffix)
                 alloc.span_release(node.span, node.lease_sbs)
+                _OBS_HIER_REQ.observe(time.perf_counter() - t_req)
                 continue
             # miss (first request of a tenant, or the flat baseline's
             # every request): reserve + prefill the FULL prompt span
@@ -535,6 +546,7 @@ def hierprompt(alloc, tenants=3, reqs=4, sys_pages=4, mid_pages=2,
             # the publisher finishes short: the published prefix lease
             # pins the shared superblocks, the decode tail frees here
             alloc.free(head)
+            _OBS_HIER_REQ.observe(time.perf_counter() - t_req)
     dt = time.perf_counter() - t0
     fences = r.mem.n_fence - fence0
     # teardown outside the timed region (eviction cost is servingchurn's

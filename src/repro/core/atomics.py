@@ -63,6 +63,11 @@ class NVMArray:
         self.n_flush = 0
         self.n_fence = 0
         self.n_cas = 0
+        self.n_drain = 0
+        # clwb issued since the last sfence/drain?  A fence with no
+        # intervening flush commits nothing (nothing is scheduled), so
+        # callers at persist boundaries may elide it when this is False.
+        self._flushed_since_fence = False
         if sim:
             self._cache: dict[int, dict[int, int]] = {}   # line -> {word: value}
             self._scheduled: set[int] = set()             # flushed, await fence
@@ -114,6 +119,7 @@ class NVMArray:
         if self.tracer is not None:
             self.tracer.record("flush", idx)
         self.n_flush += 1
+        self._flushed_since_fence = True
         if self.sim:
             self._scheduled.add(self._line(idx))
         if self.flush_ns:
@@ -124,12 +130,20 @@ class NVMArray:
         if self.tracer is not None:
             self.tracer.record("fence")
         self.n_fence += 1
+        self._flushed_since_fence = False
         if self.sim:
             for line_id in list(self._scheduled):
                 self._writeback(line_id)
             self._scheduled.clear()
         if self.fence_ns:
             self._spin(self.fence_ns)
+
+    @property
+    def flush_pending(self) -> bool:
+        """True iff a clwb was issued since the last sfence/drain/crash.
+        When False, an sfence would commit nothing — the strict model
+        has no scheduled lines — so a persist boundary may skip it."""
+        return self._flushed_since_fence
 
     @staticmethod
     def _spin(ns: int) -> None:
@@ -162,6 +176,7 @@ class NVMArray:
         """Full-system crash: every non-durable line is lost."""
         if self.tracer is not None:
             self.tracer.record("crash")
+        self._flushed_since_fence = False
         if self.sim:
             self._cache.clear()
             self._scheduled.clear()
@@ -170,6 +185,8 @@ class NVMArray:
         """Clean shutdown: write back everything (implicit eventual WB)."""
         if self.tracer is not None:
             self.tracer.record("drain")
+        self.n_drain += 1
+        self._flushed_since_fence = False
         if self.sim:
             for line_id in list(self._cache.keys()):
                 self._writeback(line_id)
@@ -197,7 +214,7 @@ class NVMArray:
             return old
 
     def reset_counters(self) -> None:
-        self.n_flush = self.n_fence = self.n_cas = 0
+        self.n_flush = self.n_fence = self.n_cas = self.n_drain = 0
 
     # -- semantic trace markers ------------------------------------------------
     def note(self, label: str, **info) -> None:

@@ -21,8 +21,9 @@ import os
 import numpy as np
 
 from . import layout
+from .. import obs
 from ..analysis.faults import is_suppressed
-from .atomics import NVMArray
+from .atomics import CACHELINE_WORDS, NVMArray
 from .layout import HeapConfig, MAGIC
 
 
@@ -49,6 +50,19 @@ class PersistentHeap:
         self.mem = NVMArray(config.total_words, sim=config.sim_nvm,
                             seed=config.seed, backing=backing,
                             flush_ns=config.flush_ns, fence_ns=config.fence_ns)
+        # Unify the persistence-cost counters behind the obs registry:
+        # the newest heap owns the ``heap.*`` names, reads come straight
+        # off the live NVMArray at snapshot time, and resets route
+        # through ``obs.reset`` (which raises on a name no heap
+        # registered — no more silent ``a.mem.reset_counters()`` skews).
+        for attr, name in (("n_flush", "heap.flush"),
+                           ("n_fence", "heap.fence"),
+                           ("n_cas", "heap.cas"),
+                           ("n_drain", "heap.drain")):
+            obs.register_source(
+                name,
+                read=(lambda m=self.mem, a=attr: getattr(m, a)),
+                reset=(lambda m=self.mem, a=attr: setattr(m, a, 0)))
 
     # ------------------------------------------------------------------ init
     def init(self) -> bool:
@@ -62,9 +76,12 @@ class PersistentHeap:
             m.write(layout.M_USED_SBS, 0)
             for i in range(layout.MAX_ROOTS):
                 m.write(layout.M_ROOTS + i, 0)
+            seen_lines = set()
             for w in (layout.M_MAGIC, layout.M_SB_REGION_WORDS,
                       layout.M_USED_SBS, layout.M_ROOTS):
-                m.flush(w)
+                if w // CACHELINE_WORDS not in seen_lines:
+                    seen_lines.add(w // CACHELINE_WORDS)
+                    m.flush(w)
             m.fence()
         if fresh:
             # Transient list heads start empty on a fresh heap.  On a *clean*
@@ -128,8 +145,15 @@ class PersistentHeap:
                    else block_word - self.config.sb_base + 1)
             self.mem.write(layout.M_ROOTS + i, off)
         if not is_suppressed("heap.set_root.persist"):
+            # one clwb per dirty *line*, not per slot — adjacent root
+            # slots share cache lines and a second flush of an already
+            # scheduled line is pure waste (persist-lint: redundant)
+            seen_lines = set()
             for i, _ in pairs:
-                self.mem.flush(layout.M_ROOTS + i)
+                w = layout.M_ROOTS + i
+                if w // CACHELINE_WORDS not in seen_lines:
+                    seen_lines.add(w // CACHELINE_WORDS)
+                    self.mem.flush(w)
             self.mem.fence()
 
     def get_root(self, i: int) -> int | None:

@@ -354,8 +354,11 @@ class PrefixIndex:
         slot = self._slot_of(key)
         r.span_acquire(span_ptr, lease_sbs)
         # persist boundary: published contents (the application flushed
-        # them) become durable before the index can claim they exist
-        r.fence()
+        # them) become durable before the index can claim they exist.
+        # Elided when nothing was flushed since the last fence — e.g.
+        # the span allocation itself just fenced — because an sfence
+        # with no scheduled lines commits nothing.
+        r.fence_if_pending()
         rec = r.malloc(REC_BYTES)
         if rec is None:
             r.span_release(span_ptr, lease_sbs)
@@ -444,15 +447,15 @@ class PrefixIndex:
                                          key48)
                 seals.append((rec, key48 | (cksum << 48)))
         if not is_suppressed("prefix_index.publish_batch.fields_persist"):
-            for rec, _ in batch:
-                r.flush_range(rec, REC_WORDS)
+            # adjacent 40-byte records share cache lines: one clwb per
+            # dirty line across the whole batch, not one per record
+            r.flush_ranges((rec, REC_WORDS) for rec, _ in batch)
             r.fence()                  # the ONE fence N field groups share
         r.mem.note("batch_seal", records=[rec for rec, _ in batch])
         for rec, seal in seals:
             r.write_word(rec + 2, seal)
         if not is_suppressed("prefix_index.publish_batch.records_persist"):
-            for rec, _ in seals:
-                r.flush_range(rec + 2, 1)
+            r.flush_ranges((rec + 2, 1) for rec, _ in seals)
             r.fence()                  # the ONE fence N sealed records share
         for slot, grp in groups.items():
             r.mem.note("batch_root", records=[rec for rec, _ in grp],
@@ -510,8 +513,7 @@ class PrefixIndex:
             return 0
         if dirty and not is_suppressed(
                 "prefix_index.remove_batch.unlink_persist"):
-            for w in dirty:
-                r.flush_range(w, 1)
+            r.flush_ranges((w, 1) for w in dirty)
             r.fence()                  # the ONE fence N unlinks share
         if swings:
             r.set_roots(swings, TYPENAME)          # ≤ 1 swing fence total

@@ -293,8 +293,8 @@ def prune_torn_nodes(r, slot: int = PREFIX_TRIE_ROOT) -> int:
                     else pp.encode(ptr + 1, new_parent))
         dirty.append(ptr + 1)
     if dirty:
-        for w in dirty:
-            r.mem.flush(w)
+        for line in sorted({w // 8 for w in dirty}):
+            r.mem.flush(line * 8)  # once per dirty line, not per word
         r.mem.fence()
     return pruned
 
@@ -503,8 +503,9 @@ class PrefixTrie:
         for nd in news:
             r.span_acquire(nd.span, nd.lease_sbs)
         # content fence: the published pages' application flushes become
-        # durable before the trie can claim the prefix exists
-        r.fence()
+        # durable before the trie can claim the prefix exists (elided
+        # when no flush is pending — a bare sfence commits nothing)
+        r.fence_if_pending()
         recs = [r.malloc(REC_BYTES) for _ in news]
         if any(rec is None for rec in recs):
             for rec in recs:
@@ -537,15 +538,13 @@ class PrefixTrie:
                                      nd.lease_sbs, fp, nd.key)
             seals.append((rec, nd.key | (cksum << 48)))
         if not is_suppressed("prefix_trie.commit.fields_persist"):
-            for rec in recs:
-                r.flush_range(rec, REC_WORDS)
+            r.flush_ranges((rec, REC_WORDS) for rec in recs)
             r.fence()              # the ONE fence N field groups share
         r.mem.note("trie_seal", records=list(recs))
         for rec, seal in seals:
             r.write_word(rec + 2, seal)
         if not is_suppressed("prefix_trie.commit.records_persist"):
-            for rec, _ in seals:
-                r.flush_range(rec + 2, 1)
+            r.flush_ranges((rec + 2, 1) for rec, _ in seals)
             r.fence()              # the ONE fence N sealed records share
         r.mem.note("trie_attach", records=list(recs), slot=self.slot)
         r.set_root(self.slot, recs[0], TYPENAME)   # single swing (f+f)
@@ -579,7 +578,7 @@ class PrefixTrie:
         # record's lease drops at the end (net: the span gains M's)
         r.span_acquire(node.span, m_lease)
         r.span_acquire(node.span, node.lease_sbs)
-        r.fence()
+        r.fence_if_pending()           # content boundary, as in _commit_new
         m_rec = r.malloc(REC_BYTES)
         x_rec = r.malloc(REC_BYTES) if m_rec is not None else None
         if m_rec is None or x_rec is None:
@@ -618,8 +617,7 @@ class PrefixTrie:
         r.write_word(x_rec + 6, node.lease_sbs)
         r.write_word(x_rec + 7, x_fp)
         if not is_suppressed("prefix_trie.commit.fields_persist"):
-            r.flush_range(m_rec, REC_WORDS)
-            r.flush_range(x_rec, REC_WORDS)
+            r.flush_ranges([(m_rec, REC_WORDS), (x_rec, REC_WORDS)])
             r.fence()              # both halves' fields: ONE fence
         r.mem.note("trie_seal", records=[m_rec, x_rec])
         m_ck = _record_checksum(m_span_word, pages, node.start_page,
@@ -629,8 +627,7 @@ class PrefixTrie:
         r.write_word(m_rec + 2, m_key | (m_ck << 48))
         r.write_word(x_rec + 2, node.key | (x_ck << 48))
         if not is_suppressed("prefix_trie.commit.records_persist"):
-            r.flush_range(m_rec + 2, 1)
-            r.flush_range(x_rec + 2, 1)
+            r.flush_ranges([(m_rec + 2, 1), (x_rec + 2, 1)])
             r.fence()              # both seals: ONE fence
         r.mem.note("trie_split_relink", records=[m_rec, x_rec], old=old,
                    slot=self.slot)
@@ -651,8 +648,7 @@ class PrefixTrie:
             r.write_word(cp + 1, pp.encode(cp + 1, x_rec))
         if child_ptrs and not is_suppressed(
                 "prefix_trie.split.reparent_persist"):
-            for cp in child_ptrs:
-                r.flush_range(cp + 1, 1)
+            r.flush_ranges((cp + 1, 1) for cp in child_ptrs)
             r.fence()
         r.mem.note("trie_old_free", old=old, new=x_rec,
                    children=list(child_ptrs), slot=self.slot)

@@ -27,7 +27,9 @@ import math
 import threading
 
 from . import layout, recovery
+from .. import obs
 from ..analysis.faults import is_suppressed
+from .atomics import CACHELINE_WORDS
 from .filters import FilterRegistry, conservative_filter
 from .heap import PersistentHeap
 from .layout import (ANCHOR_NIL_AVAIL, D_ANCHOR, D_BLOCK_SIZE, D_NEXT_FREE,
@@ -40,6 +42,26 @@ from .spans import FreeRunIndex, RangeLeaseTable
 
 class OutOfMemory(Exception):
     pass
+
+
+# Allocator-path metrics (cached at import: the hot-path cost is one
+# bound call + enabled-flag branch; see repro.obs conventions).
+_OBS_SMALL = obs.counter("alloc.small")
+_OBS_LARGE = obs.counter("alloc.large")
+_OBS_TCACHE_HIT = obs.counter("alloc.tcache_hit")
+_OBS_TCACHE_MISS = obs.counter("alloc.tcache_miss")
+_OBS_REFILL_PARTIAL = obs.counter("alloc.refill_partial")
+_OBS_REFILL_FREE_SB = obs.counter("alloc.refill_free_sb")
+_OBS_REFILL_EXPAND = obs.counter("alloc.refill_expand")
+_OBS_GROWTH_SBS = obs.counter("alloc.watermark_growth_sbs")
+_OBS_PLACE_RESYNC = obs.counter("placement.resync")
+_OBS_PLACE_WATERMARK = obs.counter("placement.watermark")
+_OBS_SPAN_ACQUIRE = obs.counter("span.acquire")
+_OBS_SPAN_RELEASE = obs.counter("span.release")
+_OBS_SPAN_TRIM = obs.counter("span.trim")
+_OBS_LEASE_RELEASE = obs.counter("span.lease_release")
+_OBS_SPAN_FREE = obs.counter("span.free")
+_OBS_TAIL_TRIM = obs.counter("span.tail_trim")
 
 
 class Ralloc:
@@ -92,11 +114,22 @@ class Ralloc:
         return self.heap.mem
 
     def _persist(self, *words: int) -> None:
-        """flush(+fence) persistent fields — the paper's bold writes."""
+        """flush(+fence) persistent fields — the paper's bold writes.
+
+        One clwb per dirty *line*: adjacent descriptor fields (and the
+        descriptors of neighbouring superblocks in a span batch) share
+        cache lines, and re-flushing a line already scheduled with
+        nothing newly dirty is pure waste (persist-lint: redundant
+        flush).  Fence count is unchanged — ordering is identical."""
         if self.persist_on:
+            m = self.mem
+            seen_lines = set()
             for w in words:
-                self.mem.flush(w)
-            self.mem.fence()
+                line = w // CACHELINE_WORDS
+                if line not in seen_lines:
+                    seen_lines.add(line)
+                    m.flush(w)
+            m.fence()
 
     def _tcache(self) -> list[list[int]]:
         c = getattr(self._tls, "cache", None)
@@ -136,10 +169,16 @@ class Ralloc:
             return None
         cls = layout.size_to_class(size)
         if cls == LARGE_CLASS:
+            _OBS_LARGE.inc()
             return self._malloc_large(size)
+        _OBS_SMALL.inc()
         cache = self._tcache()[cls]
-        if not cache and not self._refill(cls):
-            return None
+        if cache:
+            _OBS_TCACHE_HIT.inc()
+        else:
+            _OBS_TCACHE_MISS.inc()
+            if not self._refill(cls):
+                return None
         return cache.pop()
 
     def free(self, ptr: int) -> None:
@@ -208,6 +247,7 @@ class Ralloc:
             n = ext if n_sbs is None else n_sbs
             if n < 1:
                 raise ValueError(f"span_acquire of an empty range ({n} sbs)")
+            _OBS_SPAN_ACQUIRE.inc()
             self.leases.ensure(sb, ext)
             return self.leases.acquire(sb, min(n, ext))
 
@@ -235,6 +275,7 @@ class Ralloc:
             if n_sbs < 1:
                 raise ValueError(
                     f"span_release of an empty range ({n_sbs} sbs)")
+            _OBS_SPAN_RELEASE.inc()
             self._release_range(sb, 0, n_sbs)
 
     def span_trim(self, ptr: int, n_keep: int,
@@ -260,6 +301,7 @@ class Ralloc:
             b = ext if n_held is None else min(n_held, ext)
             if n_keep >= b:
                 return ext
+            _OBS_SPAN_TRIM.inc()
             self._release_range(sb, n_keep, b)
             _, ext = self._span_head(ptr)
             return ext
@@ -308,6 +350,7 @@ class Ralloc:
                     f"superblock {head}")
             self.leases.ensure(head, ext)
             b = ext if b_sbs is None else min(b_sbs, ext)
+            _OBS_LEASE_RELEASE.inc()
             head_count, new_ext = self.leases.release(head, head + a_sbs,
                                                       head + b)
             if head_count == 0:
@@ -399,6 +442,7 @@ class Ralloc:
                 return None
             if m.cas(layout.M_USED_SBS, old, old + nsb):
                 self._persist(layout.M_USED_SBS)
+                _OBS_GROWTH_SBS.inc(nsb)
                 return old
 
     # --------------------------------------------------------------- refill
@@ -431,9 +475,11 @@ class Ralloc:
                     if nxt is None:
                         break
                     w = nxt
+                _OBS_REFILL_PARTIAL.inc()
                 return True
 
             # 2. free superblock (any class) — (re)initialize it for cls
+            from_expand = False
             sb = self._free_pop()
             if sb is None:
                 # 3. expand the used prefix of the superblock region.  A
@@ -445,6 +491,7 @@ class Ralloc:
                 with self._large_lock:
                     sb = self._free_pop()
                     if sb is None:
+                        from_expand = True
                         first = self._expand(self.config.expand_sbs)
                         if first is None:
                             first = self._expand(1)   # partial final expansion
@@ -469,6 +516,7 @@ class Ralloc:
             base = self.heap.sb_word(sb)
             for b in range(total):
                 cache.append(base + b * bw)
+            (_OBS_REFILL_EXPAND if from_expand else _OBS_REFILL_FREE_SB).inc()
             return True
 
     def _reserve_all(self, sb: int) -> tuple[str, tuple[int, int] | None]:
@@ -572,6 +620,7 @@ class Ralloc:
                 # edit): the stack is fully drained now, so resync the
                 # index to the drained membership and redo the search —
                 # this degenerate path is exactly the old algorithm
+                _OBS_PLACE_RESYNC.inc()
                 self._run_index.rebuild(popped)
                 first = self._run_index.best_fit(nsb)
                 if first is None:
@@ -598,6 +647,7 @@ class Ralloc:
                 first = self._expand(nsb)
                 if first is None:
                     return None
+                _OBS_PLACE_WATERMARK.inc()
         m = self.mem
         m.write(self.desc(first, D_SIZE_CLASS), LARGE_CLASS)
         m.write(self.desc(first, D_BLOCK_SIZE), size)
@@ -632,6 +682,7 @@ class Ralloc:
         if not is_suppressed("ralloc.free_large.persist"):
             self._persist(*to_persist)
         self.mem.note("span_free", head=first, nsb=nsb)
+        _OBS_SPAN_FREE.inc()
         # the span re-enters the free set as one atomic unit: a placement
         # drain interleaving between the pushes would observe a torn run
         # (a prefix of the span), claim it misaligned, and leave stranded
@@ -671,6 +722,7 @@ class Ralloc:
             self._persist(*to_persist)
         self.mem.note("tail_free", head=head, new_ext=new_ext,
                       old_ext=old_ext)
+        _OBS_TAIL_TRIM.inc()
         # the tail re-enters the free set atomically (same torn-run
         # argument as _free_large)
         with self._large_lock:
@@ -696,6 +748,28 @@ class Ralloc:
     def fence(self) -> None:
         if self.persist_on:
             self.mem.fence()
+
+    def fence_if_pending(self) -> None:
+        """The persist-boundary idiom: sfence only when a clwb has been
+        issued since the last fence.  An elided fence is free — nothing
+        is scheduled, so it would commit nothing (persist-lint counts it
+        as an ``empty fence``)."""
+        if self.persist_on and self.mem.flush_pending:
+            self.mem.fence()
+
+    def flush_ranges(self, ranges) -> None:
+        """Line-deduplicated batch flush: every cache line under any
+        ``(word, nwords)`` range is flushed exactly once.  Group-commit
+        paths flush many small records whose 40/64-byte blocks share
+        lines; per-record ``flush_range`` calls would re-issue clwb for
+        the shared lines (persist-lint: ``redundant flush``)."""
+        if not self.persist_on:
+            return
+        lines: set[int] = set()
+        for w, nwords in ranges:
+            lines.update(range(w // 8, (w + max(nwords, 1) - 1) // 8 + 1))
+        for line in sorted(lines):
+            self.mem.flush(line * 8)
 
 
 def total_blocks(r: Ralloc, sb: int) -> int:

@@ -21,6 +21,7 @@ import numpy as np
 
 from . import layout
 from . import pptr as pp
+from .. import obs
 from .layout import (ANCHOR_NIL_AVAIL, D_ANCHOR, D_BLOCK_SIZE, D_NEXT_FREE,
                      D_NEXT_PARTIAL, D_SIZE_CLASS, EMPTY, FULL, LARGE_CLASS,
                      LARGE_CONT, PARTIAL, SB_WORDS, WORD, pack_anchor,
@@ -126,9 +127,29 @@ def trace(r, span_refs: dict[int, int] | None = None
     return visited
 
 
+#: the named, timed phases every ``recover()`` run reports (in order) —
+#: pinned by the recovery-stats test so a renamed/dropped phase fails
+#: loudly instead of silently vanishing from dashboards.
+PHASES = ("prune_index", "prune_trie", "mark", "sweep", "reconstruct",
+          "retrim_index", "retrim_trie", "drain")
+
+
 def recover(r) -> dict:
-    """Full recovery: steps 3 + 5–10.  Returns stats for the caller."""
+    """Full recovery: steps 3 + 5–10.  Returns stats for the caller.
+
+    Every step runs inside a named ``obs`` span (``recovery.<phase>``,
+    names in :data:`PHASES`); the returned stats carry the same timings
+    under ``"phases"`` — ``{name: {"seconds": float, "items": int}}`` —
+    so a single recovery's profile travels with its result while the
+    registry accumulates across runs for the benchmark snapshot.
+    """
     t0 = time.perf_counter()
+    phases: dict[str, dict] = {}
+
+    def _phase(span):
+        phases[span.name.split(".", 1)[1]] = {"seconds": span.seconds,
+                                              "items": span.items}
+
     m = r.mem
     # step 2: thread caches are empty in a fresh process; for in-process
     # recovery (tests, partial-failure GC) drop them stop-the-world.
@@ -145,10 +166,13 @@ def recover(r) -> dict:
     index_slots = sorted(i for i, t in r._root_filters.items()
                          if t == "prefix_index")
     index_pruned = 0
-    if index_slots:
-        from .prefix_index import prune_torn_records
-        for slot in index_slots:
-            index_pruned += prune_torn_records(r, slot)
+    with obs.span("recovery.prune_index") as sp:
+        if index_slots:
+            from .prefix_index import prune_torn_records
+            for slot in index_slots:
+                index_pruned += prune_torn_records(r, slot)
+        sp.add(index_pruned)
+    _phase(sp)
 
     # same step for prefix-trie roots, plus the recoverability criterion:
     # children of pruned nodes are durably re-parented to a surviving
@@ -156,17 +180,25 @@ def recover(r) -> dict:
     trie_slots = sorted(i for i, t in r._root_filters.items()
                         if t == "prefix_trie")
     trie_pruned = 0
-    if trie_slots:
-        from .prefix_trie import prune_torn_nodes
-        for slot in trie_slots:
-            trie_pruned += prune_torn_nodes(r, slot)
+    with obs.span("recovery.prune_trie") as sp:
+        if trie_slots:
+            from .prefix_trie import prune_torn_nodes
+            for slot in trie_slots:
+                trie_pruned += prune_torn_nodes(r, slot)
+        sp.add(trie_pruned)
+    _phase(sp)
 
     # step 5: mark (+ span-refcount reconstruction, same pass)
     span_refs: dict[int, int] = {}
-    visited = trace(r, span_refs)
+    with obs.span("recovery.mark") as sp:
+        visited = trace(r, span_refs)
+        sp.add(len(visited))
+    _phase(sp)
     t_mark = time.perf_counter()
 
     # steps 6–9: sweep & rebuild
+    sweep_span = obs.span("recovery.sweep")
+    sweep_span.__enter__()
     used_sbs = int(m.read(layout.M_USED_SBS))
     by_sb: dict[int, list[int]] = {}
     large_heads: dict[int, int] = {}       # sb -> span length
@@ -224,6 +256,9 @@ def recover(r) -> dict:
         else:
             m.write(aw, pack_anchor(FULL, ANCHOR_NIL_AVAIL, 0, 0))
             n_full += 1
+    sweep_span.add(used_sbs)
+    sweep_span.__exit__(None, None, None)
+    _phase(sweep_span)
 
     # rebuild the transient range-lease table and free-run index exactly
     # like the paper rebuilds thread caches and Treiber stacks: each
@@ -231,10 +266,13 @@ def recover(r) -> dict:
     # span's persisted extent, the index comes from the swept free list.
     # Dead heads that the conservative scan touched are not registered —
     # only live spans carry leases.
-    r.leases.reconstruct({sb: (large_heads[sb], c)
-                          for sb, c in span_refs.items()
-                          if sb in large_heads})
-    r._run_index.rebuild(free_superblock_list(r))
+    with obs.span("recovery.reconstruct") as sp:
+        live_leases = {sb: (large_heads[sb], c)
+                       for sb, c in span_refs.items() if sb in large_heads}
+        r.leases.reconstruct(live_leases)
+        r._run_index.rebuild(free_superblock_list(r))
+        sp.add(len(live_leases))
+    _phase(sp)
 
     # precise lease re-trim (core.prefix_index): every reference above
     # came back as a conservative full-extent lease, but a durable
@@ -244,23 +282,34 @@ def recover(r) -> dict:
     # The trims write persistent records (_trim_tail) before the final
     # drain below, so the recovered image is already re-trimmed.
     index_records = index_retrims = 0
-    if index_slots:
-        from .prefix_index import retrim_after_recovery
-        for slot in index_slots:
-            n, k = retrim_after_recovery(r, slot)
-            index_records += n
-            index_retrims += k
+    with obs.span("recovery.retrim_index") as sp:
+        if index_slots:
+            from .prefix_index import retrim_after_recovery
+            for slot in index_slots:
+                n, k = retrim_after_recovery(r, slot)
+                index_records += n
+                index_retrims += k
+        sp.add(index_retrims)
+    _phase(sp)
     trie_records = trie_retrims = 0
-    if trie_slots:
-        from .prefix_trie import retrim_after_recovery as trie_retrim
-        for slot in trie_slots:
-            n, k = trie_retrim(r, slot)
-            trie_records += n
-            trie_retrims += k
+    with obs.span("recovery.retrim_trie") as sp:
+        if trie_slots:
+            from .prefix_trie import retrim_after_recovery as trie_retrim
+            for slot in trie_slots:
+                n, k = trie_retrim(r, slot)
+                trie_records += n
+                trie_retrims += k
+        sp.add(trie_retrims)
+    _phase(sp)
 
-    # step 10: write back all three regions, fence
-    m.drain()
-    m.fence()
+    # step 10: write back all three regions.  drain() IS the write-back
+    # (clean-shutdown semantics: every line durable on return); the
+    # fence that used to follow it had nothing left to order — persist-
+    # lint counts exactly that as an empty fence, and the waste gauges
+    # now gate it to zero.
+    with obs.span("recovery.drain") as sp:
+        m.drain()
+    _phase(sp)
     t_end = time.perf_counter()
     return {
         "reachable_blocks": len(visited),
@@ -280,6 +329,7 @@ def recover(r) -> dict:
         "mark_seconds": t_mark - t0,
         "sweep_seconds": t_end - t_mark,
         "total_seconds": t_end - t0,
+        "phases": phases,
     }
 
 

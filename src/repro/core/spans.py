@@ -45,6 +45,14 @@ from __future__ import annotations
 import bisect
 import threading
 
+from .. import obs
+
+# best-fit query outcomes (cached at import; see repro.obs conventions):
+# an exact-length bucket hit, a larger-run overflow fallback, or a miss
+_OBS_PLACE_EXACT = obs.counter("placement.exact_bucket")
+_OBS_PLACE_OVERFLOW = obs.counter("placement.overflow_fallback")
+_OBS_PLACE_MISS = obs.counter("placement.miss")
+
 
 class LeaseUnderflow(ValueError):
     """A range release would drop some superblock's lease count below
@@ -295,7 +303,10 @@ class FreeRunIndex:
         scan implements."""
         i = bisect.bisect_left(self._lens, nsb)
         if i == len(self._lens):
+            _OBS_PLACE_MISS.inc()
             return None
+        (_OBS_PLACE_EXACT if self._lens[i] == nsb
+         else _OBS_PLACE_OVERFLOW).inc()
         return self._by_len[self._lens[i]][0]
 
     def claim(self, start: int, nsb: int) -> None:

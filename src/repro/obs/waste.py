@@ -1,0 +1,133 @@
+"""Streaming persist-waste monitor: live redundant-flush / empty-fence
+gauges.
+
+``analysis.persist_lint.DurabilityShadow`` computes two perf
+diagnostics during test-only trace replay: **redundant flushes** (the
+line was already scheduled and nothing on it is newly dirty — a wasted
+``clwb``) and **empty fences** (no effective flush since the last fence
+— a wasted ``sfence``).  This module promotes them to live metrics: a
+:class:`WasteMonitor` plugs into the ``NVMArray.tracer`` slot and runs
+the *identical* per-line algorithm incrementally, publishing the counts
+as registry gauges, so a benchmark round and a crash-harness replay
+report the same waste numbers (asserted by the parity unit test, which
+replays one trace through both implementations).
+
+The algorithm is deliberately re-implemented rather than imported:
+``repro.obs`` stays dependency-free (``analysis`` imports ``core``;
+``core`` imports us), and two independent implementations make the
+parity test a real check instead of a tautology.  Semantics mirror the
+shadow exactly:
+
+  * a write makes its word *pending* with no flush snapshot;
+  * a flush of a line is *effective* iff some pending word on the line
+    has no snapshot or was rewritten since its snapshot (real ``clwb``
+    captures line contents at flush time); otherwise it is redundant;
+  * a fence with no effective flush since the previous fence is empty;
+    it then commits snapshots — words whose snapshot equals their
+    latest value stop being pending;
+  * drain/crash clear all pending state without counting a fence.
+
+``cas`` events are bookkeeping only (the underlying store already
+arrived as its own ``write``), and ``note`` markers don't touch the
+persist state — both ignored, exactly as ``check_trace`` does.
+
+Cost: a few dict operations per traced memory event, only while a
+monitor is attached; ``record`` early-outs on a disabled registry so
+the tracer slot can stay occupied at one branch per event.
+"""
+
+from __future__ import annotations
+
+CACHELINE_WORDS = 8                  # == core.atomics.CACHELINE_WORDS
+
+_NOFLUSH = object()                  # pending word has no flush snapshot yet
+
+__all__ = ["WasteMonitor", "CACHELINE_WORDS"]
+
+
+class WasteMonitor:
+    """Tracer-protocol object (``record(kind, addr, value, label,
+    info)``) maintaining live persist-waste diagnostics."""
+
+    __slots__ = ("writes", "flushes", "fences", "redundant_flushes",
+                 "empty_fences", "_pending", "_by_line",
+                 "_fence_has_work", "_reg")
+
+    def __init__(self, registry=None, prefix: str = "persist"):
+        self.writes = 0
+        self.flushes = 0
+        self.fences = 0
+        self.redundant_flushes = 0
+        self.empty_fences = 0
+        self._pending: dict[int, list] = {}   # addr -> [latest, snapshot]
+        self._by_line: dict[int, set[int]] = {}
+        self._fence_has_work = False
+        self._reg = registry
+        if registry is not None:
+            registry.gauge_fn(f"{prefix}.redundant_flushes",
+                              lambda: self.redundant_flushes)
+            registry.gauge_fn(f"{prefix}.empty_fences",
+                              lambda: self.empty_fences)
+            registry.gauge_fn(f"{prefix}.writes", lambda: self.writes)
+            registry.gauge_fn(f"{prefix}.flushes", lambda: self.flushes)
+            registry.gauge_fn(f"{prefix}.fences", lambda: self.fences)
+
+    # ------------------------------------------------------ tracer protocol
+    def record(self, kind, addr=None, value=None, label=None,
+               info=None) -> None:
+        if self._reg is not None and not self._reg.enabled:
+            return
+        if kind == "write":
+            self.writes += 1
+            ent = self._pending.get(addr)
+            if ent is None:
+                self._pending[addr] = [value, _NOFLUSH]
+                self._by_line.setdefault(
+                    addr // CACHELINE_WORDS, set()).add(addr)
+            else:
+                ent[0] = value
+        elif kind == "flush":
+            self.flushes += 1
+            effective = False
+            for w in self._by_line.get(addr // CACHELINE_WORDS, ()):
+                ent = self._pending[w]
+                if ent[1] is _NOFLUSH or ent[1] != ent[0]:
+                    ent[1] = ent[0]
+                    effective = True
+            if effective:
+                self._fence_has_work = True
+            else:
+                self.redundant_flushes += 1
+        elif kind == "fence":
+            self.fences += 1
+            if not self._fence_has_work:
+                self.empty_fences += 1
+            self._fence_has_work = False
+            done = []
+            for w, ent in self._pending.items():
+                if ent[1] is _NOFLUSH:
+                    continue
+                if ent[1] == ent[0]:
+                    done.append(w)
+                else:                  # rewritten since the flush snapshot
+                    ent[1] = _NOFLUSH
+            for w in done:
+                del self._pending[w]
+                line = self._by_line[w // CACHELINE_WORDS]
+                line.discard(w)
+                if not line:
+                    del self._by_line[w // CACHELINE_WORDS]
+        elif kind in ("drain", "crash"):
+            self._pending.clear()
+            self._by_line.clear()
+            self._fence_has_work = False
+        # "cas" / "note": no persist-state effect (matches check_trace)
+
+    # -------------------------------------------------------------- queries
+    @property
+    def diag(self) -> dict:
+        """The counts under ``DurabilityShadow.diag``'s key names."""
+        return {"writes": self.writes, "flushes": self.flushes,
+                "fences": self.fences,
+                "redundant_flushes": self.redundant_flushes,
+                "empty_fences": self.empty_fences}

@@ -38,6 +38,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .. import obs
 from ..core import jax_alloc as ja
 from ..core import jax_recovery as jr
 from ..core.prefix_index import hash_tokens
@@ -52,6 +53,20 @@ from .scheduler import EngineBusy, PendingPublish
 __all__ = ["ServingEngine", "Session", "EngineBusy", "PAGE_CLS"]
 
 PAGE_CLS = 0
+
+# Engine metrics (cached at import; see repro.obs conventions).
+# ``device.*`` counts invocations of the jit-compiled allocator wrappers
+# (the device-side fast path is inside the trace and unobservable from
+# the host — the host FreeRunIndex carries the per-bucket placement
+# metrics); ``engine.publish_*`` tracks the group-commit queue.
+_OBS_DEV_ALLOC = obs.counter("device.alloc_calls")
+_OBS_DEV_ALLOC_LARGE = obs.counter("device.alloc_large_calls")
+_OBS_DEV_TRIM = obs.counter("device.trim_calls")
+_OBS_SPAN_RESERVE_FAIL = obs.counter("device.span_reserve_failed")
+_OBS_PUB_QUEUED = obs.counter("engine.publish_queued")
+_OBS_PUB_FLUSHES = obs.counter("engine.publish_flushes")
+_OBS_PUB_DEPTH = obs.gauge("engine.publish_queue_depth")
+_OBS_PUB_BATCH = obs.histogram("engine.publish_batch_size")
 
 
 class ServingEngine:
@@ -281,10 +296,12 @@ class ServingEngine:
         contiguous large-object span (page ids = span offsets).  Raises
         ``MemoryError`` with the lane untouched; ``add_request`` owns
         backing the admission out."""
+        _OBS_DEV_ALLOC_LARGE.inc()
         self.astate, off = self._alloc_large(state=self.astate,
                                              nwords=jnp.int32(n_pages))
         off = int(off)
         if off < 0:
+            _OBS_SPAN_RESERVE_FAIL.inc()
             raise MemoryError(
                 f"KV arena cannot reserve a contiguous {n_pages}-page span")
         self.large_spans[lane] = (off, n_pages)
@@ -306,6 +323,7 @@ class ServingEngine:
         assert 0 < n <= self.publish_capacity
         need = np.zeros((self.lanes + self.publish_capacity,), bool)
         need[self.lanes:self.lanes + n] = True
+        _OBS_DEV_ALLOC.inc()
         self.astate, offs = self._alloc(state=self.astate,
                                         need=jnp.asarray(need))
         return [int(o) for o in
@@ -512,6 +530,8 @@ class ServingEngine:
                 key=key, span=off, n_pages=full, span_pages=n_span,
                 next_tok=next_tok, lease_sbs=lease_sbs,
                 start_page=k, parent_key=node.parent, fprint=node.fprint))
+            _OBS_PUB_QUEUED.inc()
+            _OBS_PUB_DEPTH.set(len(self._publish_queue))
             return True
         bt = np.asarray(self.dstate["block_table"][lane])
         if pos != full * page:
@@ -545,6 +565,8 @@ class ServingEngine:
         while self._publish_queue:
             batch = self._publish_queue[:self.publish_capacity]
             del self._publish_queue[:len(batch)]
+            _OBS_PUB_FLUSHES.inc()
+            _OBS_PUB_BATCH.observe(len(batch))
             recs = self._alloc_blocks(len(batch))
             rec_of: dict[int, int] = {}     # key -> record landed this batch
             payloads = []
@@ -574,6 +596,7 @@ class ServingEngine:
                 for q in payloads:
                     self.prefix_cache.set_rec(q["key"], q["rec_off"])
                 appended += len(payloads)
+        _OBS_PUB_DEPTH.set(0)
         return appended
 
     @property
@@ -649,6 +672,7 @@ class ServingEngine:
             slot = np.clip(pos // page, 0, bt_now.shape[1] - 1)
             need &= bt_now[np.arange(self.lanes), slot] < 0
         if need.any():
+            _OBS_DEV_ALLOC.inc()
             self.astate, offs = self._alloc(state=self.astate,
                                             need=jnp.asarray(need))
             offs = np.asarray(offs)
@@ -788,10 +812,21 @@ class ServingEngine:
         superblock count, so the decode-ahead tail frees immediately
         after recovery instead of waiting for the reserver to
         re-finish."""
+        # Named engine-recovery phases (repro.obs spans): timings + item
+        # counts surface in the returned stats and the metrics snapshot,
+        # mirroring core.recovery's host-side phase profile.
+        phases: dict[str, dict] = {}
+
+        def _phase(span):
+            phases[span.name.split(".", 1)[1]] = {
+                "seconds": span.seconds, "items": span.items}
+
         # torn / unrecoverable-orphan pre-prune, BEFORE the mark pass
         # (host ordering: prune_torn_nodes runs before recover's trace).
         # A torn record's span reference would otherwise phantom-lease
         # the span, and its marked block would leak as owned-by-nobody.
+        prune_span = obs.span("engine_recovery.prune_records")
+        prune_span.__enter__()
         recs0 = self.prefix_store.walk()
         trie_pruned = 0
         if recs0:
@@ -829,21 +864,31 @@ class ServingEngine:
                               and by_off[o].n_pages == r.start_page), None)
                 self.prefix_store.reparent(
                     r.off, cover if cover is not None else -1)
-        persistent = ja.persistent_snapshot(self.astate)
-        roots = np.full((self.lanes + self.prefix_buckets,), -1, np.int32)
-        bt = np.asarray(self.dstate["block_table"])
-        for lane, s in self.sessions.items():
-            pages = bt[lane][bt[lane] >= 0]
-            if pages.size:
-                roots[lane] = int(pages[0])
-        for b, head in enumerate(self.prefix_store.heads):
-            roots[self._index_root + b] = head
-        persistent["roots"] = jnp.asarray(roots)
-        new_state, marked = jr.recover(self.acfg, persistent,
-                                       jnp.asarray(self.ref_table()))
-        live_before = ja.live_blocks(self.astate, self.acfg)[PAGE_CLS]
-        self.astate = new_state
-        live_after = ja.live_blocks(new_state, self.acfg)[PAGE_CLS]
+        prune_span.add(trie_pruned)
+        prune_span.__exit__(None, None, None)
+        _phase(prune_span)
+        with obs.span("engine_recovery.snapshot") as sp:
+            persistent = ja.persistent_snapshot(self.astate)
+            roots = np.full((self.lanes + self.prefix_buckets,), -1,
+                            np.int32)
+            bt = np.asarray(self.dstate["block_table"])
+            for lane, s in self.sessions.items():
+                pages = bt[lane][bt[lane] >= 0]
+                if pages.size:
+                    roots[lane] = int(pages[0])
+            for b, head in enumerate(self.prefix_store.heads):
+                roots[self._index_root + b] = head
+            persistent["roots"] = jnp.asarray(roots)
+            sp.add(int((roots >= 0).sum()))
+        _phase(sp)
+        with obs.span("engine_recovery.mark_sweep") as sp:
+            new_state, marked = jr.recover(self.acfg, persistent,
+                                           jnp.asarray(self.ref_table()))
+            live_before = ja.live_blocks(self.astate, self.acfg)[PAGE_CLS]
+            self.astate = new_state
+            live_after = ja.live_blocks(new_state, self.acfg)[PAGE_CLS]
+            sp.add(int(np.asarray(marked).sum()))
+        _phase(sp)
         # drop + recount the engine's transient sharing records (recovery
         # step 2: caches start empty in a fresh process).  Span-backed
         # pages are excluded: their sharing is the *span's* refcount
@@ -852,63 +897,80 @@ class ServingEngine:
         # and poison the offset after the span frees and is reallocated.
         # (Exact token sequences die with the cache: re-published entries
         # are named by the record's hash alone.)
-        self.prefix_cache.clear()
-        # queued-but-unflushed appends die with the process too: they
-        # never became durable, no lease reconstruction references them,
-        # and their cache entries were just cleared — dropping the queue
-        # IS the crash semantics for an un-flushed group commit
-        self._publish_queue.clear()
-        spans = list(self.large_spans.values()) + \
-            [(off, n_backed) for off, n_backed, _ in
-             self.shared_spans.values()]
-        counts: dict[int, int] = {}
-        for lane, s in self.sessions.items():
-            if s.done:
-                continue
-            for p in bt[lane][bt[lane] >= 0].tolist():
-                if any(off <= p < off + n for off, n in spans):
+        with obs.span("engine_recovery.recount_refs") as sp:
+            self.prefix_cache.clear()
+            # queued-but-unflushed appends die with the process too: they
+            # never became durable, no lease reconstruction references
+            # them, and their cache entries were just cleared — dropping
+            # the queue IS the crash semantics for an un-flushed group
+            # commit
+            self._publish_queue.clear()
+            spans = list(self.large_spans.values()) + \
+                [(off, n_backed) for off, n_backed, _ in
+                 self.shared_spans.values()]
+            counts: dict[int, int] = {}
+            for lane, s in self.sessions.items():
+                if s.done:
                     continue
-                counts[p] = counts.get(p, 0) + 1
-        self.page_refs = {p: c for p, c in counts.items() if c > 1}
+                for p in bt[lane][bt[lane] >= 0].tolist():
+                    if any(off <= p < off + n for off, n in spans):
+                        continue
+                    counts[p] = counts.get(p, 0) + 1
+            self.page_refs = {p: c for p, c in counts.items() if c > 1}
+            sp.add(len(self.page_refs))
+        _phase(sp)
         # re-publish surviving index records into the rebuilt cache and
         # re-trim each record's reconstructed full-extent lease to its
         # recorded superblock count (a record whose root swing never
         # became durable is unmarked — pruned, exactly like the host GC
         # frees an unreachable core.prefix_index record)
-        recs = self.prefix_store.walk()
-        seal_ok = np.asarray([self.prefix_store.seal_matches(r.off)
-                              for r in recs] + [True], bool)
-        live = jr.live_record_mask(self.acfg, marked,
-                                   np.asarray([r.off for r in recs]
-                                              + [-1], np.int32),
-                                   seal_ok=jnp.asarray(seal_ok))
-        survivors = self.prefix_store.prune(np.asarray(live)[:len(recs)])
-        page = self.cfg.page_size
-        for rec in survivors:
-            # a fully-processed prompt page p holds positions
-            # p*page .. p*page+page-1 — kv_pos rebuilds deterministically
-            kvp = np.arange(rec.n_pages * page,
-                            dtype=np.int32).reshape(rec.n_pages, page)
-            self._prefix_cache[rec.key] = (
-                "span", rec.span, rec.span_pages, rec.n_pages,
-                rec.n_pages * page, kvp, rec.next_tok, rec.lease_sbs)
-            self.astate, _ = self._trim_large(
-                state=self.astate, off=jnp.int32(rec.span),
-                n_keep=jnp.int32(rec.lease_sbs), n_held=jnp.int32(-1))
-        self._mirror_index_roots()
-        # rebuild the trie shape from the surviving records (token-less
-        # nodes: they match all-or-nothing, key + fingerprint) so
-        # longest-prefix partial hits work immediately after recovery
-        self.prefix_cache.rebuild_from_records(survivors)
+        with obs.span("engine_recovery.republish") as sp:
+            recs = self.prefix_store.walk()
+            seal_ok = np.asarray([self.prefix_store.seal_matches(r.off)
+                                  for r in recs] + [True], bool)
+            live = jr.live_record_mask(self.acfg, marked,
+                                       np.asarray([r.off for r in recs]
+                                                  + [-1], np.int32),
+                                       seal_ok=jnp.asarray(seal_ok))
+            survivors = self.prefix_store.prune(
+                np.asarray(live)[:len(recs)])
+            page = self.cfg.page_size
+            for rec in survivors:
+                # a fully-processed prompt page p holds positions
+                # p*page .. p*page+page-1 — kv_pos rebuilds
+                # deterministically
+                kvp = np.arange(rec.n_pages * page,
+                                dtype=np.int32).reshape(rec.n_pages, page)
+                self._prefix_cache[rec.key] = (
+                    "span", rec.span, rec.span_pages, rec.n_pages,
+                    rec.n_pages * page, kvp, rec.next_tok, rec.lease_sbs)
+                _OBS_DEV_TRIM.inc()
+                self.astate, _ = self._trim_large(
+                    state=self.astate, off=jnp.int32(rec.span),
+                    n_keep=jnp.int32(rec.lease_sbs), n_held=jnp.int32(-1))
+            self._mirror_index_roots()
+            # rebuild the trie shape from the surviving records
+            # (token-less nodes: they match all-or-nothing, key +
+            # fingerprint) so longest-prefix partial hits work
+            # immediately after recovery
+            self.prefix_cache.rebuild_from_records(survivors)
+            sp.add(len(survivors))
+        _phase(sp)
         # live sharers' prefix leases were also rebuilt full-extent;
         # their true lengths survive in shared_spans — re-trim them too,
         # so the post-recovery lease vector equals the pre-crash one
-        for lane, (off, _n_backed, lease_sbs) in self.shared_spans.items():
-            if lane in self.sessions and not self.sessions[lane].done:
-                self.astate, _ = self._trim_large(
-                    state=self.astate, off=jnp.int32(off),
-                    n_keep=jnp.int32(lease_sbs), n_held=jnp.int32(-1))
+        with obs.span("engine_recovery.retrim_shared") as sp:
+            for lane, (off, _n_backed,
+                       lease_sbs) in self.shared_spans.items():
+                if lane in self.sessions and not self.sessions[lane].done:
+                    _OBS_DEV_TRIM.inc()
+                    self.astate, _ = self._trim_large(
+                        state=self.astate, off=jnp.int32(off),
+                        n_keep=jnp.int32(lease_sbs), n_held=jnp.int32(-1))
+                    sp.add(1)
+        _phase(sp)
         return {"marked": int(np.asarray(marked).sum()),
                 "live_before": live_before, "live_after": live_after,
                 "index_records": len(survivors),
-                "trie_pruned": trie_pruned}
+                "trie_pruned": trie_pruned,
+                "phases": phases}

@@ -36,10 +36,20 @@ from __future__ import annotations
 
 import dataclasses
 
+from .. import obs
 from ..core.prefix_index import hash_tokens
 from ..core.prefix_trie import fingerprint, page_hashes
 
 _M32 = 0xFFFFFFFF
+
+# Prefix-cache metrics (cached at import; see repro.obs conventions).
+# ``trie.hit_depth_pages`` is the distribution of matched whole pages on
+# partial hits — the depth a request actually leases.
+_OBS_EXACT_HIT = obs.counter("trie.exact_hit")
+_OBS_EXACT_MISS = obs.counter("trie.exact_miss")
+_OBS_PARTIAL_HIT = obs.counter("trie.partial_hit")
+_OBS_PARTIAL_MISS = obs.counter("trie.partial_miss")
+_OBS_HIT_DEPTH = obs.histogram("trie.hit_depth_pages")
 
 
 @dataclasses.dataclass
@@ -78,13 +88,20 @@ class PrefixTrieCache:
         key = hash_tokens(prompt)
         hit = self.entries.get(key)
         if hit is None:
+            _OBS_EXACT_MISS.inc()
             return None
         known = self.tokens.get(key)
         if known is not None:
-            return hit if known == tuple(prompt) else None
+            if known != tuple(prompt):
+                _OBS_EXACT_MISS.inc()
+                return None
+            _OBS_EXACT_HIT.inc()
+            return hit
         node = self.nodes.get(key)
         if node is not None and not self._fp_ok(node, prompt):
+            _OBS_EXACT_MISS.inc()
             return None
+        _OBS_EXACT_HIT.inc()
         return hit
 
     def insert(self, key: int, entry: tuple, tokens=None) -> None:
@@ -118,6 +135,7 @@ class PrefixTrieCache:
         prompt = tuple(int(t) for t in prompt)
         n = len(prompt) // self.page
         if n == 0:
+            _OBS_PARTIAL_MISS.inc()
             return None, 0
         hs = page_hashes(prompt, self.page)
         best: CacheNode | None = None
@@ -141,6 +159,8 @@ class PrefixTrieCache:
                     if prompt[a:b] != c.tokens[a:b]:
                         continue          # page-hash collision reads as miss
                     if i < edge:
+                        _OBS_PARTIAL_HIT.inc()
+                        _OBS_HIT_DEPTH.observe(depth + i)
                         return c, depth + i
                     best, depth, stepped = c, depth + i, True
                     break
@@ -151,6 +171,11 @@ class PrefixTrieCache:
             if not stepped:
                 break
             child_keys = best.children
+        if best is None:
+            _OBS_PARTIAL_MISS.inc()
+        else:
+            _OBS_PARTIAL_HIT.inc()
+            _OBS_HIT_DEPTH.observe(depth)
         return best, depth
 
     def deepest_boundary(self, node: CacheNode | None, k: int

@@ -24,13 +24,25 @@ serving loop:
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import deque
+
+from .. import obs
 
 
 class EngineBusy(RuntimeError):
     """Admission failed: every lane is busy (and, from ``submit``, the
     wait queue is full).  Typed so callers can shed load or retry
     instead of pattern-matching a bare ``IndexError``."""
+
+
+# Serving-path metrics (cached at import; see repro.obs conventions).
+_OBS_REJECTS = obs.counter("sched.rejects")
+_OBS_PARK_RETRY = obs.counter("sched.park_retries")
+_OBS_QUEUE_DEPTH = obs.gauge("sched.queue_depth")
+_OBS_QUEUE_DEPTH_H = obs.histogram("sched.queue_depth_at_submit")
+_OBS_TTFT = obs.histogram("serve.ttft_seconds")
+_OBS_LATENCY = obs.histogram("serve.latency_seconds")
 
 
 @dataclasses.dataclass
@@ -68,6 +80,8 @@ class Request:
     publish: bool
     lane: int | None = None
     session: object = None
+    t_submit: float = 0.0        # perf_counter at submit (latency metrics)
+    t_first: float | None = None  # perf_counter at first emitted token
 
 
 class Scheduler:
@@ -99,13 +113,16 @@ class Scheduler:
         rid = self._next_rid
         self._next_rid += 1
         req = Request(rid, list(prompt), share_prefix, max_new_tokens,
-                      publish)
+                      publish, t_submit=time.perf_counter())
         if not self._admit(req):
             if len(self.waiting) >= self.max_waiting:
+                _OBS_REJECTS.inc()
                 raise EngineBusy(
                     f"all {self.engine.lanes} lanes busy and the wait "
                     f"queue is full ({self.max_waiting})")
             self.waiting.append(req)
+        _OBS_QUEUE_DEPTH.set(len(self.waiting))
+        _OBS_QUEUE_DEPTH_H.observe(len(self.waiting))
         return rid
 
     def _admit(self, req: Request) -> bool:
@@ -123,6 +140,7 @@ class Scheduler:
             # unless nothing is running, in which case it can never fit.
             if not self.active:
                 raise
+            _OBS_PARK_RETRY.inc()
             return False
         req.session = eng.sessions[req.lane]
         self.active[req.lane] = req
@@ -147,6 +165,9 @@ class Scheduler:
         for lane, req in list(self.active.items()):
             if lane in emitted:
                 out[req.rid] = emitted[lane]
+                if req.t_first is None:
+                    req.t_first = time.perf_counter()
+                    _OBS_TTFT.observe(req.t_first - req.t_submit)
             sess = eng.sessions.get(lane)
             if sess is None or sess.done:
                 self._complete(lane, req)        # engine auto-finished it
@@ -166,6 +187,8 @@ class Scheduler:
     def _complete(self, lane: int, req: Request) -> None:
         del self.active[lane]
         self.results[req.rid] = list(req.session.tokens)
+        _OBS_LATENCY.observe(time.perf_counter() - req.t_submit)
+        _OBS_QUEUE_DEPTH.set(len(self.waiting))
 
     def drain(self, max_steps: int = 100_000) -> dict[int, list]:
         """Step until every submitted request completes, then flush any

@@ -198,7 +198,10 @@ def test_batch_publish_fences_amortized():
                 idx.publish(*it)
         return r.mem.n_fence - before
     single, batch = publish_fences(False), publish_fences(True)
-    assert single >= 4 * 3                    # ≥4 fences per strict publish
+    # ≥3 fences per strict publish (fields, seal, swing; the content
+    # boundary fence elides here — nothing was flushed since the span
+    # allocs fenced, so it would commit nothing)
+    assert single >= 3 * 3
     assert batch <= 3 + 1                     # shared fences + root swing
     assert batch * 2 < single
 

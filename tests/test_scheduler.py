@@ -22,6 +22,7 @@ import jax
 import numpy as np
 import pytest
 
+from repro import obs
 from repro.configs import get_smoke_config
 from repro.core import jax_alloc as ja
 from repro.core.prefix_index import hash_tokens
@@ -150,6 +151,10 @@ def test_scheduler_group_commit_publish_flow(mesh):
 # ---------------------------------------------------------------------------
 def test_queue_publish_batches_behind_one_flush(mesh):
     eng = _engine(mesh, lanes=3, max_seq=64, pages_per_sb=2)
+    # publish-queue observability rides the same scenario: counters
+    # reset by name (typos raise), then asserted against the flow below
+    obs.reset("engine.publish_queued", "engine.publish_flushes",
+              "engine.publish_batch_size", "engine.publish_queue_depth")
     p1, p2 = _prompt(4, 24), _prompt(5, 24)
     a = eng.add_request(p1, share_prefix=True)
     c = eng.add_request(p2, share_prefix=True)
@@ -159,6 +164,11 @@ def test_queue_publish_batches_behind_one_flush(mesh):
     # nothing durable yet: both appends are parked in the queue …
     assert eng.pending_publishes == 2
     assert eng.prefix_store.walk() == []
+    # … and the metrics see exactly that: two queued, depth 2, no flush
+    snap = obs.snapshot()
+    assert snap["counters"]["engine.publish_queued"] == 2
+    assert snap["counters"]["engine.publish_flushes"] == 0
+    assert snap["gauges"]["engine.publish_queue_depth"] == 2
     # … but the transient half is live — a sharer hits BEFORE the flush
     b = eng.add_request(p1, share_prefix=True)
     assert b in eng.shared_spans
@@ -166,6 +176,11 @@ def test_queue_publish_batches_behind_one_flush(mesh):
     # one flush lands both records as one chain segment
     assert eng.flush_publishes() == 2
     assert eng.pending_publishes == 0
+    snap = obs.snapshot()
+    assert snap["counters"]["engine.publish_flushes"] == 1
+    assert snap["gauges"]["engine.publish_queue_depth"] == 0
+    batch = snap["histograms"]["engine.publish_batch_size"]
+    assert batch["count"] == 1 and batch["max"] == 2
     recs = eng.prefix_store.walk()
     assert {r.key for r in recs} == {hash_tokens(p1), hash_tokens(p2)}
     assert len({r.off for r in recs}) == 2

@@ -1,0 +1,123 @@
+#!/usr/bin/env python
+"""Render per-round metrics snapshots from a smoke artifact.
+
+    python tools/dump_metrics.py out/smoke.json
+    python tools/dump_metrics.py out/smoke.json --round sharedprompt_recover
+    python tools/dump_metrics.py out/smoke.json --trace out/trace.json
+
+Accepts either the smoke results file (rows carrying a ``metrics``
+snapshot, what ``benchmarks.run --profile smoke --json`` writes) or its
+``<stem>-metrics.json`` sibling (per-round snapshots + Chrome-trace span
+events).  ``--trace`` merges every round's span events into ONE
+Chrome-``traceEvents`` JSON loadable in chrome://tracing / Perfetto —
+the sibling file is required for that (the results file has no events).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+
+def _load_rounds(path: str) -> tuple[list[dict], bool]:
+    """Normalize either artifact shape to ``[{workload, kind, snapshot,
+    traceEvents?}]``; second element says whether events are present."""
+    with open(path) as f:
+        data = json.load(f)
+    if "rounds" in data:                         # the -metrics sibling
+        return data["rounds"], True
+    rounds = [{"workload": r["workload"], "kind": r["kind"],
+               "snapshot": r["metrics"]}
+              for r in data.get("results", []) if r.get("metrics")]
+    # the results file has no span events; offer the sibling if it exists
+    stem, ext = os.path.splitext(path)
+    sib = f"{stem}-metrics{ext or '.json'}"
+    if os.path.exists(sib):
+        return _load_rounds(sib)
+    return rounds, False
+
+
+def _fmt_val(v) -> str:
+    if isinstance(v, float):
+        return f"{v:.6g}"
+    return str(v)
+
+
+def render_round(rnd: dict, *, nonzero_only: bool = True) -> str:
+    snap = rnd["snapshot"]
+    lines = [f"== {rnd['workload']} [{rnd['kind']}] =="]
+    counters = {n: v for n, v in sorted(snap.get("counters", {}).items())
+                if v or not nonzero_only}
+    if counters:
+        lines.append("  counters:")
+        lines += [f"    {n:<36} {v}" for n, v in counters.items()]
+    gauges = {n: v for n, v in sorted(snap.get("gauges", {}).items())
+              if v or not nonzero_only}
+    if gauges:
+        lines.append("  gauges:")
+        lines += [f"    {n:<36} {_fmt_val(v)}" for n, v in gauges.items()]
+    hists = snap.get("histograms", {})
+    if hists:
+        lines.append("  histograms:")
+        for n, h in sorted(hists.items()):
+            lines.append(
+                f"    {n:<36} n={h['count']} mean={_fmt_val(h['mean'])} "
+                f"p50={_fmt_val(h['p50'])} p90={_fmt_val(h['p90'])} "
+                f"p99={_fmt_val(h['p99'])} max={_fmt_val(h['max'])}")
+    phases = snap.get("phases", {})
+    if phases:
+        lines.append("  phases:")
+        for n, p in sorted(phases.items()):
+            lines.append(
+                f"    {n:<36} {p['seconds'] * 1e3:8.3f} ms  "
+                f"items={p['items']} calls={p['calls']}")
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="dump_metrics", description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("path", help="smoke JSON (or its -metrics sibling)")
+    ap.add_argument("--round", default=None, metavar="NAME",
+                    help="only rounds whose workload contains NAME")
+    ap.add_argument("--all", action="store_true",
+                    help="include zero-valued counters/gauges")
+    ap.add_argument("--trace", default=None, metavar="OUT",
+                    help="write merged Chrome traceEvents JSON to OUT")
+    args = ap.parse_args(argv)
+    rounds, have_events = _load_rounds(args.path)
+    if args.round:
+        rounds = [r for r in rounds if args.round in r["workload"]]
+    if not rounds:
+        print("no rounds with metrics snapshots found", file=sys.stderr)
+        return 1
+    for rnd in rounds:
+        print(render_round(rnd, nonzero_only=not args.all))
+        print()
+    if args.trace:
+        if not have_events:
+            print("no span events in this artifact (need the "
+                  "<stem>-metrics.json sibling)", file=sys.stderr)
+            return 1
+        events = []
+        for i, rnd in enumerate(rounds):
+            for ev in rnd.get("traceEvents", []):
+                # one pid per round so rounds stack as separate
+                # process tracks in the viewer
+                ev = dict(ev, pid=i)
+                events.append(ev)
+        with open(args.trace, "w") as f:
+            json.dump({"traceEvents": events, "displayTimeUnit": "ms",
+                       "otherData": {"rounds": [
+                           f"{r['workload']}[{r['kind']}]"
+                           for r in rounds]}}, f)
+        print(f"# chrome trace ({len(events)} events) written to "
+              f"{args.trace}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
